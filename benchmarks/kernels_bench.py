@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: jit'd oracle paths (CPU wall-time) + interpret-mode
+correctness spot checks.  On TPU the pallas impls replace the oracles."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rwkv6_wkv.ops import wkv
+from repro.kernels.spec_verify.ops import spec_verify
+
+from .common import emit
+
+
+def _time(fn, *args, iters=20, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    B, T = 64, 1024
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    lp_c = jax.random.normal(ks[0], (B, T)) - 1
+    lp_p = jax.random.normal(ks[1], (B, T)) - 1
+    u = jax.random.uniform(ks[2], (B, T))
+    vl = jax.random.randint(ks[3], (B,), 0, T).astype(jnp.int32)
+    us = _time(spec_verify, lp_c, lp_p, u, vl, 0.5, impl="ref")
+    emit("kernels/spec_verify_ref", us, f"B={B};T={T}")
+    got = spec_verify(lp_c[:4, :256], lp_p[:4, :256], u[:4, :256],
+                      jnp.minimum(vl[:4], 256), 0.5, impl="interpret")
+    want = spec_verify(lp_c[:4, :256], lp_p[:4, :256], u[:4, :256],
+                       jnp.minimum(vl[:4], 256), 0.5, impl="ref")
+    assert (np.asarray(got) == np.asarray(want)).all()
+    emit("kernels/spec_verify_interpret_check", 0.0, "allclose=True")
+
+    q = jax.random.normal(ks[0], (2, 8, 256, 64))
+    k = jax.random.normal(ks[1], (2, 2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 2, 256, 64))
+    pos = jnp.broadcast_to(jnp.arange(256, dtype=jnp.int32), (2, 256))
+    us = _time(flash_attention, q, k, v, pos, pos, impl="ref", iters=5)
+    emit("kernels/flash_attention_ref", us, "B2H8T256D64;gqa4x")
+
+    r = jax.random.normal(ks[0], (2, 256, 4, 32))
+    kk = jax.random.normal(ks[1], (2, 256, 4, 32))
+    vv = jax.random.normal(ks[2], (2, 256, 4, 32))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (2, 256, 4, 32)))
+    uu = jax.random.normal(ks[0], (4, 32))
+    s0 = jnp.zeros((2, 4, 32, 32))
+    us = _time(wkv, r, kk, vv, w, uu, s0, impl="ref", iters=5)
+    emit("kernels/rwkv6_wkv_ref", us, "B2T256H4hd32")
+
+
+if __name__ == "__main__":
+    run()

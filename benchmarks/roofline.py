@@ -1,0 +1,150 @@
+"""Roofline analysis (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs.  Emits the CSV rows and writes
+``experiments/roofline.md`` (the §Roofline table)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import INPUT_SHAPES
+
+try:
+    from .common import emit
+except ImportError:                      # direct module execution
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+
+def active_params(arch: str) -> float:
+    """N (dense) or N_active (MoE: shared + top-k routed + attn/norm)."""
+    cfg = get_config(arch)
+    from repro.models import model as M
+    struct = jax.eval_shape(lambda: M.init_lm(jax.random.PRNGKey(0), cfg))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(struct))
+    if not cfg.num_experts:
+        return float(total)
+    # subtract inactive routed experts
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    ff, d = cfg.resolved_moe_d_ff, cfg.d_model
+    n_moe_layers = sum(1 for _, moe in cfg.layer_plan() if moe)
+    per_expert = 3 * d * ff
+    inactive = n_moe_layers * (E - k) * per_expert
+    return float(total - inactive)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    info = INPUT_SHAPES[shape_name]
+    D = info["seq_len"] * info["global_batch"] if info["kind"] != "decode" \
+        else info["global_batch"]
+    n = active_params(arch)
+    mult = 6.0 if info["kind"] == "train" else 2.0   # fwd-only for serving
+    return mult * n * D
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    return max(terms, key=terms.get)
+
+
+def load_results(mesh: str = "pod", tag: Optional[str] = None) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh:
+            continue
+        if tag is not None and r.get("tag", "baseline") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def roofline_row(r: Dict) -> Optional[Dict]:
+    if r.get("status") != "ok":
+        return None
+    chips = r["num_devices"]
+    flops_dev = r["dot_flops_per_device"]
+    bytes_dev = r.get("hlo_bytes_per_device", r["xla_bytes_per_device"])
+    coll_dev = r["collective_bytes_total_per_device"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    mf = model_flops(r["arch"], r["shape"])
+    hlo_total = flops_dev * chips
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "tag": r.get("tag", "baseline"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant(terms),
+        "model_flops": mf, "hlo_flops": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "hbm_gib": r.get("hbm_gib_per_device", 0.0),
+        "fits_hbm": r.get("hbm_gib_per_device", 0.0) <= 16.0,
+    }
+
+
+def run(mesh: str = "pod", tag: str = "baseline") -> List[Dict]:
+    rows = []
+    for r in load_results(mesh, tag):
+        row = roofline_row(r)
+        if row is None:
+            continue
+        rows.append(row)
+        emit(f"roofline/{row['arch']}/{row['shape']}",
+             max(row["t_compute_s"], row["t_memory_s"],
+                 row["t_collective_s"]) * 1e6,
+             f"compute={row['t_compute_s']:.3e}s;"
+             f"memory={row['t_memory_s']:.3e}s;"
+             f"collective={row['t_collective_s']:.3e}s;"
+             f"dominant={row['dominant']};"
+             f"useful={row['useful_ratio']:.2f};"
+             f"hbm={row['hbm_gib']:.1f}GiB")
+    if tag == "baseline":
+        write_md(rows)
+    return rows
+
+
+def write_md(rows: List[Dict]) -> None:
+    lines = [
+        "# Roofline (single-pod 16x16 = 256 chips, TPU v5e: "
+        "197 TF bf16 / 819 GB/s HBM / 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | HBM GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} |")
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "pod")

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+SUITES = ["table1", "table2", "table3", "table4", "fig2", "fig5", "fig6",
+          "kernels", "roofline"]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of: " + ",".join(SUITES))
+    args = p.parse_args()
+    selected = args.only.split(",") if args.only else SUITES
+
+    from . import (fig2_overlap, fig5_diagnostics, fig6_diversity,
+                   kernels_bench, roofline, table1_main, table2_variants,
+                   table3_lenience, table4_breakdown)
+    mods = {
+        "table1": table1_main, "table2": table2_variants,
+        "table3": table3_lenience, "table4": table4_breakdown,
+        "fig2": fig2_overlap, "fig5": fig5_diagnostics,
+        "fig6": fig6_diversity, "kernels": kernels_bench,
+        "roofline": roofline,
+    }
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        mod = mods[name]
+        print(f"# --- {name} ({mod.__doc__.splitlines()[0].strip()})",
+              flush=True)
+        mod.run()
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 1: rollout efficiency (generated tokens, speedup) and reward
+across GRPO / PPO / DAPO, vanilla vs +SPEC-RL."""
+from __future__ import annotations
+
+from .common import emit, make_trainer, run_steps
+
+STEPS = 5
+
+
+def run() -> None:
+    for algo in ("grpo", "ppo", "dapo"):
+        base = run_steps(make_trainer(algo, "off", seed=3), STEPS)
+        spec = run_steps(make_trainer(algo, "spec", seed=3), STEPS)
+        speed_tok = base["tokens"] / max(spec["tokens"], 1)
+        speed_wall = base["rollout_s"] / max(spec["rollout_s"], 1e-9)
+        emit(f"table1/{algo}/vanilla",
+             base["rollout_s"] / STEPS * 1e6,
+             f"tokens={base['tokens']};reward={base['reward_last']:.3f};"
+             f"speedup=1.00x")
+        emit(f"table1/{algo}/spec_rl",
+             spec["rollout_s"] / STEPS * 1e6,
+             f"tokens={spec['tokens']};reward={spec['reward_last']:.3f};"
+             f"token_speedup={speed_tok:.2f}x;wall_speedup={speed_wall:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Table 2: SPEC-RL vs Random Reuse vs Delayed Reuse (GRPO)."""
+from __future__ import annotations
+
+from .common import emit, make_trainer, run_steps
+
+STEPS = 5
+
+
+def run() -> None:
+    base = run_steps(make_trainer("grpo", "off", seed=5), STEPS)
+    for variant in ("spec", "random", "delayed", "full"):
+        r = run_steps(make_trainer("grpo", variant, seed=5), STEPS)
+        speed = base["tokens"] / max(r["tokens"], 1)
+        emit(f"table2/{variant}", r["rollout_s"] / STEPS * 1e6,
+             f"tokens={r['tokens']};token_speedup={speed:.2f}x;"
+             f"reward={r['reward_last']:.3f};prefix={r['prefix_mean']:.1f}")
+    emit("table2/vanilla", base["rollout_s"] / STEPS * 1e6,
+         f"tokens={base['tokens']};token_speedup=1.00x;"
+         f"reward={base['reward_last']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

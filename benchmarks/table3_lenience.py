@@ -1,0 +1,31 @@
+"""Paper Table 3 / Fig. 4: lenience ablation — speedup rises monotonically
+with lenience; l=1 is vanilla speculative decoding, l=inf is full reuse."""
+from __future__ import annotations
+
+import math
+
+from .common import emit, make_trainer, run_steps
+
+STEPS = 5
+LENIENCES = [("l=1", 1.0), ("l=e0.2", math.e ** 0.2),
+             ("l=e0.5", math.e ** 0.5), ("l=e0.8", math.e ** 0.8),
+             ("l=e2.0", math.e ** 2.0), ("l=inf", float("inf"))]
+
+
+def run() -> None:
+    base = run_steps(make_trainer("grpo", "off", seed=7), STEPS)
+    emit("table3/vanilla", base["rollout_s"] / STEPS * 1e6,
+         f"tokens={base['tokens']};speedup=1.00x")
+    prev_tokens = None
+    for name, l in LENIENCES:
+        variant = "full" if math.isinf(l) else "spec"
+        r = run_steps(make_trainer("grpo", variant, lenience=l, seed=7), STEPS)
+        speed = base["tokens"] / max(r["tokens"], 1)
+        emit(f"table3/{name}", r["rollout_s"] / STEPS * 1e6,
+             f"tokens={r['tokens']};token_speedup={speed:.2f}x;"
+             f"reward={r['reward_last']:.3f};prefix={r['prefix_mean']:.1f};"
+             f"full_reuse={r['full_reuse']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

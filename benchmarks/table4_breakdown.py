@@ -1,0 +1,32 @@
+"""Paper Table 4: per-stage time breakdown — verification + assembly overhead
+vs rollout savings (verl stage order)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, make_trainer
+
+STEPS = 5
+STAGES = ["verify_time", "rollout_time", "assembly_time", "reward_time",
+          "old_logprob_time", "ref_time", "values_time", "adv_time",
+          "update_critic_time", "update_actor_time"]
+
+
+def run() -> None:
+    for label, variant in (("vanilla", "off"), ("spec_rl", "spec")):
+        tr = make_trainer("grpo", variant, seed=9)
+        for _ in range(STEPS):
+            tr.train_step()
+        h = tr.history[1:]          # skip compile-heavy first step
+        parts = []
+        total = 0.0
+        for s in STAGES:
+            v = float(np.mean([x.get(s, 0.0) for x in h]))
+            total += v
+            if v > 0:
+                parts.append(f"{s.replace('_time','')}={v*1e3:.1f}ms")
+        emit(f"table4/{label}", total * 1e6, ";".join(parts))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Pytree checkpointing: npz arrays + json tree structure (no orbax here).
+
+Saves/restores arbitrary nested dict/list pytrees of jnp/np arrays — policy
+params, optimizer state, critic, and the SPEC-RL rollout cache (so resumed
+training keeps its reuse warm instead of paying a fresh cold-start epoch).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheEntry, RolloutCache
+
+
+def _flatten(tree, prefix="", out=None):
+    out = out if out is not None else {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}/{k}", out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}/#{i}", out)
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(struct, flat, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, flat, f"{prefix}/{k}")
+                for k, v in struct["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_rebuild(v, flat, f"{prefix}/#{i}")
+               for i, v in enumerate(struct["items"])]
+        return seq if kind == "list" else tuple(seq)
+    return jnp.asarray(flat[prefix])
+
+
+def save_pytree(path: str, tree, metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path + ".npz", **{k: v for k, v in flat.items()})
+    with open(path + ".json", "w") as f:
+        json.dump({"structure": _structure(tree), "metadata": metadata or {}}, f)
+
+
+def load_pytree(path: str) -> Tuple[Any, Dict[str, Any]]:
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    with np.load(path + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    return _rebuild(meta["structure"], flat), meta["metadata"]
+
+
+def save_rollout_cache(path: str, cache: RolloutCache) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = {}
+    index = {}
+    for pid, q in cache._store.items():
+        index[str(pid)] = len(q)
+        for j, e in enumerate(q):
+            blob[f"t/{pid}/{j}"] = e.tokens
+            blob[f"l/{pid}/{j}"] = e.logprobs
+            blob[f"m/{pid}/{j}"] = np.array([e.step, int(e.ends_with_eos)])
+    np.savez(path + ".cache.npz", **blob)
+    with open(path + ".cache.json", "w") as f:
+        json.dump({"index": index, "history": cache.history}, f)
+
+
+def load_rollout_cache(path: str) -> RolloutCache:
+    with open(path + ".cache.json") as f:
+        meta = json.load(f)
+    cache = RolloutCache(history=meta["history"])
+    with np.load(path + ".cache.npz") as z:
+        for pid_s, n in meta["index"].items():
+            pid = int(pid_s)
+            for j in range(n):
+                step, eos = z[f"m/{pid}/{j}"]
+                toks = z[f"t/{pid}/{j}"]
+                q = cache._store.setdefault(pid, __import__("collections").deque(
+                    maxlen=cache.history))
+                q.append(CacheEntry(toks, z[f"l/{pid}/{j}"], int(step), bool(eos)))
+    return cache

@@ -1,0 +1,11 @@
+"""SPEC-RL core: the paper's contribution.
+
+- cache: previous-epoch rollout store (tokens + behaviour log-probs)
+- verify: draft-and-verify pass (Algorithm 1) over cached rollouts
+- spec_rollout: orchestrator — verify, resume, assemble, refresh cache
+- lenience: fixed/warmup/adaptive lenience schedules
+- metrics: overlap / diversity / diagnostic metrics from the paper
+"""
+from .cache import RolloutCache
+from .lenience import make_schedule
+from .spec_rollout import RolloutBatch, SpecConfig, rollout

@@ -1,0 +1,91 @@
+"""SPEC-RL rollout cache (paper §3.2).
+
+Host-side store of the most recent rollout (tokens + behaviour log-probs)
+per prompt.  A short history ring per prompt supports the *Delayed Reuse*
+ablation (drafts from ``lag`` epochs/visits ago).  The cache is refreshed
+immediately after every step for the prompts that were rolled — the paper's
+"immediate cache-updating strategy" (Table 2 shows why it matters).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class CacheEntry:
+    tokens: np.ndarray        # (L,) int32 response tokens (no pads)
+    logprobs: np.ndarray      # (L,) float32 behaviour log-probs
+    step: int                 # training step that produced it
+    ends_with_eos: bool
+
+
+class RolloutCache:
+    """Maps prompt_id -> recent rollouts (most recent last)."""
+
+    def __init__(self, history: int = 4):
+        self.history = max(2, history)
+        self._store: Dict[int, deque] = {}
+        self.puts = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def put(self, prompt_id: int, tokens: np.ndarray, logprobs: np.ndarray,
+            length: int, step: int, eos_id: int = 2) -> None:
+        tokens = np.asarray(tokens[:length], np.int32)
+        logprobs = np.asarray(logprobs[:length], np.float32)
+        ends = bool(length > 0 and tokens[-1] == eos_id)
+        q = self._store.setdefault(int(prompt_id), deque(maxlen=self.history))
+        q.append(CacheEntry(tokens, logprobs, step, ends))
+        self.puts += 1
+
+    def get(self, prompt_id: int, lag: int = 1) -> Optional[CacheEntry]:
+        """lag=1: most recent rollout; lag=2: one before it (Delayed Reuse)."""
+        q = self._store.get(int(prompt_id))
+        if not q or len(q) < lag:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return q[-lag]
+
+    def batch_get(self, prompt_ids: Sequence[int], max_len: int, lag: int = 1
+                  ) -> Dict[str, np.ndarray]:
+        """Right-padded draft batch for verification.
+
+        Returns dict with draft_tokens (B, max_len) int32, draft_logprobs
+        (B, max_len) f32, draft_len (B,) int32 (0 = no draft),
+        draft_eos (B,) bool.
+        """
+        B = len(prompt_ids)
+        toks = np.zeros((B, max_len), np.int32)
+        lps = np.zeros((B, max_len), np.float32)
+        lens = np.zeros((B,), np.int32)
+        eos = np.zeros((B,), bool)
+        for i, pid in enumerate(prompt_ids):
+            e = self.get(pid, lag)
+            if e is None:
+                continue
+            L = min(len(e.tokens), max_len)
+            toks[i, :L] = e.tokens[:L]
+            lps[i, :L] = e.logprobs[:L]
+            lens[i] = L
+            eos[i] = e.ends_with_eos and L == len(e.tokens)
+        return {"draft_tokens": toks, "draft_logprobs": lps,
+                "draft_len": lens, "draft_eos": eos}
+
+    def batch_put(self, prompt_ids: Sequence[int], tokens: np.ndarray,
+                  logprobs: np.ndarray, lengths: np.ndarray, step: int,
+                  eos_id: int = 2) -> None:
+        for i, pid in enumerate(prompt_ids):
+            self.put(pid, tokens[i], logprobs[i], int(lengths[i]), step, eos_id)
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {"size": len(self._store), "puts": self.puts,
+                "hit_rate": self.hits / total if total else 0.0}

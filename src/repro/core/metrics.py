@@ -1,0 +1,102 @@
+"""Rollout diagnostics and diversity metrics from the paper.
+
+- ROUGE-1 token overlap between consecutive-epoch rollouts (Fig. 2)
+- Distinct-1 (Li et al. 2016) and Self-BLEU (Zhu et al. 2018) (Fig. 6)
+- policy entropy / KL / clip-fraction summaries (Fig. 5) are computed in the
+  RL trainer and aggregated here.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def rouge1_overlap(a: Sequence[int], b: Sequence[int]) -> float:
+    """Unigram F1 overlap between two token sequences (Fig. 2 metric)."""
+    if len(a) == 0 or len(b) == 0:
+        return 0.0
+    ca, cb = Counter(a), Counter(b)
+    inter = sum((ca & cb).values())
+    p = inter / max(len(b), 1)
+    r = inter / max(len(a), 1)
+    return 2 * p * r / (p + r) if (p + r) else 0.0
+
+
+def batch_overlap(prev: List[np.ndarray], curr: List[np.ndarray]) -> float:
+    vals = [rouge1_overlap(p.tolist(), c.tolist()) for p, c in zip(prev, curr)]
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def prefix_match_fraction(prev: np.ndarray, curr: np.ndarray) -> float:
+    """Longest-common-prefix fraction — the redundancy SPEC-RL exploits."""
+    L = min(len(prev), len(curr))
+    if L == 0:
+        return 0.0
+    neq = prev[:L] != curr[:L]
+    lcp = int(np.argmax(neq)) if neq.any() else L
+    return lcp / max(len(curr), 1)
+
+
+def distinct_n(rollouts: List[np.ndarray], n: int = 1) -> float:
+    """#unique n-grams / #n-grams across the batch (Distinct-1 for n=1)."""
+    grams = set()
+    total = 0
+    for r in rollouts:
+        toks = r.tolist()
+        for i in range(len(toks) - n + 1):
+            grams.add(tuple(toks[i:i + n]))
+            total += 1
+    return len(grams) / total if total else 0.0
+
+
+def _ngram_counts(toks: List[int], n: int) -> Counter:
+    return Counter(tuple(toks[i:i + n]) for i in range(len(toks) - n + 1))
+
+
+def _bleu(cand: List[int], refs: List[List[int]], max_n: int = 4) -> float:
+    if not cand:
+        return 0.0
+    logs = []
+    for n in range(1, max_n + 1):
+        cc = _ngram_counts(cand, n)
+        if not cc:
+            break
+        best = Counter()
+        for r in refs:
+            rc = _ngram_counts(r, n)
+            for g, c in rc.items():
+                best[g] = max(best[g], c)
+        match = sum(min(c, best[g]) for g, c in cc.items())
+        total = sum(cc.values())
+        logs.append(math.log(max(match, 1e-9) / total))
+    if not logs:
+        return 0.0
+    score = math.exp(sum(logs) / len(logs))
+    ref_len = min(len(r) for r in refs) if refs else 1
+    bp = 1.0 if len(cand) >= ref_len else math.exp(1 - ref_len / max(len(cand), 1))
+    return bp * score
+
+
+def self_bleu(rollouts: List[np.ndarray], max_n: int = 4,
+              sample: int = 16) -> float:
+    """Mean BLEU of each rollout against the others (lower = more diverse)."""
+    seqs = [r.tolist() for r in rollouts if len(r) > 0][:sample]
+    if len(seqs) < 2:
+        return 0.0
+    vals = []
+    for i, cand in enumerate(seqs):
+        refs = seqs[:i] + seqs[i + 1:]
+        vals.append(_bleu(cand, refs, max_n))
+    return float(np.mean(vals))
+
+
+def summarize(history: List[Dict[str, float]], keys: Sequence[str]) -> Dict[str, float]:
+    out = {}
+    for k in keys:
+        vals = [h[k] for h in history if k in h]
+        if vals:
+            out[k] = float(np.mean(vals))
+    return out

@@ -1,0 +1,222 @@
+"""SPEC-RL speculative rollout orchestrator (paper §3, Algorithm 1 + §3.2).
+
+Per training step, for each prompt in the batch:
+
+1. retrieve the cached previous rollout as a *draft* (cold start ⇒ empty),
+2. verify all drafts in ONE packed scoring call of the current policy,
+3. keep the verified prefix ``y_prev[:n]``,
+4. left-align prompt ⊕ prefix (the paper's padding trick) and resume
+   generation for every row in ONE packed generate call,
+5. assemble ``y = y_prev[:n] ⊕ y_cont`` and refresh the cache immediately.
+
+Variants (paper Table 2 / §4.3): ``spec`` (the method), ``random`` (uniform
+rejection position, stale behaviour log-probs, no verification pass),
+``delayed`` (drafts from two visits ago), ``full`` (ℓ→∞: reuse everything),
+``off`` (vanilla RLVR).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.generate import GenerateConfig, generate, positions_from_mask
+from repro.models.config import ModelConfig
+
+from .cache import RolloutCache
+from .verify import verify_drafts
+
+VARIANTS = ("off", "spec", "random", "delayed", "full")
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    variant: str = "spec"
+    lenience: float = math.e ** 0.5     # paper default for GRPO
+    cache_history: int = 4
+    verify_impl: str = "auto"           # kernels.spec_verify impl selector
+
+    @property
+    def cache_lag(self) -> int:
+        return 2 if self.variant == "delayed" else 1
+
+    @property
+    def log_lenience(self) -> float:
+        return math.log(self.lenience) if math.isfinite(self.lenience) else 1e9
+
+
+@dataclass
+class RolloutBatch:
+    """Uniform output consumed by the RL trainer, whatever the variant."""
+    prompt: np.ndarray            # (B, P) left-padded
+    prompt_mask: np.ndarray       # (B, P)
+    response: np.ndarray          # (B, N) right-padded
+    response_mask: np.ndarray     # (B, N)
+    behaviour_logprobs: np.ndarray  # (B, N) log-probs under the behaviour dist
+    length: np.ndarray            # (B,)
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+
+@jax.jit
+def left_align(tokens, mask):
+    """Roll each row so its last valid token sits in the last column.
+
+    Requires the columns after the last valid one to be padding (true for
+    [left-padded prompt | right-padded prefix] layouts).
+    """
+    W = tokens.shape[1]
+    idx = jnp.arange(W, dtype=jnp.int32)[None, :]
+    end = jnp.max(jnp.where(mask, idx + 1, 0), axis=1)      # (B,)
+    shift = W - end
+    roll = jax.vmap(lambda t, s: jnp.roll(t, s, axis=0))
+    return roll(tokens, shift), roll(mask, shift)
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id",))
+def assemble(draft_tokens, prefix_lp, n, cont_tokens, cont_lp, cont_len,
+             *, pad_id: int = 0):
+    """y = draft[:n] ⊕ continuation, right-padded to N columns.
+
+    prefix_lp: (B, N) behaviour log-probs to use for the reused prefix.
+    Returns (tokens, lp, mask, length).
+    """
+    B, N = draft_tokens.shape
+    j = jnp.arange(N, dtype=jnp.int32)[None, :]
+    in_prefix = j < n[:, None]
+    total = n + cont_len
+    in_resp = j < total[:, None]
+
+    gather = jnp.clip(j - n[:, None], 0, N - 1)
+    cont_tok_shift = jnp.take_along_axis(cont_tokens, gather, axis=1)
+    cont_lp_shift = jnp.take_along_axis(cont_lp, gather, axis=1)
+
+    tokens = jnp.where(in_prefix, draft_tokens,
+                       jnp.where(in_resp, cont_tok_shift, pad_id))
+    lp = jnp.where(in_prefix, prefix_lp, jnp.where(in_resp, cont_lp_shift, 0.0))
+    return tokens, lp, in_resp, total
+
+
+def _vanilla(params, cfg, gen, prompts, prompt_mask, key, model_kwargs):
+    out = generate(params, cfg, gen, prompts, prompt_mask, key, **model_kwargs)
+    return out
+
+
+def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
+            prompts, prompt_mask, prompt_ids: Sequence[int],
+            cache: Optional[RolloutCache], key, step: int,
+            **model_kwargs) -> RolloutBatch:
+    """One rollout step for a prompt batch.  Host-level: the cache is host
+    memory; verification / generation / assembly are jit'd device calls."""
+    assert spec.variant in VARIANTS, spec.variant
+    B, P = prompts.shape
+    N = gen.max_new_tokens
+    t0 = time.perf_counter()
+    metrics: Dict[str, float] = {"step": step}
+
+    use_cache = spec.variant != "off" and cache is not None
+    drafts = cache.batch_get(prompt_ids, N, spec.cache_lag) if use_cache else None
+    have_drafts = use_cache and int(drafts["draft_len"].sum()) > 0
+
+    if not have_drafts:
+        key, sub = jax.random.split(key)
+        out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub, model_kwargs)
+        resp, lp, length = out["tokens"], out["logprobs"], out["length"]
+        resp_mask = jnp.arange(N)[None, :] < length[:, None]
+        metrics.update(
+            n_generated=int(out["n_generated"]), n_reused=0,
+            verified_prefix_mean=0.0, full_reuse_ratio=0.0,
+            accept_rate=0.0, draft_coverage=0.0,
+            verify_time=0.0, rollout_time=time.perf_counter() - t0,
+            assembly_time=0.0)
+        _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
+        return RolloutBatch(
+            prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
+            response=np.asarray(resp), response_mask=np.asarray(resp_mask),
+            behaviour_logprobs=np.asarray(lp), length=np.asarray(length),
+            metrics=metrics)
+
+    draft_tokens = jnp.asarray(drafts["draft_tokens"])
+    draft_lp = jnp.asarray(drafts["draft_logprobs"])
+    draft_len = jnp.asarray(drafts["draft_len"])
+    draft_eos = jnp.asarray(drafts["draft_eos"])
+
+    # ---- 1. rejection positions ------------------------------------------
+    tv0 = time.perf_counter()
+    if spec.variant in ("spec", "delayed"):
+        key, sub = jax.random.split(key)
+        ver = verify_drafts(params, cfg, prompts, prompt_mask, draft_tokens,
+                            draft_lp, draft_len, sub, spec.log_lenience,
+                            temperature=gen.temperature, top_p=gen.top_p,
+                            impl=spec.verify_impl, **model_kwargs)
+        n = ver["n"]
+        prefix_lp = ver["lp_curr"]          # current-policy probs (exact)
+        accept_rate = float(ver["accept_rate"])
+    elif spec.variant == "random":
+        key, sub = jax.random.split(key)
+        frac = jax.random.uniform(sub, (B,))
+        n = jnp.floor(frac * (draft_len + 1)).astype(jnp.int32)
+        n = jnp.minimum(n, draft_len)
+        prefix_lp = draft_lp                # stale behaviour probs (biased)
+        accept_rate = float(jnp.where(draft_len.sum() > 0,
+                                      n.sum() / jnp.maximum(draft_len.sum(), 1),
+                                      0.0))
+    else:  # full
+        n = draft_len
+        prefix_lp = draft_lp
+        accept_rate = 1.0
+    jax.block_until_ready(n)
+    verify_time = time.perf_counter() - tv0
+
+    # ---- 2. continuation --------------------------------------------------
+    full_reuse = (n == draft_len) & draft_eos
+    j = jnp.arange(N, dtype=jnp.int32)[None, :]
+    prefix_mask = j < n[:, None]
+    combined = jnp.concatenate(
+        [prompts, jnp.where(prefix_mask, draft_tokens, gen.pad_id)], axis=1)
+    combined_mask = jnp.concatenate([prompt_mask, prefix_mask], axis=1)
+    aligned_tokens, aligned_mask = left_align(combined, combined_mask)
+
+    key, sub = jax.random.split(key)
+    cont = generate(params, cfg, gen, aligned_tokens, aligned_mask, sub,
+                    initial_done=full_reuse, row_budget=N - n, **model_kwargs)
+    jax.block_until_ready(cont["tokens"])
+    rollout_time = time.perf_counter() - tv0 - verify_time
+
+    # ---- 3. assembly --------------------------------------------------------
+    ta0 = time.perf_counter()
+    resp, lp, resp_mask, length = assemble(
+        draft_tokens, prefix_lp, n, cont["tokens"], cont["logprobs"],
+        cont["length"], pad_id=gen.pad_id)
+    jax.block_until_ready(resp)
+    assembly_time = time.perf_counter() - ta0
+
+    _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
+
+    metrics.update(
+        n_generated=int(cont["n_generated"]),
+        n_reused=int(n.sum()),
+        verified_prefix_mean=float(n.mean()),
+        full_reuse_ratio=float(full_reuse.mean()),
+        accept_rate=accept_rate,
+        draft_coverage=float((draft_len > 0).mean()),
+        verify_time=verify_time, rollout_time=rollout_time,
+        assembly_time=assembly_time)
+    return RolloutBatch(
+        prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
+        response=np.asarray(resp), response_mask=np.asarray(resp_mask),
+        behaviour_logprobs=np.asarray(lp), length=np.asarray(length),
+        metrics=metrics)
+
+
+def _update_cache(cache: Optional[RolloutCache], prompt_ids, resp, lp, length,
+                  step, eos_id):
+    if cache is None:
+        return
+    cache.batch_put(prompt_ids, np.asarray(resp), np.asarray(lp),
+                    np.asarray(length), step, eos_id)

@@ -1,0 +1,51 @@
+"""SPEC-RL draft verification (Algorithm 1, the jit'd device side).
+
+One teacher-forced forward of the current policy over prompt ⊕ draft yields
+``p_curr``; the fused accept/first-reject reduction (Pallas kernel on TPU,
+its oracle elsewhere) yields the rejection position ``n`` per row.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.generate import positions_from_mask, score
+from repro.kernels.spec_verify.ops import spec_verify
+from repro.models.config import ModelConfig
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",
+                                             "impl"))
+def verify_drafts(params, cfg: ModelConfig, prompt, prompt_mask,
+                  draft_tokens, draft_logprobs, draft_len, key,
+                  log_lenience, *, temperature: float = 1.0,
+                  top_p: float = 1.0, impl: str = "auto",
+                  **model_kwargs) -> Dict[str, jnp.ndarray]:
+    """prompt: (B, P) left-padded; draft_*: (B, N) right-padded.
+
+    Returns:
+      n            (B,) first-rejection position in [0, draft_len]
+      lp_curr      (B, N) current-policy log-probs of draft tokens
+      accept_rate  ()    fraction of draft tokens accepted
+    """
+    B, P = prompt.shape
+    N = draft_tokens.shape[1]
+    didx = jnp.arange(N, dtype=jnp.int32)[None, :]
+    draft_mask = didx < draft_len[:, None]
+
+    full = jnp.concatenate([prompt, jnp.where(draft_mask, draft_tokens, 0)], axis=1)
+    mask = jnp.concatenate([prompt_mask, draft_mask], axis=1)
+    sc = score(params, cfg, full, mask, temperature=temperature, top_p=top_p,
+               **model_kwargs)
+    lp_curr = sc["logprobs"][:, P:]                       # (B, N)
+
+    u = jax.random.uniform(key, (B, N))
+    n = spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
+                    impl=impl)
+
+    total = jnp.maximum(draft_len.sum(), 1)
+    accept_rate = n.sum() / total
+    return {"n": n, "lp_curr": lp_curr, "accept_rate": accept_rate}

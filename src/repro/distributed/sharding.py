@@ -1,0 +1,191 @@
+"""Path-based parameter partition rules -> PartitionSpecs.
+
+Tensor parallelism on the ``model`` axis, data parallelism on
+``(pod, data)``.  Rules are matched on the trailing components of the
+flattened parameter path; stacked (scanned) trunk parameters get a leading
+``None`` axis automatically.
+
+Key decisions (see DESIGN.md §4):
+- GQA kv projections shard on `model` only when kv_heads divide the axis;
+  MQA/GQA with few kv heads replicates kv (standard practice).
+- MoE experts use expert parallelism when num_experts % model == 0
+  (deepseek-v3 256e, jamba 16e), else per-expert tensor parallelism
+  (mixtral 8e on a 16-way axis).
+- Optimizer moments are additionally sharded over `data` on their first
+  sharded-free dimension (ZeRO-style) via ``zero_shard_spec`` — this is a
+  beyond-paper lever exercised in §Perf.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               model_size: int) -> P:
+    """PartitionSpec for one parameter (without any leading scan axis)."""
+    s = path_str
+    ndim = len(shape)
+
+    def col():   # (in, out) -> shard out
+        return P(None, "model") if _divisible(shape[-1], model_size) else P()
+
+    def row():   # (in, out) -> shard in
+        return P("model", None) if _divisible(shape[-2], model_size) else P()
+
+    # ---- embeddings / heads -------------------------------------------------
+    if re.search(r"(^|/)embed$", s):
+        return P("model", None) if _divisible(shape[0], model_size) else P()
+    if "lm_head" in s and s.endswith("kernel"):
+        return col()
+    if "pos_table" in s:
+        return P()
+    if "value_head" in s:
+        return P()
+
+    # ---- attention ----------------------------------------------------------
+    if re.search(r"attn/w[q]|wq_b", s) and s.endswith("kernel"):
+        return col()
+    if re.search(r"attn/w[kv]/kernel", s):
+        kv_dim_ok = _divisible(cfg.num_kv_heads, model_size)
+        return P(None, "model") if kv_dim_ok else P()
+    if re.search(r"attn/w[kv]/bias", s):
+        kv_dim_ok = _divisible(cfg.num_kv_heads, model_size)
+        return P("model") if kv_dim_ok else P()
+    if s.endswith("wq/bias"):
+        return P("model") if _divisible(shape[-1], model_size) else P()
+    if s.endswith("wo/kernel"):
+        return row()
+    if "wq_a" in s and s.endswith("kernel"):
+        return col()
+    if "wkv_a" in s:   # keep the MLA latent whole per device
+        return P()
+    if "wkv_b" in s and s.endswith("kernel"):
+        return col()
+
+    # ---- MoE ------------------------------------------------------------------
+    if s.endswith("moe/router/kernel"):
+        return P()
+    if re.search(r"moe/w_(gate|up)$", s):           # (E, d, ff)
+        if _divisible(shape[0], model_size):
+            return P("model", None, None)           # expert parallel
+        return P(None, None, "model") if _divisible(shape[-1], model_size) else P()
+    if s.endswith("moe/w_down"):                    # (E, ff, d)
+        if _divisible(shape[0], model_size):
+            return P("model", None, None)
+        return P(None, "model", None) if _divisible(shape[-2], model_size) else P()
+
+    # ---- dense FFN (mlp / shared expert / rwkv channel-mix) -----------------
+    if re.search(r"w_(gate|up)/kernel$", s) or s.endswith("channel_mix/wk/kernel"):
+        return col()
+    if s.endswith("w_down/kernel") or s.endswith("channel_mix/wv/kernel"):
+        return row()
+    if s.endswith("channel_mix/wr/kernel"):
+        return col() if False else P()              # output gates full-d: replicate
+
+    # ---- mamba -----------------------------------------------------------------
+    if s.endswith("in_proj/kernel"):
+        return col()
+    if s.endswith("conv_w"):
+        return P(None, "model") if _divisible(shape[-1], model_size) else P()
+    if s.endswith("conv_b") or re.search(r"mamba/D$", s):
+        return P("model") if _divisible(shape[-1], model_size) else P()
+    if s.endswith("x_proj/kernel"):
+        return row()
+    if s.endswith("dt_proj/kernel"):
+        return col()
+    if re.search(r"A_log$", s):
+        return P("model", None) if _divisible(shape[-2], model_size) else P()
+    if s.endswith("out_proj/kernel"):
+        return row()
+
+    # ---- rwkv time mix -----------------------------------------------------------
+    if re.search(r"time_mix/w[rkvg]/kernel$", s):
+        return col()
+    if s.endswith("time_mix/wo/kernel"):
+        return row()
+
+    # default: replicate (norms, small vectors, loras, router bias, ...)
+    return P()
+
+
+def shift_for_scan(spec: P) -> P:
+    return P(None, *spec)
+
+
+def params_pspecs(cfg: ModelConfig, params_shapes, model_size: int):
+    """Build a pytree of PartitionSpecs mirroring ``params_shapes``.
+
+    ``params_shapes`` is any pytree whose leaves expose ``.shape`` (arrays or
+    ShapeDtypeStructs).  Trunk entries (under 'trunk' or 'encoder/trunk' or
+    'mtp') with a stacked layer axis get the leading None.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = "trunk" in ps and "#" in ps
+        shape = leaf.shape
+        base_shape = shape[1:] if stacked else shape
+        spec = param_spec(ps, base_shape, cfg, model_size)
+        if stacked:
+            spec = shift_for_scan(spec)
+        if len(spec) > len(shape):
+            spec = P()
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero_shard_spec(spec: P, shape: Tuple[int, ...], data_axes=("data",),
+                    data_size: int = 16) -> P:
+    """ZeRO-style optimizer-moment sharding: put the (pod,)data axes on the
+    first dimension the param spec leaves unsharded and that divides."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (cur, dim) in enumerate(zip(parts, shape)):
+        if cur is None and dim >= data_size and dim % data_size == 0:
+            parts[i] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+            break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def make_shardings(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_size: int) -> P:
+    axes = batch_axes(mesh)
+    import numpy as np
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_size % total != 0 or batch_size < total:
+        return P(*([None] * ndim))              # tiny batch: replicate
+    first = axes if len(axes) > 1 else axes[0]
+    return P(first, *([None] * (ndim - 1)))

@@ -1,0 +1,163 @@
+"""Batched autoregressive generation and teacher-forced scoring.
+
+One jit'd ``generate`` handles vanilla rollouts *and* SPEC-RL continuations
+(the caller concatenates prompt ⊕ verified prefix into the "prompt").
+Left-padded batches, dense caches, a single ``lax.while_loop`` with per-row
+done flags — the TPU-idiomatic replacement for vLLM's continuous batching
+(see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+from .sampling import entropy_of, logprobs_of, sample
+
+PAD = 0
+
+
+def positions_from_mask(mask) -> jnp.ndarray:
+    """mask: (B, T) bool -> positions (B, T) int32, -1 where invalid."""
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+    return jnp.where(mask, pos, -1)
+
+
+@dataclass(frozen=True)
+class GenerateConfig:
+    max_new_tokens: int = 64
+    temperature: float = 1.0
+    top_p: float = 1.0
+    eos_id: int = 2
+    pad_id: int = PAD
+
+
+def _model_extras(model_kwargs):
+    return {k: model_kwargs.get(k) for k in
+            ("encoder_out", "encoder_positions")}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen"))
+def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
+             key, initial_done=None, row_budget=None,
+             **model_kwargs) -> Dict[str, jnp.ndarray]:
+    """prompt: (B, P) int32 left-padded; prompt_mask: (B, P) bool.
+
+    initial_done: optional (B,) bool — rows that must not decode at all
+    (SPEC-RL full-reuse rows).  row_budget: optional (B,) int32 — per-row max
+    generated tokens (SPEC-RL continuation budget = max_resp - prefix_len).
+
+    Returns dict with:
+      tokens     (B, N) generated tokens (pad after eos)
+      logprobs   (B, N) behaviour log-probs of generated tokens
+      length     (B,)   #generated tokens per row (including eos)
+      n_generated ()    total generated tokens (the paper's "Tokens" metric)
+    """
+    B, P = prompt.shape
+    N = gen.max_new_tokens
+    positions = positions_from_mask(prompt_mask)
+    extras = _model_extras(model_kwargs)
+    prefix_embeds = model_kwargs.get("prefix_embeds")
+
+    cache_len = P + N + (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
+    caches = M.init_cache(cfg, B, cache_len)
+
+    if prefix_embeds is not None:
+        Pv = prefix_embeds.shape[1]
+        vis_pos = jnp.broadcast_to(jnp.arange(Pv, dtype=jnp.int32), (B, Pv))
+        positions_full = jnp.concatenate([vis_pos, jnp.where(
+            positions >= 0, positions + Pv, -1)], axis=1)
+        logits, caches = M.prefill(params, cfg, prompt, positions_full, caches,
+                                   prefix_embeds=prefix_embeds, **extras)
+        pos_offset = Pv
+        write_offset = P + Pv
+    else:
+        logits, caches = M.prefill(params, cfg, prompt, positions, caches, **extras)
+        pos_offset = 0
+        write_offset = P
+
+    next_pos = prompt_mask.sum(axis=1).astype(jnp.int32) + pos_offset  # (B,)
+    key, sub = jax.random.split(key)
+    tok0, lp0 = sample(sub, logits[:, -1], gen.temperature, gen.top_p)
+
+    tokens_buf = jnp.full((B, N), gen.pad_id, jnp.int32)
+    lp_buf = jnp.zeros((B, N), jnp.float32)
+
+    def cond(state):
+        step, done, *_ = state
+        return (step < N) & ~jnp.all(done)
+
+    def body(state):
+        (step, done, cur_tok, cur_lp, next_pos, caches, tokens_buf, lp_buf,
+         count, key) = state
+        tok_store = jnp.where(done, gen.pad_id, cur_tok)
+        lp_store = jnp.where(done, 0.0, cur_lp)
+        tokens_buf = jax.lax.dynamic_update_index_in_dim(
+            tokens_buf, tok_store, step, axis=1)
+        lp_buf = jax.lax.dynamic_update_index_in_dim(lp_buf, lp_store, step, axis=1)
+        count = count + (~done).astype(jnp.int32)
+        done_next = done | (cur_tok == gen.eos_id) | (count >= budget)
+
+        logits, caches = M.decode_step(
+            params, cfg, tok_store[:, None],
+            jnp.where(done[:, None], -1, next_pos[:, None]),
+            caches, write_offset + step, **extras)
+        key, sub = jax.random.split(key)
+        nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
+        return (step + 1, done_next, nxt, nlp, next_pos + 1, caches,
+                tokens_buf, lp_buf, count, key)
+
+    done0 = jnp.zeros((B,), bool) if initial_done is None else initial_done
+    budget = jnp.full((B,), N, jnp.int32) if row_budget is None else \
+        row_budget.astype(jnp.int32)
+    done0 = done0 | (budget <= 0)
+    state = (jnp.array(0), done0, tok0, lp0, next_pos, caches,
+             tokens_buf, lp_buf, jnp.zeros((B,), jnp.int32), key)
+    final = jax.lax.while_loop(cond, body, state)
+    _, _, _, _, _, _, tokens_buf, lp_buf, length, _ = final
+    return {
+        "tokens": tokens_buf,
+        "logprobs": lp_buf,
+        "length": length,
+        "n_generated": length.sum(),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",
+                                             "return_entropy"))
+def score(params, cfg: ModelConfig, tokens, mask, *, temperature: float = 1.0,
+          top_p: float = 1.0, return_entropy: bool = False, **model_kwargs):
+    """Teacher-forced scoring: log-prob of every token given its prefix.
+
+    tokens: (B, L) left-padded full sequences; mask: (B, L) bool validity.
+    Returns dict with ``logprobs`` (B, L) — entry t is the log-prob of
+    tokens[:, t] under the sampling distribution given tokens[:, :t]
+    (0 where mask is False or t is the first valid token), and optionally
+    ``entropy`` (B, L).
+
+    This single pass is SPEC-RL's *verification* forward (p_curr over the
+    draft) and doubles as the PPO old-log-prob computation.
+    """
+    extras = _model_extras(model_kwargs)
+    positions = positions_from_mask(mask)
+    logits, _ = M.forward(params, cfg, tokens, positions,
+                          prefix_embeds=model_kwargs.get("prefix_embeds"),
+                          **extras)
+    # logits[:, t] predicts tokens[:, t+1]
+    lp_next = logprobs_of(logits[:, :-1], tokens[:, 1:], temperature, top_p)
+    lp = jnp.concatenate([jnp.zeros_like(lp_next[:, :1]), lp_next], axis=1)
+    # valid only where both target and its predecessor are valid
+    valid = mask & jnp.concatenate([jnp.zeros_like(mask[:, :1]), mask[:, :-1]],
+                                   axis=1)
+    out = {"logprobs": jnp.where(valid, lp, 0.0), "valid": valid}
+    if return_entropy:
+        ent = entropy_of(logits[:, :-1], temperature)
+        ent = jnp.concatenate([jnp.zeros_like(ent[:, :1]), ent], axis=1)
+        out["entropy"] = jnp.where(valid, ent, 0.0)
+    return out

@@ -1,0 +1,65 @@
+"""Token sampling: temperature + nucleus (top-p), returning the log-prob of
+the sampled token under the *actual* sampling distribution.
+
+SPEC-RL correctness requires the cached behaviour log-probs ``p_prev`` to be
+the true probabilities the rollout engine sampled from — i.e. *after*
+temperature and top-p renormalisation — so that the acceptance ratio
+q/p in Eq. (2) is exact.  ``sample`` therefore returns that log-prob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def adjust_logits(logits, temperature: float = 1.0, top_p: float = 1.0):
+    """Return renormalised log-probs of the sampling distribution.
+
+    logits: (..., V) float32.
+    """
+    if temperature != 1.0:
+        logits = logits / jnp.maximum(temperature, 1e-6)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if top_p < 1.0:
+        sorted_lp = jnp.sort(logp, axis=-1)[..., ::-1]
+        cum = jnp.cumsum(jnp.exp(sorted_lp), axis=-1)
+        # keep the smallest set whose mass >= top_p (always keep argmax)
+        keep_sorted = (cum - jnp.exp(sorted_lp)) < top_p
+        # threshold log-prob: smallest kept log-prob
+        thresh = jnp.min(jnp.where(keep_sorted, sorted_lp, jnp.inf),
+                         axis=-1, keepdims=True)
+        logp = jnp.where(logp >= thresh, logp, NEG_INF)
+        logp = jax.nn.log_softmax(logp, axis=-1)
+    return logp
+
+
+def sample(key, logits, temperature: float = 1.0, top_p: float = 1.0):
+    """Sample one token per row.
+
+    logits: (B, V).  Returns (token (B,) int32, logprob (B,) float32) where
+    logprob is under the temperature/top-p-adjusted distribution.
+    """
+    logp = adjust_logits(logits.astype(jnp.float32), temperature, top_p)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, jnp.zeros(tok.shape, jnp.float32)
+    tok = jax.random.categorical(key, logp, axis=-1).astype(jnp.int32)
+    lp = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
+    return tok, lp
+
+
+def logprobs_of(logits, tokens, temperature: float = 1.0, top_p: float = 1.0):
+    """Log-prob of given tokens under the adjusted distribution.
+
+    logits: (..., V); tokens: (...). Returns (...) float32.
+    """
+    logp = adjust_logits(logits.astype(jnp.float32), temperature, top_p)
+    return jnp.take_along_axis(logp, tokens[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+
+
+def entropy_of(logits, temperature: float = 1.0):
+    logp = adjust_logits(logits.astype(jnp.float32), temperature, 1.0)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)

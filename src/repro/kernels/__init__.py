@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for SPEC-RL hot spots.
+
+Each kernel subpackage ships kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle used by tests).
+"""

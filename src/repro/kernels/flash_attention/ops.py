@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                    window: int = 0, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, q_pos, k_pos, causal=causal,
+                                   window=window)
+    return flash_attention_pallas(q, k, v, q_pos, k_pos, causal=causal,
+                                  window=window, block_q=block_q,
+                                  block_k=block_k,
+                                  interpret=(impl == "interpret"))

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: masked softmax attention with GQA,
+causal + sliding-window + padding masks (same semantics as
+repro.models.attention.dot_product_attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                        window: int = 0):
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qg, k.astype(jnp.float32)) * scale
+    mask = k_pos[:, None, None, None, :] >= 0
+    if causal:
+        mask &= k_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+    if window > 0:
+        mask &= (q_pos[:, None, None, :, None]
+                 - k_pos[:, None, None, None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.any(mask, axis=-1, keepdims=True), w, 0.0)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, D)

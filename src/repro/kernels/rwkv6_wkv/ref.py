@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV6 wkv recurrence (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    """r/k/v/w: (BH, T, hd); u: (H, hd); s0: (BH, hd, hd).
+
+    Returns (y (BH, T, hd), s_final).  Row bh uses bonus u[bh % H].
+    """
+    BH, T, hd = r.shape
+    H = u.shape[0]
+    u_rows = jnp.tile(u, (BH // H, 1)) if BH % H == 0 else u[jnp.arange(BH) % H]
+    u_rows = u[jnp.arange(BH) % H]                      # (BH, hd)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (BH, hd)
+        bonus = jnp.sum(r_t * u_rows * k_t, axis=-1, keepdims=True)  # (BH,1)
+        y = jnp.einsum("bk,bkv->bv", r_t, s) + bonus * v_t
+        s = w_t[..., :, None] * s + k_t[..., :, None] * v_t[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_final

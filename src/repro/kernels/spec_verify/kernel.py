@@ -1,0 +1,82 @@
+"""Pallas-TPU kernel for SPEC-RL speculative verification (Algorithm 1).
+
+Fuses the per-token acceptance test
+``u_i <= min(1, lenience * p_curr_i / p_prev_i)`` with the
+first-rejection-index reduction into a single pass over the two log-prob
+streams: one HBM read per operand, a running min-index accumulator that
+lives in the output block (revisited across sequence tiles), no
+materialised intermediates.
+
+Grid: (batch_tiles, seq_tiles); seq tiles iterate innermost so the output
+block (BB, 1) accumulates a running minimum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _verify_kernel(logl_ref, lp_curr_ref, lp_prev_ref, u_ref, valid_ref,
+                   out_ref, *, block_t: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, INT_MAX)
+
+    diff = (lp_curr_ref[...] - lp_prev_ref[...]).astype(jnp.float32)
+    log_alpha = jnp.minimum(diff + logl_ref[0, 0], 0.0)
+    alpha = jnp.exp(log_alpha)                         # (BB, BT), <= 1
+    reject = u_ref[...] > alpha
+
+    gidx = t * block_t + jax.lax.broadcasted_iota(jnp.int32, reject.shape, 1)
+    in_draft = gidx < valid_ref[...]                   # valid (BB, 1) broadcast
+    idx = jnp.where(reject & in_draft, gidx, INT_MAX)
+    block_min = jnp.min(idx, axis=1, keepdims=True)    # (BB, 1)
+    out_ref[...] = jnp.minimum(out_ref[...], block_min)
+
+
+def spec_verify_pallas(lp_curr, lp_prev, u, valid_len, log_lenience, *,
+                       block_b: int = 8, block_t: int = 512,
+                       interpret: bool = False):
+    """Returns (B,) int32: first rejected index, or INT_MAX when none.
+
+    lp_curr / lp_prev / u: (B, T) float; valid_len: (B,) int32;
+    log_lenience: scalar (traced ok).
+    """
+    B, T = lp_curr.shape
+    block_b = min(block_b, B)
+    block_t = min(block_t, T)
+    pad_b = (-B) % block_b
+    pad_t = (-T) % block_t
+    if pad_b or pad_t:
+        pad2 = lambda x: jnp.pad(x, ((0, pad_b), (0, pad_t)))
+        lp_curr, lp_prev = pad2(lp_curr), pad2(lp_prev)
+        u = jnp.pad(u, ((0, pad_b), (0, pad_t)), constant_values=0.0)
+        valid_len = jnp.pad(valid_len, (0, pad_b))
+    Bp, Tp = lp_curr.shape
+
+    logl = jnp.full((1, 1), log_lenience, jnp.float32)
+    valid2 = valid_len.astype(jnp.int32)[:, None]
+
+    grid = (Bp // block_b, Tp // block_t)
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, t: (0, 0)),
+            pl.BlockSpec((block_b, block_t), lambda b, t: (b, t)),
+            pl.BlockSpec((block_b, block_t), lambda b, t: (b, t)),
+            pl.BlockSpec((block_b, block_t), lambda b, t: (b, t)),
+            pl.BlockSpec((block_b, 1), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b, t: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        interpret=interpret,
+    )(logl, lp_curr, lp_prev, u, valid2)
+    return out[:B, 0]

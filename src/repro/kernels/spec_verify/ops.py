@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the spec_verify kernel.
+
+``spec_verify`` returns, per batch row, the first rejected draft position
+``n`` ∈ [0, valid_len] (== valid_len ⇒ full acceptance).  On CPU it runs the
+kernel in interpret mode unless ``use_ref`` short-circuits to the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import INT_MAX, spec_verify_pallas
+from .ref import spec_verify_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_b", "block_t"))
+def spec_verify(lp_curr, lp_prev, u, valid_len, log_lenience, *,
+                impl: str = "auto", block_b: int = 8, block_t: int = 512):
+    """impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return spec_verify_ref(lp_curr, lp_prev, u, valid_len, log_lenience)
+    raw = spec_verify_pallas(lp_curr, lp_prev, u, valid_len, log_lenience,
+                             block_b=block_b, block_t=block_t,
+                             interpret=(impl == "interpret"))
+    return jnp.minimum(raw, valid_len.astype(jnp.int32))

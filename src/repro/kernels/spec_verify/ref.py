@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for speculative verification (Algorithm 1, lines 2-8)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spec_verify_ref(lp_curr, lp_prev, u, valid_len, log_lenience):
+    """First rejection position per row.
+
+    Acceptance: u_i <= min(1, l * p_curr / p_prev), evaluated in log space.
+    Positions >= valid_len are not part of the draft.  Returns (B,) int32 in
+    [0, valid_len]: == valid_len means every draft token was accepted.
+    """
+    B, T = lp_curr.shape
+    log_alpha = jnp.minimum(lp_curr.astype(jnp.float32)
+                            - lp_prev.astype(jnp.float32) + log_lenience, 0.0)
+    alpha = jnp.exp(log_alpha)
+    gidx = jnp.arange(T, dtype=jnp.int32)[None, :]
+    reject = (u > alpha) & (gidx < valid_len[:, None])
+    any_rej = reject.any(axis=1)
+    first = jnp.argmax(reject, axis=1).astype(jnp.int32)
+    return jnp.where(any_rej, first, valid_len.astype(jnp.int32))

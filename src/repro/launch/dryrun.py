@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh): build the production mesh,
+attach shardings to ShapeDtypeStruct stand-ins (no allocation), lower the
+step function, ``.compile()`` it, and record memory / cost / collective
+analysis to ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+The two mandatory lines above run BEFORE any jax import so 512 placeholder
+host devices exist when jax initialises.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every combo
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod  # single-pod only
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, ASSIGNED, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, input_specs, shape_applicable
+from repro.launch.steps import make_serve_step, make_train_step, make_verify_step
+from repro.optim import adamw
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def prepare(cfg, shape_name, mesh, *, zero_opt=False, remat=None,
+            ce_impl="naive", microbatch=1, dp_only=False, attn_impl=None,
+            accum_dtype="float32", kv_shard_hd=False, moe_impl=None,
+            moe_groups=None, scan_chunk=None):
+    info = INPUT_SHAPES[shape_name]
+    if remat is None:
+        remat = "full" if info["kind"] == "train" else "none"
+    cfg = cfg.replace(remat=remat)
+    if attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    if moe_impl:
+        cfg = cfg.replace(moe_impl=moe_impl)
+    if moe_groups is not None:
+        cfg = cfg.replace(moe_groups=moe_groups)
+    if scan_chunk is not None:
+        cfg = cfg.replace(scan_chunk=scan_chunk)
+    spec = input_specs(cfg, shape_name, mesh, zero_opt=zero_opt,
+                       dp_only=dp_only, kv_shard_hd=kv_shard_hd)
+    if spec["step"] == "train":
+        grad_specs = None
+        if zero_opt and microbatch > 1:
+            grad_specs = jax.tree.map(lambda s: s.sharding,
+                                      spec["opt"]["mu"])
+        fn = make_train_step(cfg, adamw.AdamWConfig(), ce_impl=ce_impl,
+                             microbatch=microbatch, accum_dtype=accum_dtype,
+                             grad_specs=grad_specs)
+        args = (spec["params"], spec["opt"]) + spec["args"]
+    elif spec["step"] == "verify":
+        fn = make_verify_step(cfg, score_impl=ce_impl)
+        args = (spec["params"],) + spec["args"]
+    else:
+        fn = make_serve_step(cfg)
+        args = (spec["params"],) + spec["args"]
+    return fn, args, spec
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, zero_opt=False,
+            remat=None, save=True, tag="baseline", ce_impl="naive",
+            microbatch=1, dp_only=False, attn_impl=None, donate=False,
+            accum_dtype="float32", kv_shard_hd=False, moe_impl=None,
+            moe_groups=None, scan_chunk=None):
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "tag": tag, "zero_opt": zero_opt, "ce_impl": ce_impl}
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        _save(result, save)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.perf_counter()
+    try:
+        fn, args, spec = prepare(cfg, shape_name, mesh, zero_opt=zero_opt,
+                                 remat=remat, ce_impl=ce_impl,
+                                 microbatch=microbatch, dp_only=dp_only,
+                                 attn_impl=attn_impl, accum_dtype=accum_dtype,
+                                 kv_shard_hd=kv_shard_hd, moe_impl=moe_impl,
+                                 moe_groups=moe_groups, scan_chunk=scan_chunk)
+        donate_args = (0, 1) if (donate and spec["step"] == "train") else ()
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate_args).lower(
+                *args, **spec["extras"])
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            rep = analysis.analyze_compiled(compiled, mesh.size)
+        result.update(**rep)
+        result.update(status="ok", lower_s=round(t_lower, 1),
+                      compile_s=round(t_compile, 1),
+                      tokens_per_step=spec["tokens_per_step"],
+                      num_devices=mesh.size)
+        # convenience: per-device HBM GiB
+        result["hbm_gib_per_device"] = round(
+            rep["memory"]["resident_bytes"] / 2**30, 3)
+    except Exception as e:  # record failures — they are bugs to fix
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _save(result, save)
+    return result
+
+
+def _save(result, save):
+    if not save:
+        return
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}"
+    if result.get("tag", "baseline") != "baseline":
+        name += f"__{result['tag']}"
+    with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=float)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=sorted(ARCH_IDS), default=None)
+    p.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    p.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--zero-opt", action="store_true",
+                   help="ZeRO-shard optimizer moments over the data axes")
+    p.add_argument("--remat", choices=["none", "full", "dots"], default=None)
+    p.add_argument("--tag", default="baseline")
+    p.add_argument("--ce", choices=["naive", "chunked"], default="naive")
+    p.add_argument("--microbatch", type=int, default=1)
+    p.add_argument("--dp-only", action="store_true",
+                   help="pure data parallelism (batch over all axes)")
+    p.add_argument("--attn", choices=["naive", "blocked"], default=None)
+    p.add_argument("--donate", action="store_true",
+                   help="donate params/opt buffers (in-place update)")
+    p.add_argument("--accum-dtype", default="float32",
+                   choices=["float32", "bfloat16"])
+    p.add_argument("--kv-shard-hd", action="store_true",
+                   help="shard the KV-cache head_dim over `model` when kv "
+                        "heads alone do not divide the axis (decode)")
+    p.add_argument("--moe", choices=["dense", "dispatch", "sort"],
+                   default=None)
+    p.add_argument("--moe-groups", type=int, default=None)
+    p.add_argument("--scan-chunk", type=int, default=None)
+    args = p.parse_args(argv)
+
+    # explicit --arch/--shape always narrow the sweep, even with --all
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else sorted(INPUT_SHAPES)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                r = run_one(arch, shape, mk, zero_opt=args.zero_opt,
+                            remat=args.remat, tag=args.tag, ce_impl=args.ce,
+                            microbatch=args.microbatch, dp_only=args.dp_only,
+                            attn_impl=args.attn, donate=args.donate,
+                            accum_dtype=args.accum_dtype,
+                            kv_shard_hd=args.kv_shard_hd, moe_impl=args.moe,
+                            moe_groups=args.moe_groups,
+                            scan_chunk=args.scan_chunk)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"hbm/dev={r['hbm_gib_per_device']}GiB "
+                             f"flops/dev={r['dot_flops_per_device']:.3e} "
+                             f"coll/dev={r['collective_bytes_total_per_device']:.3e}B "
+                             f"compile={r['compile_s']}s")
+                elif status == "error":
+                    failures += 1
+                    extra = r["error"][:200]
+                else:
+                    extra = r["reason"][:80]
+                print(f"[{status:7s}] {arch:18s} {shape:12s} {mk:8s} {extra}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

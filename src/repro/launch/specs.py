@@ -1,0 +1,231 @@
+"""Input ShapeDtypeStruct stand-ins + shardings per (arch, input-shape).
+
+No device allocation: params/caches come from ``jax.eval_shape`` over the
+real constructors, inputs are ShapeDtypeStructs with NamedShardings
+attached.  ``input_specs(cfg, shape_name, mesh)`` returns everything
+``dryrun.py`` needs to lower a step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (_path_str, batch_axes, batch_spec,
+                                        params_pspecs, zero_shard_spec)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+# The four assigned input shapes.
+INPUT_SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Whether (arch, shape) runs; reason when skipped (DESIGN.md §7)."""
+    info = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k decode needs sub-quadratic "
+                       "attention (SSM/hybrid/SWA only)")
+    return True, ""
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ params
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: M.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_struct(params_sds):
+    f32 = lambda s: sds(s.shape, jnp.float32)
+    return {"mu": jax.tree.map(f32, params_sds),
+            "nu": jax.tree.map(f32, params_sds),
+            "step": sds((), jnp.int32)}
+
+
+def sharded_params_struct(cfg: ModelConfig, mesh: Mesh, *,
+                          zero_opt: bool = False, dp_only: bool = False):
+    """(params_sds, opt_sds) with shardings attached."""
+    pstruct = params_struct(cfg)
+    pspecs = params_pspecs(cfg, pstruct,
+                           1 if dp_only else mesh.shape["model"])
+    params_sds = jax.tree.map(
+        lambda s, sp: sds(s.shape, s.dtype, _ns(mesh, sp)), pstruct, pspecs)
+
+    daxes = batch_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def moment(s, sp):
+        spec = sp
+        if zero_opt:
+            spec = zero_shard_spec(sp, s.shape, daxes, dsize)
+        return sds(s.shape, jnp.float32, _ns(mesh, spec))
+
+    opt_sds = {"mu": jax.tree.map(moment, pstruct, pspecs),
+               "nu": jax.tree.map(moment, pstruct, pspecs),
+               "step": sds((), jnp.int32, _ns(mesh, P()))}
+    return params_sds, opt_sds, pspecs
+
+
+# ------------------------------------------------------------------ caches
+
+
+def cache_pspec(path_str: str, shape, cfg: ModelConfig, mesh: Mesh,
+                batch: int, seq_shard: bool, kv_shard_hd: bool = False) -> P:
+    """PartitionSpec for a decode-cache leaf (leading axis = scan run)."""
+    model = mesh.shape["model"]
+    baxes = batch_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in baxes]))
+    b_ax = (baxes if len(baxes) > 1 else baxes[0]) if batch % dsize == 0 and \
+        batch >= dsize else None
+    if seq_shard:
+        b_ax = None          # long_500k: the data axis shards the seq dim
+    s = path_str
+
+    if re.search(r"/(k|v)$", s):            # (run, B, Hkv, S, hd)
+        kv_ok = cfg.num_kv_heads % model == 0 and cfg.num_kv_heads >= model
+        seq_ax = "data" if (seq_shard and "data" in mesh.axis_names) else None
+        if not kv_ok and kv_shard_hd and cfg.resolved_head_dim % model == 0:
+            # GQA decode with few KV heads: shard head_dim instead — pays a
+            # small score all-reduce but divides the dominant KV bytes 16x
+            return P(None, b_ax, None, seq_ax, "model")
+        return P(None, b_ax, "model" if kv_ok else None, seq_ax, None)
+    if s.endswith("/ckv") or s.endswith("/krope"):   # (run, B, S, r)
+        seq_ax = "data" if (seq_shard and "data" in mesh.axis_names) else None
+        return P(None, b_ax, seq_ax, None)
+    if s.endswith("/pos"):                  # (run, B, S)
+        seq_ax = "data" if (seq_shard and "data" in mesh.axis_names) else None
+        return P(None, b_ax, seq_ax)
+    if s.endswith("/conv"):                 # (run, B, dc-1, di)
+        di_ok = cfg.mamba_d_inner % model == 0
+        return P(None, b_ax, None, "model" if di_ok else None)
+    if s.endswith("/ssm"):                  # (run, B, di, ds)
+        di_ok = cfg.mamba_d_inner % model == 0
+        return P(None, b_ax, "model" if di_ok else None, None)
+    if s.endswith("/wkv"):                  # (run, B, H, hd, hd)
+        h_ok = cfg.rwkv_num_heads % model == 0
+        return P(None, b_ax, "model" if h_ok else None, None, None)
+    if s.endswith("/shift_t") or s.endswith("/shift_c"):  # (run, B, d)
+        return P(None, b_ax, None)
+    return P()
+
+
+def cache_struct(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int, *,
+                 seq_shard: bool = False, kv_shard_hd: bool = False):
+    struct = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+    flat, tdef = jax.tree_util.tree_flatten_with_path(struct)
+    out = []
+    for path, leaf in flat:
+        spec = cache_pspec(_path_str(path), leaf.shape, cfg, mesh, batch,
+                           seq_shard, kv_shard_hd)
+        if len(spec) != len(leaf.shape):
+            spec = P()
+        out.append(sds(leaf.shape, leaf.dtype, _ns(mesh, spec)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ------------------------------------------------------------------ inputs
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh, *,
+                zero_opt: bool = False, dp_only: bool = False,
+                kv_shard_hd: bool = False) -> Dict[str, Any]:
+    """Everything needed to lower the step for (cfg, shape, mesh).
+
+    Returns dict: step ('train'|'verify'|'serve'), args (tuple of SDS),
+    kwargs (extras), params/opt structs.
+    """
+    ok, reason = shape_applicable(cfg, shape_name)
+    assert ok, f"{cfg.name} x {shape_name}: {reason}"
+    info = INPUT_SHAPES[shape_name]
+    S, B = info["seq_len"], info["global_batch"]
+    dt = _dtype(cfg)
+    if dp_only:
+        # pure data parallelism: batch over every mesh axis, params replicated
+        axes = tuple(mesh.axis_names)
+        total = mesh.size
+        def _bs(ndim):
+            if B % total == 0 and B >= total:
+                return P(axes, *([None] * (ndim - 1)))
+            return P(*([None] * ndim))
+        bspec1, bspec2 = _bs(1), _bs(2)
+        bspec3 = _bs(3)
+    else:
+        bspec1 = batch_spec(mesh, 1, B)
+        bspec2 = batch_spec(mesh, 2, B)
+        bspec3 = batch_spec(mesh, 3, B)
+
+    params_sds, opt_sds, pspecs = sharded_params_struct(
+        cfg, mesh, zero_opt=zero_opt, dp_only=dp_only)
+    extras: Dict[str, Any] = {}
+    if cfg.encoder_layers:
+        # encoder output from the stub frontend path (B, F, d)
+        extras["encoder_out"] = sds((B, cfg.encoder_frames, cfg.d_model), dt,
+                                    _ns(mesh, bspec3))
+        extras["encoder_positions"] = sds((B, cfg.encoder_frames), jnp.int32,
+                                          _ns(mesh, bspec2))
+
+    if info["kind"] == "train":
+        T = S
+        args: Dict[str, Any] = {}
+        if cfg.num_prefix_embeddings:
+            Pv = cfg.num_prefix_embeddings
+            T = S - Pv
+            extras["prefix_embeds"] = sds((B, Pv, cfg.d_model), dt,
+                                          _ns(mesh, bspec3))
+            pos = sds((B, S), jnp.int32, _ns(mesh, bspec2))
+        else:
+            pos = sds((B, T), jnp.int32, _ns(mesh, bspec2))
+        tokens = sds((B, T), jnp.int32, _ns(mesh, bspec2))
+        return dict(step="train", params=params_sds, opt=opt_sds,
+                    args=(tokens, pos), extras=extras, pspecs=pspecs,
+                    tokens_per_step=B * S)
+
+    if info["kind"] == "prefill":
+        tokens = sds((B, S), jnp.int32, _ns(mesh, bspec2))
+        pos = sds((B, S), jnp.int32, _ns(mesh, bspec2))
+        dlp = sds((B, S), jnp.float32, _ns(mesh, bspec2))
+        u = sds((B, S), jnp.float32, _ns(mesh, bspec2))
+        dlen = sds((B,), jnp.int32, _ns(mesh, bspec1))
+        ll = sds((), jnp.float32, _ns(mesh, P()))
+        return dict(step="verify", params=params_sds, opt=None,
+                    args=(tokens, pos, dlp, u, dlen, ll), extras=extras,
+                    pspecs=pspecs, tokens_per_step=B * S)
+
+    # decode: ONE new token against a seq_len-deep cache
+    seq_shard = (B == 1)                    # long_500k: shard KV seq on data
+    cache_len = min(S, cfg.sliding_window) if (
+        cfg.sliding_window and shape_name == "long_500k") else S
+    caches = cache_struct(cfg, mesh, B, cache_len, seq_shard=seq_shard,
+                          kv_shard_hd=kv_shard_hd)
+    token = sds((B, 1), jnp.int32, _ns(mesh, bspec2))
+    pos = sds((B, 1), jnp.int32, _ns(mesh, bspec2))
+    start = sds((), jnp.int32, _ns(mesh, P()))
+    return dict(step="serve", params=params_sds, opt=None,
+                args=(token, pos, caches, start), extras=extras,
+                pspecs=pspecs, tokens_per_step=B)

@@ -1,0 +1,177 @@
+"""Step functions lowered by the dry-run and used by the drivers.
+
+- ``train_step``: forward + CE loss (+ MoE aux) + backward + AdamW update.
+- ``verify_step``: teacher-forced log-probs over a full batch — the
+  prefill-shaped SPEC-RL *verification* pass (prefill_32k shape).
+- ``serve_step``: ONE new token against a KV/SSM cache (decode shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.sampling import logprobs_of
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def _ce_naive(params, cfg, logits, tokens, positions):
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = (positions[..., -tokens.shape[1]:][:, 1:] >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _ce_chunked(params, cfg, hidden, tokens, positions, chunk: int = 1024):
+    """Unembedding-chunked cross entropy: never materialises (B, T, V).
+
+    The lm-head matmul + logsumexp + target gather run per T-chunk inside a
+    rematerialised scan, so peak memory is (B, chunk, V) instead of
+    (B, T, V) — the classic fix for vocab-dominated training memory.
+    """
+    from repro.models.model import _logits
+    B, T, d = hidden.shape
+    tgt = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    pos_t = positions[..., -T:]
+    mask = jnp.concatenate([(pos_t[:, 1:] >= 0), jnp.zeros_like(
+        pos_t[:, :1], bool)], axis=1).astype(jnp.float32)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    nch = T // chunk
+    h_c = jnp.moveaxis(hidden.reshape(B, nch, chunk, d), 1, 0)
+    t_c = jnp.moveaxis(tgt.reshape(B, nch, chunk), 1, 0)
+    m_c = jnp.moveaxis(mask.reshape(B, nch, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, t, m = xs
+        logits = _logits(params, cfg, h)                    # (B, chunk, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return carry + ((lse - tl) * m).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h_c, t_c, m_c))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig, *,
+                    ce_impl: str = "naive", ce_chunk: int = 1024,
+                    microbatch: int = 1, accum_dtype: str = "float32",
+                    grad_specs=None):
+    def loss_fn(params, tokens, positions, extras):
+        if ce_impl == "chunked":
+            _, aux = M.forward(params, cfg, tokens, positions,
+                               return_hidden=True, compute_logits=False,
+                               **extras)
+            loss = _ce_chunked(params, cfg, aux["hidden"], tokens, positions,
+                               ce_chunk)
+        else:
+            logits, aux = M.forward(params, cfg, tokens, positions, **extras)
+            loss = _ce_naive(params, cfg, logits, tokens, positions)
+        if "moe_lb_loss" in aux:
+            loss = loss + cfg.router_aux_coef * aux["moe_lb_loss"] \
+                + cfg.router_z_coef * aux["moe_z_loss"]
+        return loss
+
+    def train_step(params, opt_state, tokens, positions, **extras):
+        if microbatch > 1:
+            # gradient accumulation: activation residuals live for ONE
+            # microbatch at a time (B/microbatch rows), grads accumulate
+            def split(x):
+                return x.reshape(microbatch, x.shape[0] // microbatch,
+                                 *x.shape[1:])
+            xs = jax.tree.map(split, (tokens, positions, extras))
+
+            adt = jnp.dtype(accum_dtype)
+
+            def mb_body(g_acc, xs_mb):
+                t_mb, p_mb, e_mb = xs_mb
+                loss, g = jax.value_and_grad(loss_fn)(params, t_mb, p_mb,
+                                                      e_mb)
+                if grad_specs is not None:
+                    # keep per-microbatch grads sharded like the (ZeRO)
+                    # optimizer moments: GSPMD lowers the psum to
+                    # reduce-scatter instead of a full all-reduce
+                    g = jax.lax.with_sharding_constraint(g, grad_specs)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return g_acc, loss
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            if grad_specs is not None:
+                g0 = jax.lax.with_sharding_constraint(g0, grad_specs)
+            grads, losses = jax.lax.scan(mb_body, g0, xs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                      positions, extras)
+        params, opt_state, info = adamw.update(ocfg, params, grads, opt_state)
+        return params, opt_state, loss, info["grad_norm"]
+
+    return train_step
+
+
+def _score_chunked(params, cfg, hidden, tokens, chunk: int = 1024):
+    """Chunked log-prob extraction: the (B, T, V) logits tensor is never
+    materialised — lm-head matmul + log-softmax + gather run per T-chunk
+    (mirrors _ce_chunked; §Perf iteration C for the verification pass)."""
+    from repro.models.model import _logits
+    B, T, d = hidden.shape
+    tgt = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    nch = T // chunk
+    h_c = jnp.moveaxis(hidden.reshape(B, nch, chunk, d), 1, 0)
+    t_c = jnp.moveaxis(tgt.reshape(B, nch, chunk), 1, 0)
+
+    def body(_, xs):
+        h, t = xs
+        logits = _logits(params, cfg, h)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return 0, tl - lse
+
+    _, lps = jax.lax.scan(body, 0, (h_c, t_c))       # (nch, B, chunk)
+    lp_next = jnp.moveaxis(lps, 0, 1).reshape(B, T)  # lp of token t+1 at t
+    return jnp.concatenate([jnp.zeros_like(lp_next[:, :1]),
+                            lp_next[:, :-1]], axis=1)
+
+
+def make_verify_step(cfg: ModelConfig, *, score_impl: str = "naive",
+                     score_chunk: int = 1024):
+    """SPEC-RL verification at scale: one scoring pass over prompt⊕draft."""
+    def verify_step(params, tokens, positions, draft_logprobs, u, draft_len,
+                    log_lenience, **extras):
+        if score_impl == "chunked":
+            _, aux = M.forward(params, cfg, tokens, positions,
+                               return_hidden=True, compute_logits=False,
+                               **extras)
+            lp = _score_chunked(params, cfg, aux["hidden"], tokens,
+                                score_chunk)
+        else:
+            logits, _ = M.forward(params, cfg, tokens, positions, **extras)
+            lp = logprobs_of(logits[:, :-1], tokens[:, 1:])
+            lp = jnp.concatenate([jnp.zeros_like(lp[:, :1]), lp], axis=1)
+        # fused accept/first-reject (oracle impl lowers everywhere)
+        from repro.kernels.spec_verify.ref import spec_verify_ref
+        n = spec_verify_ref(lp, draft_logprobs, u, draft_len, log_lenience)
+        return n, lp
+
+    return verify_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, position, caches, cache_start, **extras):
+        logits, caches = M.decode_step(params, cfg, token, position, caches,
+                                       cache_start, **extras)
+        return logits, caches
+
+    return serve_step

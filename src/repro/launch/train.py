@@ -1,0 +1,70 @@
+"""Distributed training launcher.
+
+On real hardware this runs the RLVR trainer with parameters laid out by the
+partition rules over the production mesh.  On this CPU container it runs
+single-device (mesh (1,1)) — the full-mesh path is proven by dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --smoke --steps 4          # reduced variant, CPU
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import SpecConfig
+from repro.data.dataset import PromptDataset
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.optim.adamw import AdamWConfig
+from repro.rewards.mathgen import MathTaskConfig, generate_problems
+from repro.rl.trainer import RLConfig, Trainer
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=sorted(ARCH_IDS), default="qwen3-1.7b")
+    p.add_argument("--algo", choices=["grpo", "ppo", "dapo"], default="grpo")
+    p.add_argument("--variant", default="spec",
+                   choices=["spec", "off", "random", "delayed", "full"])
+    p.add_argument("--lenience", type=float, default=math.e ** 0.5)
+    p.add_argument("--steps", type=int, default=10)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-sized) of the same family")
+    p.add_argument("--group-size", type=int, default=4)
+    p.add_argument("--prompts-per-batch", type=int, default=4)
+    p.add_argument("--max-new-tokens", type=int, default=10)
+    p.add_argument("--lr", type=float, default=5e-7)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced(vocab_size=max(VOCAB_SIZE, 64))
+    if cfg.vocab_size < VOCAB_SIZE:
+        cfg = cfg.replace(vocab_size=VOCAB_SIZE)
+
+    problems = generate_problems(MathTaskConfig(num_problems=16,
+                                                max_operand=9))
+    ds = PromptDataset(problems, max_prompt_len=10)
+    rl = RLConfig(algo=args.algo, group_size=args.group_size,
+                  prompts_per_batch=args.prompts_per_batch,
+                  max_new_tokens=args.max_new_tokens,
+                  optim=AdamWConfig(lr=args.lr))
+    spec = SpecConfig(variant=args.variant, lenience=args.lenience,
+                      verify_impl="auto")
+    tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"params={sum(x.size for x in jax.tree.leaves(tr.params)) / 1e6:.1f}M")
+    for _ in range(args.steps):
+        m = tr.train_step()
+        print(f"step {m['step']:3.0f} reward={m['reward_mean']:.3f} "
+              f"gen_tok={m.get('n_generated', 0):6.0f} "
+              f"reused={m.get('n_reused', 0):6.0f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

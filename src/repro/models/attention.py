@@ -1,0 +1,311 @@
+"""Attention: GQA/MQA/MHA with qk-norm, qkv-bias, RoPE, sliding window,
+cross-attention, and DeepSeek-V3 MLA (multi-head latent attention).
+
+Position-based masking
+----------------------
+Every token carries an explicit integer position; padding slots carry -1.
+A query at position ``pq`` may attend to a key at position ``pk`` iff::
+
+    pk >= 0  and  pk <= pq          (causal)
+    and pq - pk < window            (if sliding window > 0)
+
+This one rule serves training, left-padded prefill and single-token decode,
+so prefill+decode is provably equivalent to a full forward (tested).
+
+KV caches are dense ``(B, Hkv, S, D)`` buffers plus a ``pos`` array (B, S)
+holding each slot's position (-1 = empty).  TPU adaptation note: no paged KV
+— dense, statically-shaped caches are what XLA/TPU wants (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_dense, apply_rmsnorm, apply_rope, make_dense,
+                     make_rmsnorm, split_keys)
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ core math
+
+
+def dot_product_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                          causal: bool = True, impl: str = "naive",
+                          block_k: int = 1024) -> jnp.ndarray:
+    """Grouped-query attention with position-based masking.
+
+    q: (B, Hq, T, D); k/v: (B, Hkv, S, D); q_pos: (B, T); k_pos: (B, S).
+    impl='blocked' streams KV chunks through an online softmax (flash
+    attention expressed in XLA) so the (T, S) score matrix is never
+    materialised — the pure-JAX analogue of kernels/flash_attention, used
+    when the Pallas kernel is unavailable (dry-run / CPU).
+    """
+    if impl == "blocked" and k.shape[2] > block_k:
+        return _blocked_attention(q, k, v, q_pos, k_pos, window=window,
+                                  causal=causal, block_k=block_k)
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, T, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = k_pos[:, None, None, None, :] >= 0
+    if causal:
+        mask &= k_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+    if window > 0:
+        mask &= (q_pos[:, None, None, :, None] - k_pos[:, None, None, None, :]) < window
+    # Rows whose query is padding produce garbage that is masked downstream.
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    # Fully-masked rows: softmax of all -inf -> uniform garbage; zero them.
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    w = jnp.where(any_valid, w, 0.0)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, v.shape[-1])
+
+
+def _blocked_attention(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
+                       block_k: int) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks (peak memory ~ (T, block_k))."""
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    pad = (-S) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nch = k.shape[2] // block_k
+    qg = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nch, block_k, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nch, block_k, Dv), 2, 0)
+    pc = jnp.moveaxis(k_pos.reshape(B, nch, block_k), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry                                   # (B,Hkv,G,T,1/Dv)
+        k_b, v_b, p_b = xs
+        s = jnp.einsum("bhgtd,bhsd->bhgts", qg,
+                       k_b.astype(jnp.float32)) * scale
+        mask = p_b[:, None, None, None, :] >= 0
+        if causal:
+            mask &= p_b[:, None, None, None, :] <= \
+                q_pos[:, None, None, :, None]
+        if window > 0:
+            mask &= (q_pos[:, None, None, :, None]
+                     - p_b[:, None, None, None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhgts,bhsd->bhgtd", p,
+                                      v_b.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, Hkv, G, T, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, T, 1), jnp.float32),
+            jnp.zeros((B, Hkv, G, T, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, pc))
+    out = acc / jnp.where(l > 0, l, 1.0)
+    return out.reshape(B, Hq, T, Dv)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    if cfg.attention_kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+            "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _cache_write(buf, update, start):
+    """Write ``update`` (length T) into ``buf`` at slot ``start`` on the seq axis."""
+    T = update.shape[-2] if update.ndim == 4 else update.shape[-2]
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, update.astype(buf.dtype), start, axis=-2)
+
+
+# ------------------------------------------------------------------ GQA layer
+
+
+def make_gqa(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": make_dense(ks[0], cfg.d_model, cfg.num_heads * hd, cfg.qkv_bias, dtype),
+        "wk": make_dense(ks[1], cfg.d_model, cfg.num_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wv": make_dense(ks[2], cfg.d_model, cfg.num_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wo": make_dense(ks[3], cfg.num_heads * hd, cfg.d_model, False, dtype,
+                         scale=1.0 / (cfg.num_heads * hd) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = make_rmsnorm(hd, dtype)
+        p["k_norm"] = make_rmsnorm(hd, dtype)
+    return p
+
+
+def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
+              causal=True, kv_x=None, kv_positions=None,
+              use_pallas: bool = False):
+    """GQA attention.
+
+    x: (B, T, d).  With ``cache`` given, writes K/V at ``cache_start`` and
+    attends over the whole cache (decode / incremental prefill).  With
+    ``kv_x`` given, performs cross-attention (no causal mask, no rope on kv
+    unless positions supplied).
+    """
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = apply_dense(p["wq"], x).reshape(B, T, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    src = kv_x if kv_x is not None else x
+    S = src.shape[1]
+    k = apply_dense(p["wk"], src).reshape(B, S, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = apply_dense(p["wv"], src).reshape(B, S, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = apply_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if kv_x is None:
+        kv_pos = positions
+        if cfg.pos_embed == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, kv_pos, cfg.rope_theta)
+    else:
+        kv_pos = kv_positions
+        # cross-attention: no rope (whisper style learned enc positions)
+
+    new_cache = None
+    if cache is not None:
+        k_all = _cache_write(cache["k"], k, cache_start)
+        v_all = _cache_write(cache["v"], v, cache_start)
+        pos_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], kv_pos.astype(jnp.int32), cache_start, axis=-1)
+        new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
+        k, v, kv_pos = k_all, v_all, pos_all
+
+    if use_pallas and kv_x is None:
+        # Pallas flash kernel (TPU; interpret mode in tests).  Same schedule
+        # as _blocked_attention but with MXU-aligned VMEM tiles.
+        from repro.kernels.flash_attention.ops import flash_attention
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+        out = flash_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                              positions, kv_pos, causal=causal,
+                              window=cfg.sliding_window, impl=impl,
+                              block_q=min(128, q.shape[2]),
+                              block_k=min(128, k.shape[2]))
+    else:
+        out = dot_product_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                                    positions, kv_pos,
+                                    window=cfg.sliding_window, causal=causal,
+                                    impl=cfg.attn_impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, cfg.num_heads * hd)
+    return apply_dense(p["wo"], out.astype(x.dtype)), new_cache
+
+
+# ------------------------------------------------------------------ MLA layer
+
+
+def make_mla(key, cfg: ModelConfig, dtype):
+    """DeepSeek-V3 multi-head latent attention.
+
+    q path:  d -> q_lora -> norm -> H*(nope+rope)
+    kv path: d -> (kv_lora + shared k_rope); kv_lora -> norm -> H*(nope + v)
+    Cache stores only the compressed latent + shared rope key.
+    """
+    ks = split_keys(key, 6)
+    H = cfg.num_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {
+        "wkv_a": make_dense(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_head_dim, False, dtype),
+        "kv_norm": make_rmsnorm(cfg.kv_lora_rank, dtype),
+        "wkv_b": make_dense(ks[3], cfg.kv_lora_rank,
+                            H * (cfg.qk_nope_head_dim + cfg.v_head_dim), False, dtype),
+        "wo": make_dense(ks[4], H * cfg.v_head_dim, cfg.d_model, False, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = make_dense(ks[0], cfg.d_model, cfg.q_lora_rank, False, dtype)
+        p["q_norm"] = make_rmsnorm(cfg.q_lora_rank, dtype)
+        p["wq_b"] = make_dense(ks[1], cfg.q_lora_rank, H * qd, False, dtype)
+    else:
+        p["wq"] = make_dense(ks[0], cfg.d_model, H * qd, False, dtype)
+    return p
+
+
+def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
+              causal=True):
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        q = apply_dense(p["wq_b"], apply_rmsnorm(p["q_norm"],
+                                                 apply_dense(p["wq_a"], x), cfg.norm_eps))
+    else:
+        q = apply_dense(p["wq"], x)
+    q = q.reshape(B, T, H, nd + rd).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = apply_dense(p["wkv_a"], x)
+    ckv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    ckv = apply_rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, None, :, :], positions, cfg.rope_theta)  # (B,1,T,rd)
+
+    kv_pos = positions
+    new_cache = None
+    if cache is not None:
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_start, axis=1)
+        krope_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype), cache_start, axis=1)
+        pos_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), cache_start, axis=-1)
+        new_cache = {"ckv": ckv_all, "krope": krope_all, "pos": pos_all}
+        ckv, k_rope, kv_pos = ckv_all, krope_all[:, None], pos_all
+
+    # decompress latent -> per-head K_nope and V
+    kv = apply_dense(p["wkv_b"], ckv.astype(x.dtype))
+    S = kv.shape[1]
+    kv = kv.reshape(B, S, H, nd + vd).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope.astype(x.dtype),
+                                                  (B, H, S, rd))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = dot_product_attention(qfull, k, v, positions, kv_pos,
+                                window=0, causal=causal, impl=cfg.attn_impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * vd)
+    return apply_dense(p["wo"], out.astype(x.dtype)), new_cache
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+def make_attention(key, cfg: ModelConfig, dtype):
+    if cfg.attention_kind == "mla":
+        return make_mla(key, cfg, dtype)
+    return make_gqa(key, cfg, dtype)
+
+
+def apply_attention(p, cfg: ModelConfig, x, positions, **kw):
+    if cfg.attention_kind == "mla":
+        kw.pop("kv_x", None), kw.pop("kv_positions", None)
+        kw.pop("use_pallas", None)   # MLA uses the jnp path (mixed head dims)
+        return apply_mla(p, cfg, x, positions, **kw)
+    return apply_gqa(p, cfg, x, positions, **kw)

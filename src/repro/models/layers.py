@@ -1,0 +1,112 @@
+"""Primitive layers: inits, norms, dense, rotary embeddings, activations.
+
+Parameters are plain nested dicts of ``jnp.ndarray`` (pytrees).  Sharding is
+applied externally by path-based partition rules
+(:mod:`repro.distributed.sharding`), so inits stay mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- init
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def make_dense(key, in_dim: int, out_dim: int, bias: bool = False, dtype=jnp.float32,
+               scale: float | None = None):
+    p = {"kernel": dense_init(key, in_dim, out_dim, dtype, scale)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def apply_dense(p, x):
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------- norms
+
+
+def make_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def apply_rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def make_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------- act
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------------- rope
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (B, H, T, D) with even D; positions: (B, T) int32 (may contain -1 for
+    padding rows — rotation there is irrelevant because those positions are
+    masked out of attention).
+    """
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    ang = positions.astype(jnp.float32)[:, None, :, None] * freqs  # (B,1,T,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- misc
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

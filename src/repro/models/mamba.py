@@ -1,0 +1,137 @@
+"""Mamba (S6) block, as interleaved inside Jamba.
+
+Training / prefill use a `lax.scan` over time with masked updates so that
+left-padded positions leave the SSM state untouched (dt is forced to zero and
+conv inputs are zeroed at invalid positions).  Decode keeps a constant-size
+cache: the last ``d_conv-1`` conv inputs and the (d_inner, d_state) SSM state.
+
+TPU adaptation: the recurrence is a sequential scan (time-major) whose state
+lives in registers/VMEM; there is no CUDA-style parallel selective-scan here —
+on TPU the sequential scan with fused elementwise updates is the idiomatic
+form (see also kernels/rwkv6_wkv for the Pallas treatment of this pattern).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_dense, apply_rmsnorm, make_dense, make_rmsnorm, split_keys
+
+
+def make_mamba(key, cfg: ModelConfig, dtype):
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, dc = cfg.resolved_dt_rank, cfg.mamba_d_conv
+    ks = split_keys(key, 6)
+    p = {
+        "in_proj": make_dense(ks[0], d, 2 * di, False, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": make_dense(ks[2], di, dtr + 2 * ds, False, dtype),
+        "dt_proj": make_dense(ks[3], dtr, di, True, dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                          (di, ds))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": make_dense(ks[4], di, d, False, dtype, scale=1.0 / math.sqrt(di)),
+        # Jamba normalises dt/B/C before the scan.
+        "dt_norm": make_rmsnorm(dtr, dtype),
+        "b_norm": make_rmsnorm(ds, dtype),
+        "c_norm": make_rmsnorm(ds, dtype),
+    }
+    return p
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, ds), jnp.float32),
+    }
+
+
+def _ssm_inputs(p, cfg: ModelConfig, xc, valid):
+    """Shared projection math.  xc: post-conv activations (..., di)."""
+    dtr, ds = cfg.resolved_dt_rank, cfg.mamba_d_state
+    proj = apply_dense(p["x_proj"], xc)
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = apply_rmsnorm(p["dt_norm"], dt, cfg.norm_eps)
+    Bc = apply_rmsnorm(p["b_norm"], Bc, cfg.norm_eps).astype(jnp.float32)
+    Cc = apply_rmsnorm(p["c_norm"], Cc, cfg.norm_eps).astype(jnp.float32)
+    dt = jax.nn.softplus(apply_dense(p["dt_proj"], dt).astype(jnp.float32))
+    dt = dt * valid[..., None].astype(jnp.float32)     # pads: no state update
+    return dt, Bc, Cc
+
+
+def apply_mamba(p, cfg: ModelConfig, x, positions, *, cache=None):
+    """x: (B, T, d); positions: (B, T) with -1 for padding.
+
+    Returns (y, new_cache) — new_cache is None unless ``cache`` was given,
+    in which case T must be 1 (decode) or the cache is rebuilt from the full
+    sequence (prefill-with-cache).
+    """
+    B, T, d = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    valid = positions >= 0
+
+    xz = apply_dense(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = xin * valid[..., None].astype(xin.dtype)
+
+    # causal depthwise conv
+    if cache is not None and T == 1:
+        hist = jnp.concatenate([cache["conv"].astype(xin.dtype), xin], axis=1)  # (B,dc,di)
+        xc = jnp.einsum("bcd,cd->bd", hist, p["conv_w"].astype(xin.dtype))[:, None]
+        new_conv = hist[:, 1:]
+    else:
+        pad = jnp.zeros((B, dc - 1, di), xin.dtype)
+        hist = jnp.concatenate([pad, xin], axis=1)              # (B, T+dc-1, di)
+        windows = jnp.stack([hist[:, i:i + T, :] for i in range(dc)], axis=-1)
+        xc = jnp.einsum("btdc,cd->btd", windows, p["conv_w"].astype(xin.dtype))
+        new_conv = hist[:, T:] if dc > 1 else jnp.zeros((B, 0, di), xin.dtype)
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))
+
+    dt, Bc, Cc = _ssm_inputs(p, cfg, xc, valid)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di, ds)
+    u = xc.astype(jnp.float32)
+
+    s0 = cache["ssm"] if cache is not None else jnp.zeros((B, di, ds), jnp.float32)
+
+    def step(s, inp):
+        # discretise per step: dA_t (B,di,ds) never materialises over T
+        dt_t, B_t, C_t, u_t = inp
+        dA_t = jnp.exp(dt_t[..., None] * A)
+        s = dA_t * s + (dt_t * u_t)[..., None] * B_t[..., None, :]
+        y = jnp.einsum("bds,bs->bd", s, C_t)
+        return s, y
+
+    def tmajor(t):
+        return jnp.moveaxis(t, 1, 0)
+
+    xs = (tmajor(dt), tmajor(Bc), tmajor(Cc), tmajor(u))
+    chunk = min(cfg.scan_chunk, T)
+    if T > chunk and T % chunk == 0:
+        # chunked + rematerialised: only chunk-boundary states are saved for
+        # the backward pass (the standard memory fix for selective scans —
+        # without it training residuals are T x (B, di, ds)).
+        nch = T // chunk
+
+        @jax.checkpoint
+        def chunk_body(s, xs_c):
+            return jax.lax.scan(step, s, xs_c)
+
+        xs_c = jax.tree.map(lambda a: a.reshape(nch, chunk, *a.shape[1:]), xs)
+        s_final, ys = jax.lax.scan(chunk_body, s0, xs_c)
+        ys = ys.reshape(T, *ys.shape[2:])
+    else:
+        s_final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                     # (B,T,di)
+    y = y + u * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = apply_dense(p["out_proj"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": s_final}
+    return out, new_cache

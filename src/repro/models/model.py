@@ -1,0 +1,185 @@
+"""Top-level language model: embeddings, trunk, head, optional encoder
+(whisper), optional MTP head (deepseek-v3), modality-frontend hooks.
+
+Three entry points (all pure functions over a params pytree):
+
+``forward``      training / scoring: full-sequence logits, no cache.
+``prefill``      builds decode caches from a (left-padded) prompt.
+``decode_step``  one token against the caches.
+
+Frontends (audio frames / vision patches) are STUBS per the assignment: the
+engine supplies precomputed embeddings of shape (B, P, d_model); here they are
+simply placed in front of the token embeddings (vision) or consumed by the
+encoder (audio).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (apply_trunk, init_trunk_cache, make_trunk,
+                     signature_runs)
+from .config import ModelConfig
+from .layers import (apply_dense, apply_rmsnorm, embed_init, make_dense,
+                     make_rmsnorm, softcap, split_keys)
+from .moe import apply_ffn
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    dtype = _dt(cfg)
+    ks = split_keys(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "trunk": make_trunk(ks[1], cfg, dtype),
+        "final_norm": make_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_dense(ks[2], cfg.d_model, cfg.vocab_size,
+                                       False, dtype)
+    if cfg.pos_embed == "learned":
+        params["pos_table"] = embed_init(ks[3], cfg.max_seq_len, cfg.d_model, dtype)
+    if cfg.encoder_layers:
+        enc_cfg = cfg.replace(num_layers=cfg.encoder_layers, cross_attention=False,
+                              num_experts=0, block_kind="attn", attn_period=0)
+        params["encoder"] = {
+            "trunk": make_trunk(ks[4], enc_cfg, dtype),
+            "final_norm": make_rmsnorm(cfg.d_model, dtype),
+        }
+    if cfg.mtp:
+        from .blocks import make_block
+        params["mtp"] = {
+            "proj": make_dense(ks[5], 2 * cfg.d_model, cfg.d_model, False, dtype),
+            "block": make_block(ks[6], cfg, ("attn", False, False), dtype),
+            "norm": make_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def _embed(params, cfg: ModelConfig, tokens, positions):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.pos_embed == "learned":
+        pos = jnp.clip(positions, 0, cfg.max_seq_len - 1)
+        x = x + params["pos_table"][pos].astype(x.dtype)
+    valid = (positions >= 0)[..., None]
+    return jnp.where(valid, x, 0.0)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = apply_dense(params["lm_head"], x)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def encode(params, cfg: ModelConfig, frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Whisper-style encoder over stub frame embeddings (B, F, d_model).
+
+    Returns (encoder_out, encoder_positions)."""
+    enc_cfg = cfg.replace(num_layers=cfg.encoder_layers, cross_attention=False,
+                          num_experts=0, block_kind="attn", attn_period=0)
+    B, F, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    x, _, _ = apply_trunk(params["encoder"]["trunk"], enc_cfg,
+                          frames.astype(jnp.dtype(cfg.dtype)), pos, causal=False)
+    x = apply_rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+    return x, pos
+
+
+def forward(params, cfg: ModelConfig, tokens, positions, *,
+            encoder_out=None, encoder_positions=None, prefix_embeds=None,
+            use_pallas: bool = False, return_hidden: bool = False,
+            return_mtp: bool = False, compute_logits: bool = True):
+    """Full-sequence teacher-forced forward.
+
+    tokens: (B, T) int32; positions: (B, T) with -1 on padding.
+    prefix_embeds: optional (B, P, d_model) — vision patches; caller's
+    positions must already cover P + T (pass positions for the FULL sequence).
+    Returns (logits over token slots only, aux dict).
+    """
+    x = _embed(params, cfg, tokens, positions if prefix_embeds is None
+               else positions[:, prefix_embeds.shape[1]:])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, _, aux = apply_trunk(params["trunk"], cfg, x, positions,
+                            encoder_out=encoder_out,
+                            encoder_positions=encoder_positions,
+                            use_pallas=use_pallas)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    logits = _logits(params, cfg, x) if compute_logits else None
+    if return_hidden:
+        aux["hidden"] = x
+    if cfg.mtp and return_mtp:
+        aux["mtp_logits"] = _mtp_logits(params, cfg, x, tokens, positions if
+                                        prefix_embeds is None else
+                                        positions[:, prefix_embeds.shape[1]:])
+    return logits, aux
+
+
+def _mtp_logits(params, cfg: ModelConfig, hidden, tokens, positions):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, emb_{t+1})."""
+    from .blocks import apply_block
+    emb_next = jnp.concatenate(
+        [params["embed"][tokens[:, 1:]],
+         jnp.zeros_like(params["embed"][tokens[:, :1]])], axis=1).astype(hidden.dtype)
+    h = apply_dense(params["mtp"]["proj"],
+                    jnp.concatenate([apply_rmsnorm(params["mtp"]["norm"], hidden,
+                                                   cfg.norm_eps), emb_next], axis=-1))
+    h, _, _ = apply_block(params["mtp"]["block"], cfg, ("attn", False, False),
+                          h, positions)
+    return _logits(params, cfg, h)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return init_trunk_cache(cfg, batch, max_len, jnp.dtype(cfg.dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions, caches, *,
+            encoder_out=None, encoder_positions=None, prefix_embeds=None,
+            use_pallas: bool = False):
+    """Run the prompt through the model, filling caches at slots [0, T).
+
+    Returns (logits (B, T, V), new_caches)."""
+    x = _embed(params, cfg, tokens, positions if prefix_embeds is None
+               else positions[:, prefix_embeds.shape[1]:])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, caches, _ = apply_trunk(params["trunk"], cfg, x, positions,
+                               caches=caches, cache_start=0,
+                               encoder_out=encoder_out,
+                               encoder_positions=encoder_positions,
+                               use_pallas=use_pallas)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, *,
+                encoder_out=None, encoder_positions=None,
+                use_pallas: bool = False):
+    """One decode step.
+
+    token: (B, 1); position: (B, 1); cache_start: scalar int32 — slot to write.
+    Returns (logits (B, 1, V), new_caches)."""
+    x = _embed(params, cfg, token, position)
+    x, caches, _ = apply_trunk(params["trunk"], cfg, x, position,
+                               caches=caches, cache_start=cache_start,
+                               encoder_out=encoder_out,
+                               encoder_positions=encoder_positions,
+                               use_pallas=use_pallas)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), caches

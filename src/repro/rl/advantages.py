@@ -1,0 +1,74 @@
+"""Advantage estimators: GAE (PPO), group-relative (GRPO), DAPO.
+
+All return token-level advantages (B, N) masked by the response mask.
+The task is bandit-like (single terminal verifiable reward), mirroring the
+paper's RLVR setting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_relative_advantages(rewards, group_size: int, *, use_std: bool = True,
+                              eps: float = 1e-6):
+    """GRPO: z-score within each group of ``group_size`` rollouts.
+
+    rewards: (B,) with B = num_prompts * group_size, groups contiguous.
+    Returns (B,) scalar advantages (broadcast over tokens by the caller).
+    """
+    B = rewards.shape[0]
+    g = rewards.reshape(B // group_size, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    adv = g - mean
+    if use_std:
+        adv = adv / (g.std(axis=1, keepdims=True) + eps)
+    return adv.reshape(B)
+
+
+def gae_advantages(rewards_tok, values, mask, *, gamma: float = 1.0,
+                   lam: float = 0.95):
+    """PPO GAE over token sequences.
+
+    rewards_tok: (B, N) per-token rewards (terminal reward at last valid
+    token); values: (B, N) critic estimates; mask: (B, N) response validity.
+    Returns (advantages (B, N), returns (B, N)).
+    """
+    B, N = rewards_tok.shape
+    m = mask.astype(jnp.float32)
+    v = values * m
+    # v_{t+1}: next valid value, 0 beyond the end
+    v_next = jnp.concatenate([v[:, 1:], jnp.zeros_like(v[:, :1])], axis=1)
+    delta = (rewards_tok + gamma * v_next - v) * m
+
+    def step(carry, x):
+        d_t, m_t = x
+        carry = d_t + gamma * lam * m_t * carry
+        return carry, carry
+
+    # scan right-to-left: advantage_t = delta_t + gamma*lam*advantage_{t+1}
+    d_rev = jnp.moveaxis(delta[:, ::-1], 1, 0)
+    # mask of "next token exists": shift mask left then reverse
+    m_next = jnp.concatenate([m[:, 1:], jnp.zeros_like(m[:, :1])], axis=1)
+    m_rev = jnp.moveaxis(m_next[:, ::-1], 1, 0)
+    _, adv_rev = jax.lax.scan(step, jnp.zeros((B,), jnp.float32),
+                              (d_rev, m_rev))
+    adv = jnp.moveaxis(adv_rev, 0, 1)[:, ::-1] * m
+    returns = adv + v
+    return adv, returns
+
+
+def terminal_reward_to_tokens(rewards, lengths, N: int):
+    """Place the scalar reward at the last generated token: (B,) -> (B, N)."""
+    B = rewards.shape[0]
+    j = jnp.arange(N, dtype=jnp.int32)[None, :]
+    last = jnp.maximum(lengths - 1, 0)[:, None]
+    return jnp.where(j == last, rewards[:, None], 0.0)
+
+
+def whiten(adv, mask, eps: float = 1e-6):
+    m = mask.astype(jnp.float32)
+    count = jnp.maximum(m.sum(), 1.0)
+    mean = (adv * m).sum() / count
+    var = ((adv - mean) ** 2 * m).sum() / count
+    return (adv - mean) * m / jnp.sqrt(var + eps)

@@ -1,0 +1,33 @@
+"""PPO critic: same trunk family as the policy with a scalar value head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.generate import positions_from_mask
+from repro.models.blocks import apply_trunk, make_trunk
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_dense, apply_rmsnorm, embed_init,
+                                 make_dense, make_rmsnorm, split_keys)
+
+
+def init_critic(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 4)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "trunk": make_trunk(ks[1], cfg, dtype),
+        "final_norm": make_rmsnorm(cfg.d_model, dtype),
+        "value_head": make_dense(ks[2], cfg.d_model, 1, True, dtype),
+    }
+
+
+def forward_values(params, cfg: ModelConfig, tokens, mask):
+    """tokens: (B, L); mask: (B, L).  Returns (B, L) value estimates."""
+    positions = positions_from_mask(mask)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = jnp.where(mask[..., None], x, 0.0)
+    x, _, _ = apply_trunk(params["trunk"], cfg, x, positions)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    v = apply_dense(params["value_head"], x)[..., 0].astype(jnp.float32)
+    return jnp.where(mask, v, 0.0)

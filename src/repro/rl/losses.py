@@ -1,0 +1,72 @@
+"""Clipped-surrogate policy loss, critic loss, KL penalty, diagnostics.
+
+Covers GRPO / PPO (clip 0.2, c=3) and DAPO (asymmetric clip high=0.28,
+c=10, token-level aggregation) per Appendix A.1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PolicyLossConfig:
+    clip_low: float = 0.2
+    clip_high: float = 0.2
+    clip_c: float = 3.0               # dual-clip constant (DAPO c=10)
+    agg: str = "seq"                  # seq (GRPO/PPO) | token (DAPO)
+    kl_coef: float = 0.0              # GRPO: 1e-4 vs reference policy
+    entropy_coef: float = 0.0
+
+
+def masked_mean(x, mask, axis=None, eps: float = 1e-8):
+    m = mask.astype(jnp.float32)
+    return (x * m).sum(axis) / jnp.maximum(m.sum(axis), eps)
+
+
+def policy_loss(lp_new, lp_old, advantages, mask, cfg: PolicyLossConfig
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """PPO-style clipped surrogate.
+
+    lp_new/lp_old: (B, N) token log-probs; advantages: (B, N); mask: (B, N).
+    """
+    ratio = jnp.exp(lp_new - lp_old)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_low, 1.0 + cfg.clip_high)
+    s1 = ratio * advantages
+    s2 = clipped * advantages
+    surrogate = jnp.minimum(s1, s2)
+    # dual clip (large negative advantage protection)
+    surrogate = jnp.where(advantages < 0,
+                          jnp.maximum(surrogate, cfg.clip_c * advantages),
+                          surrogate)
+    if cfg.agg == "token":
+        loss = -masked_mean(surrogate, mask)
+    else:  # per-sequence mean, then batch mean
+        seq = masked_mean(surrogate, mask, axis=1)
+        loss = -seq.mean()
+    clip_frac = masked_mean(
+        (jnp.abs(ratio - 1.0) > jnp.minimum(cfg.clip_low, cfg.clip_high))
+        .astype(jnp.float32), mask)
+    approx_kl = masked_mean(lp_old - lp_new, mask)      # E[log p_old/p_new]
+    return loss, {"clip_frac": clip_frac, "approx_kl": approx_kl,
+                  "ratio_mean": masked_mean(ratio, mask)}
+
+
+def kl_to_reference(lp_new, lp_ref, mask):
+    """k3 estimator of KL(pi || ref): exp(r) - r - 1, r = lp_ref - lp_new."""
+    r = lp_ref - lp_new
+    return masked_mean(jnp.exp(r) - r - 1.0, mask)
+
+
+def value_loss(values, returns, old_values, mask, clip: float = 0.2):
+    v_clip = old_values + jnp.clip(values - old_values, -clip, clip)
+    l1 = jnp.square(values - returns)
+    l2 = jnp.square(v_clip - returns)
+    return 0.5 * masked_mean(jnp.maximum(l1, l2), mask)
+
+
+def entropy_bonus(entropy, mask):
+    return masked_mean(entropy, mask)

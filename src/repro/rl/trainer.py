@@ -1,0 +1,350 @@
+"""RLVR trainer: GRPO / PPO / DAPO with SPEC-RL as a drop-in rollout stage.
+
+Pipeline per step (mirrors veRL's stage order, Table 4 of the paper):
+  [verification] -> [rollout] -> [assembly]   (repro.core.rollout)
+  -> reward -> old-log-probs -> (values) -> adv
+  -> (update-critic) -> update-actor
+
+SPEC-RL touches ONLY the first three stages; everything downstream is the
+standard algorithm — that is the paper's central compatibility claim, and the
+trainer enforces it structurally (the rollout variant is a constructor
+argument the update path never sees).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import random
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RolloutCache, SpecConfig, rollout
+from repro.core.lenience import FixedLenience
+from repro.core.spec_rollout import RolloutBatch
+from repro.data.dataset import PromptBatch, PromptDataset
+from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.engine.generate import GenerateConfig, positions_from_mask, score
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.rewards.verifier import batch_rewards
+
+from .advantages import (gae_advantages, group_relative_advantages,
+                         terminal_reward_to_tokens, whiten)
+from .critic import forward_values, init_critic
+from .losses import (PolicyLossConfig, entropy_bonus, kl_to_reference,
+                     masked_mean, policy_loss, value_loss)
+
+
+@dataclass(frozen=True)
+class RLConfig:
+    algo: str = "grpo"                # grpo|ppo|dapo
+    group_size: int = 4
+    prompts_per_batch: int = 8
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    top_p: float = 1.0
+    optim: adamw.AdamWConfig = adamw.AdamWConfig(lr=5e-7)
+    critic_optim: adamw.AdamWConfig = adamw.AdamWConfig(lr=1e-5)
+    gamma: float = 1.0
+    gae_lambda: float = 0.95
+    whiten_adv: bool = False
+    dynamic_sampling: bool = True     # DAPO only
+    max_resample_rounds: int = 3
+    entropy_coef: float = 0.0
+
+    def policy_cfg(self) -> PolicyLossConfig:
+        if self.algo == "dapo":
+            return PolicyLossConfig(clip_low=0.2, clip_high=0.28, clip_c=10.0,
+                                    agg="token", kl_coef=0.0,
+                                    entropy_coef=self.entropy_coef)
+        if self.algo == "grpo":
+            return PolicyLossConfig(clip_low=0.2, clip_high=0.2, clip_c=3.0,
+                                    agg="seq", kl_coef=1e-4,
+                                    entropy_coef=self.entropy_coef)
+        return PolicyLossConfig(clip_low=0.2, clip_high=0.2, clip_c=3.0,
+                                agg="seq", kl_coef=0.0,
+                                entropy_coef=self.entropy_coef)
+
+
+# ------------------------------------------------------------------ jit steps
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "resp_start",
+                                             "temperature", "top_p"))
+def _old_logprobs(params, cfg, full_tokens, full_mask, resp_start: int,
+                  temperature: float, top_p: float):
+    sc = score(params, cfg, full_tokens, full_mask, temperature=temperature,
+               top_p=top_p, return_entropy=True)
+    return (sc["logprobs"][:, resp_start:], sc["entropy"][:, resp_start:])
+
+
+def _actor_loss_fn(params, cfg, pcfg: PolicyLossConfig, full_tokens, full_mask,
+                   resp_start, lp_old, advantages, resp_mask, ref_lp,
+                   temperature, top_p, moe_lb_coef, moe_z_coef):
+    from repro.engine.sampling import entropy_of, logprobs_of
+    positions = positions_from_mask(full_mask)
+    logits, aux = M.forward(params, cfg, full_tokens, positions)
+    lp_next = logprobs_of(logits[:, :-1], full_tokens[:, 1:], temperature, top_p)
+    lp_all = jnp.concatenate([jnp.zeros_like(lp_next[:, :1]), lp_next], axis=1)
+    ent_next = entropy_of(logits[:, :-1], temperature)
+    ent_all = jnp.concatenate([jnp.zeros_like(ent_next[:, :1]), ent_next], axis=1)
+    lp_new = lp_all[:, resp_start:]
+    ent = ent_all[:, resp_start:]
+    loss, info = policy_loss(lp_new, lp_old, advantages, resp_mask, pcfg)
+    if pcfg.kl_coef > 0.0:
+        kl = kl_to_reference(lp_new, ref_lp, resp_mask)
+        loss = loss + pcfg.kl_coef * kl
+        info["kl_ref"] = kl
+    if pcfg.entropy_coef > 0.0:
+        loss = loss - pcfg.entropy_coef * entropy_bonus(ent, resp_mask)
+    if "moe_lb_loss" in aux:  # MoE aux losses (if the arch has them)
+        loss = loss + moe_lb_coef * aux["moe_lb_loss"] + \
+            moe_z_coef * aux["moe_z_loss"]
+        info["moe_lb_loss"] = aux["moe_lb_loss"]
+    info["entropy"] = masked_mean(ent, resp_mask)
+    return loss, info
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pcfg", "ocfg", "resp_start",
+                                             "temperature", "top_p"))
+def _update_actor(params, opt_state, cfg, pcfg, ocfg, full_tokens, full_mask,
+                  resp_start, lp_old, advantages, resp_mask, ref_lp,
+                  temperature, top_p):
+    (loss, info), grads = jax.value_and_grad(_actor_loss_fn, has_aux=True)(
+        params, cfg, pcfg, full_tokens, full_mask, resp_start, lp_old,
+        advantages, resp_mask, ref_lp, temperature, top_p,
+        cfg.router_aux_coef, cfg.router_z_coef)
+    params, opt_state, oinfo = adamw.update(ocfg, params, grads, opt_state)
+    info.update(oinfo)
+    info["loss"] = loss
+    return params, opt_state, info
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "ocfg", "resp_start"))
+def _update_critic(cparams, copt_state, cfg, ocfg, full_tokens, full_mask,
+                   resp_start, returns, old_values, resp_mask):
+    def loss_fn(p):
+        v = forward_values(p, cfg, full_tokens, full_mask)[:, resp_start:]
+        return value_loss(v, returns, old_values, resp_mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(cparams)
+    cparams, copt_state, oinfo = adamw.update(ocfg, cparams, grads, copt_state)
+    return cparams, copt_state, {"critic_loss": loss, **oinfo}
+
+
+# ------------------------------------------------------------------ trainer
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, rl: RLConfig, spec: SpecConfig,
+                 dataset: PromptDataset, key,
+                 critic_cfg: Optional[ModelConfig] = None,
+                 lenience_schedule=None):
+        self.cfg = model_cfg
+        self.rl = rl
+        self.spec = spec
+        # lenience schedule (fixed / warmup / adaptive); adaptive closes the
+        # paper's future-work item by steering |approx_kl| to a budget
+        self.lenience_schedule = lenience_schedule or FixedLenience(
+            spec.lenience)
+        self.dataset = dataset
+        k1, k2, k3, self.key = jax.random.split(key, 4)
+        self.params = M.init_lm(k1, model_cfg)
+        self.opt_state = adamw.init(self.params)
+        self.pcfg = rl.policy_cfg()
+        self.ref_params = jax.tree.map(jnp.copy, self.params) \
+            if self.pcfg.kl_coef > 0 else None
+        self.critic_cfg = critic_cfg or model_cfg
+        if rl.algo == "ppo":
+            self.critic_params = init_critic(k2, self.critic_cfg)
+            self.critic_opt_state = adamw.init(self.critic_params)
+        else:
+            self.critic_params = None
+        self.cache = RolloutCache(history=spec.cache_history)
+        self.gen = GenerateConfig(max_new_tokens=rl.max_new_tokens,
+                                  temperature=rl.temperature, top_p=rl.top_p,
+                                  eos_id=EOS_ID, pad_id=PAD_ID)
+        self.step_idx = 0
+        self.gen_steps = 0            # DAPO: generation steps consumed
+        self.total_generated_tokens = 0
+        self.history: List[Dict[str, float]] = []
+        self._py_rng = random.Random(1234)
+
+    # -------------------------------------------------------------- rollout
+    def _rollout_once(self, batch: PromptBatch) -> RolloutBatch:
+        self.key, sub = jax.random.split(self.key)
+        cur_l = float(self.lenience_schedule(self.step_idx))
+        if cur_l != self.spec.lenience and self.spec.variant == "spec":
+            self.spec = replace(self.spec, lenience=cur_l)
+        rb = rollout(self.params, self.cfg, self.gen, self.spec,
+                     jnp.asarray(batch.tokens), jnp.asarray(batch.mask),
+                     batch.cache_keys, self.cache, sub, self.step_idx)
+        self.gen_steps += 1
+        self.total_generated_tokens += rb.metrics["n_generated"]
+        return rb
+
+    def _collect(self, batch: PromptBatch) -> Tuple[PromptBatch, RolloutBatch,
+                                                    np.ndarray, Dict[str, float]]:
+        """Rollout + reward (+ DAPO dynamic sampling)."""
+        t0 = time.perf_counter()
+        rb = self._rollout_once(batch)
+        t_reward0 = time.perf_counter()
+        rewards = batch_rewards(rb.response, rb.length, batch.answers)
+        reward_time = time.perf_counter() - t_reward0
+
+        if self.rl.algo == "dapo" and self.rl.dynamic_sampling:
+            G = self.rl.group_size
+            for _ in range(self.rl.max_resample_rounds):
+                g = rewards.reshape(-1, G)
+                degenerate = (g.std(axis=1) == 0.0)
+                if not degenerate.any():
+                    break
+                # resample the degenerate prompt groups with fresh rollouts
+                keep = ~degenerate
+                idxs = np.where(degenerate)[0]
+                sub_batch = _subset_batch(batch, idxs, G)
+                rb2 = self._rollout_once(sub_batch)
+                r2 = batch_rewards(rb2.response, rb2.length, sub_batch.answers)
+                rb = _merge_rollouts(rb, rb2, idxs, G)
+                rewards = rewards.copy()
+                for j, gi in enumerate(idxs):
+                    rewards[gi * G:(gi + 1) * G] = r2[j * G:(j + 1) * G]
+
+        stage_times = dict(rb.metrics)
+        stage_times["reward_time"] = reward_time
+        stage_times["collect_time"] = time.perf_counter() - t0
+        return batch, rb, rewards, stage_times
+
+    # -------------------------------------------------------------- training
+    def train_step(self, batch: Optional[PromptBatch] = None) -> Dict[str, float]:
+        if batch is None:
+            batch = self.dataset.sample_batch(self._py_rng,
+                                              self.rl.prompts_per_batch,
+                                              self.rl.group_size,
+                                              epoch=self.step_idx)
+        batch, rb, rewards, times = self._collect(batch)
+        B, P = rb.prompt.shape
+        N = rb.response.shape[1]
+
+        full_tokens = jnp.asarray(np.concatenate([rb.prompt, rb.response], 1))
+        full_mask = jnp.asarray(np.concatenate([rb.prompt_mask,
+                                                rb.response_mask], 1))
+        resp_mask = jnp.asarray(rb.response_mask)
+        lengths = jnp.asarray(rb.length)
+        rew = jnp.asarray(rewards)
+
+        # ---- old log-probs (veRL stage; ratio == 1 at the first epoch) ----
+        t0 = time.perf_counter()
+        lp_old, ent_old = _old_logprobs(self.params, self.cfg, full_tokens,
+                                        full_mask, P, self.rl.temperature,
+                                        self.rl.top_p)
+        lp_old = jax.block_until_ready(lp_old)
+        times["old_logprob_time"] = time.perf_counter() - t0
+
+        ref_lp = jnp.zeros_like(lp_old)
+        if self.ref_params is not None:
+            t0 = time.perf_counter()
+            ref_lp, _ = _old_logprobs(self.ref_params, self.cfg, full_tokens,
+                                      full_mask, P, self.rl.temperature,
+                                      self.rl.top_p)
+            times["ref_time"] = time.perf_counter() - t0
+
+        # ---- advantages ----------------------------------------------------
+        t0 = time.perf_counter()
+        old_values = returns = None
+        if self.rl.algo == "ppo":
+            tv = time.perf_counter()
+            values = forward_values(self.critic_params, self.critic_cfg,
+                                    full_tokens, full_mask)[:, P:]
+            times["values_time"] = time.perf_counter() - tv
+            rew_tok = terminal_reward_to_tokens(rew, lengths, N)
+            adv, returns = gae_advantages(rew_tok, values, resp_mask,
+                                          gamma=self.rl.gamma,
+                                          lam=self.rl.gae_lambda)
+            old_values = values
+            if self.rl.whiten_adv:
+                adv = whiten(adv, resp_mask)
+        else:
+            scalar_adv = group_relative_advantages(rew, self.rl.group_size)
+            adv = scalar_adv[:, None] * resp_mask.astype(jnp.float32)
+        times["adv_time"] = time.perf_counter() - t0
+
+        # ---- updates -------------------------------------------------------
+        if self.rl.algo == "ppo":
+            t0 = time.perf_counter()
+            self.critic_params, self.critic_opt_state, cinfo = _update_critic(
+                self.critic_params, self.critic_opt_state, self.critic_cfg,
+                self.rl.critic_optim, full_tokens, full_mask, P, returns,
+                old_values, resp_mask)
+            times["update_critic_time"] = time.perf_counter() - t0
+        else:
+            cinfo = {}
+
+        t0 = time.perf_counter()
+        self.params, self.opt_state, info = _update_actor(
+            self.params, self.opt_state, self.cfg, self.pcfg, self.rl.optim,
+            full_tokens, full_mask, P, lp_old, adv, resp_mask, ref_lp,
+            self.rl.temperature, self.rl.top_p)
+        jax.block_until_ready(info["loss"])
+        times["update_actor_time"] = time.perf_counter() - t0
+
+        self.lenience_schedule.update(abs(float(info.get("approx_kl", 0.0))))
+        metrics = {
+            "step": self.step_idx,
+            "lenience": float(self.spec.lenience),
+            "reward_mean": float(rewards.mean()),
+            "response_len_mean": float(np.asarray(rb.length).mean()),
+            "total_generated_tokens": self.total_generated_tokens,
+            "gen_steps": self.gen_steps,
+            **{k: float(v) for k, v in info.items()},
+            **{k: float(v) for k, v in cinfo.items()},
+            **{k: float(v) for k, v in times.items() if isinstance(v, (int, float))},
+        }
+        self.history.append(metrics)
+        self.step_idx += 1
+        return metrics
+
+    def train(self, num_steps: int, log_every: int = 10,
+              callback=None) -> List[Dict[str, float]]:
+        for _ in range(num_steps):
+            m = self.train_step()
+            if callback and (m["step"] % log_every == 0):
+                callback(m)
+        return self.history
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _subset_batch(batch: PromptBatch, group_idxs: np.ndarray, G: int
+                  ) -> PromptBatch:
+    rows = np.concatenate([np.arange(g * G, (g + 1) * G) for g in group_idxs])
+    return PromptBatch(
+        tokens=batch.tokens[rows], mask=batch.mask[rows],
+        cache_keys=[batch.cache_keys[r] for r in rows],
+        answers=[batch.answers[r] for r in rows],
+        problem_ids=[batch.problem_ids[r] for r in rows],
+        epoch=batch.epoch)
+
+
+def _merge_rollouts(rb: RolloutBatch, rb2: RolloutBatch, group_idxs: np.ndarray,
+                    G: int) -> RolloutBatch:
+    rows = np.concatenate([np.arange(g * G, (g + 1) * G) for g in group_idxs])
+    out = RolloutBatch(
+        prompt=rb.prompt.copy(), prompt_mask=rb.prompt_mask.copy(),
+        response=rb.response.copy(), response_mask=rb.response_mask.copy(),
+        behaviour_logprobs=rb.behaviour_logprobs.copy(),
+        length=rb.length.copy(), metrics=dict(rb.metrics))
+    out.response[rows] = rb2.response
+    out.response_mask[rows] = rb2.response_mask
+    out.behaviour_logprobs[rows] = rb2.behaviour_logprobs
+    out.length[rows] = rb2.length
+    for k in ("n_generated", "n_reused"):
+        out.metrics[k] = rb.metrics.get(k, 0) + rb2.metrics.get(k, 0)
+    return out

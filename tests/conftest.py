@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device (the 512-device
+override belongs ONLY to repro.launch.dryrun)."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.data.tokenizer import VOCAB_SIZE
+    return ModelConfig(name="tiny", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                       max_seq_len=256)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    from repro.models import model as M
+    return M.init_lm(jax.random.PRNGKey(0), tiny_cfg)

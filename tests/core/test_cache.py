@@ -1,0 +1,60 @@
+"""RolloutCache semantics: put/get, lag (Delayed Reuse), batch packing."""
+import numpy as np
+import pytest
+
+from repro.core.cache import RolloutCache
+
+
+def test_put_get_roundtrip():
+    c = RolloutCache()
+    toks = np.arange(5, dtype=np.int32)
+    lps = -np.ones(5, np.float32)
+    c.put(7, toks, lps, 5, step=3, eos_id=4)
+    e = c.get(7)
+    np.testing.assert_array_equal(e.tokens, toks)
+    assert e.ends_with_eos and e.step == 3
+
+
+def test_lag_semantics():
+    c = RolloutCache(history=3)
+    for s in range(3):
+        c.put(1, np.array([s], np.int32), np.zeros(1, np.float32), 1, step=s)
+    assert c.get(1, lag=1).step == 2      # most recent
+    assert c.get(1, lag=2).step == 1      # delayed reuse
+    assert c.get(1, lag=3).step == 0
+    assert c.get(1, lag=4) is None        # beyond history
+
+
+def test_miss_on_unknown_prompt():
+    c = RolloutCache()
+    assert c.get(42) is None
+    assert c.stats()["hit_rate"] == 0.0
+
+
+def test_batch_get_packing():
+    c = RolloutCache()
+    c.put(0, np.array([5, 6, 2], np.int32), np.array([-1., -2., -3.],
+                                                     np.float32), 3, 0)
+    out = c.batch_get([0, 99], max_len=6)
+    assert out["draft_len"].tolist() == [3, 0]
+    np.testing.assert_array_equal(out["draft_tokens"][0, :3], [5, 6, 2])
+    assert (out["draft_tokens"][0, 3:] == 0).all()
+    assert out["draft_eos"].tolist() == [True, False]
+    np.testing.assert_allclose(out["draft_logprobs"][0, :3], [-1, -2, -3])
+
+
+def test_truncation_drops_eos_flag():
+    c = RolloutCache()
+    c.put(0, np.array([5, 6, 2], np.int32), np.zeros(3, np.float32), 3, 0)
+    out = c.batch_get([0], max_len=2)
+    assert out["draft_len"][0] == 2
+    assert not out["draft_eos"][0]        # truncated => not a complete response
+
+
+def test_history_eviction():
+    c = RolloutCache(history=2)
+    for s in range(5):
+        c.put(1, np.array([s], np.int32), np.zeros(1, np.float32), 1, step=s)
+    assert c.get(1, lag=1).step == 4
+    assert c.get(1, lag=2).step == 3
+    assert c.get(1, lag=3) is None

@@ -1,0 +1,58 @@
+"""Overlap / diversity metrics (Fig. 2, Fig. 6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (batch_overlap, distinct_n,
+                                prefix_match_fraction, rouge1_overlap,
+                                self_bleu)
+
+
+def test_rouge1_identical_is_one():
+    a = [1, 2, 3, 4]
+    assert rouge1_overlap(a, a) == pytest.approx(1.0)
+
+
+def test_rouge1_disjoint_is_zero():
+    assert rouge1_overlap([1, 2], [3, 4]) == 0.0
+
+
+def test_rouge1_empty():
+    assert rouge1_overlap([], [1]) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.lists(st.integers(0, 9), min_size=1, max_size=30),
+       b=st.lists(st.integers(0, 9), min_size=1, max_size=30))
+def test_rouge1_symmetric_bounded(a, b):
+    v = rouge1_overlap(a, b)
+    assert 0.0 <= v <= 1.0
+    assert v == pytest.approx(rouge1_overlap(b, a))
+
+
+def test_prefix_match():
+    prev = np.array([1, 2, 3, 4])
+    curr = np.array([1, 2, 9, 9])
+    assert prefix_match_fraction(prev, curr) == pytest.approx(0.5)
+    assert prefix_match_fraction(prev, prev) == pytest.approx(1.0)
+
+
+def test_distinct1():
+    rollouts = [np.array([1, 1, 1]), np.array([1, 1])]
+    assert distinct_n(rollouts, 1) == pytest.approx(1 / 5)
+    rollouts = [np.array([1, 2, 3])]
+    assert distinct_n(rollouts, 1) == pytest.approx(1.0)
+
+
+def test_self_bleu_extremes():
+    same = [np.array([1, 2, 3, 4, 5])] * 4
+    distinct = [np.array([1, 2, 3, 4, 5]), np.array([6, 7, 8, 9, 10]),
+                np.array([11, 12, 13, 14, 15])]
+    assert self_bleu(same) > 0.99
+    assert self_bleu(distinct) < 0.05
+
+
+def test_batch_overlap_mean():
+    prev = [np.array([1, 2, 3]), np.array([4, 5])]
+    curr = [np.array([1, 2, 3]), np.array([6, 7])]
+    assert batch_overlap(prev, curr) == pytest.approx(0.5)

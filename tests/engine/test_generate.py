@@ -1,0 +1,110 @@
+"""Generation engine: behaviour-logprob consistency, eos stopping,
+row budgets, initial_done skipping, left-padding invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine.generate import GenerateConfig, generate, positions_from_mask, score
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def setup(request):
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=32)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(cfg, B=3, P=8, seed=1):
+    prompt = jax.random.randint(jax.random.PRNGKey(seed), (B, P), 3,
+                                cfg.vocab_size)
+    mask = np.ones((B, P), bool)
+    mask[0, :3] = False
+    mask[2, :1] = False
+    mask = jnp.asarray(mask)
+    return jnp.where(mask, prompt, 0), mask
+
+
+def test_logprobs_match_rescoring(setup):
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    gen = GenerateConfig(max_new_tokens=10)
+    out = generate(params, cfg, gen, prompt, mask, jax.random.PRNGKey(7))
+    N = 10
+    full = jnp.concatenate([prompt, out["tokens"]], axis=1)
+    gmask = jnp.arange(N)[None, :] < out["length"][:, None]
+    fmask = jnp.concatenate([mask, gmask], axis=1)
+    sc = score(params, cfg, full, fmask)
+    err = jnp.max(jnp.abs(jnp.where(gmask, sc["logprobs"][:, prompt.shape[1]:]
+                                    - out["logprobs"], 0.0)))
+    assert float(err) < 1e-4
+
+
+def test_eos_stops_row(setup):
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    gen = GenerateConfig(max_new_tokens=16, eos_id=2)
+    out = generate(params, cfg, gen, prompt, mask, jax.random.PRNGKey(3))
+    toks = np.asarray(out["tokens"])
+    lens = np.asarray(out["length"])
+    for i in range(toks.shape[0]):
+        row = toks[i, :lens[i]]
+        if 2 in row.tolist():
+            assert row.tolist().index(2) == lens[i] - 1  # eos is last
+        assert (toks[i, lens[i]:] == 0).all()            # pads after
+
+
+def test_row_budget(setup):
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    gen = GenerateConfig(max_new_tokens=16, eos_id=31)  # unlikely eos
+    budget = jnp.array([4, 0, 9], jnp.int32)
+    out = generate(params, cfg, gen, prompt, mask, jax.random.PRNGKey(5),
+                   row_budget=budget)
+    assert (np.asarray(out["length"]) <= np.asarray(budget)).all()
+    assert int(out["length"][1]) == 0
+
+
+def test_initial_done_skips_rows(setup):
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    gen = GenerateConfig(max_new_tokens=8)
+    done = jnp.array([True, False, True])
+    out = generate(params, cfg, gen, prompt, mask, jax.random.PRNGKey(5),
+                   initial_done=done)
+    lens = np.asarray(out["length"])
+    assert lens[0] == 0 and lens[2] == 0 and lens[1] > 0
+
+
+def test_left_padding_invariance(setup):
+    """Extra left padding must not change greedy generation."""
+    cfg, params = setup
+    B, P = 1, 6
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (B, P), 3,
+                                cfg.vocab_size)
+    mask = jnp.ones((B, P), bool)
+    gen = GenerateConfig(max_new_tokens=6, temperature=0.0)
+    out1 = generate(params, cfg, gen, prompt, mask, jax.random.PRNGKey(0))
+    pad = jnp.zeros((B, 3), jnp.int32)
+    prompt2 = jnp.concatenate([pad, prompt], axis=1)
+    mask2 = jnp.concatenate([jnp.zeros((B, 3), bool), mask], axis=1)
+    out2 = generate(params, cfg, gen, prompt2, mask2, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out1["tokens"]),
+                                  np.asarray(out2["tokens"]))
+
+
+def test_score_first_token_and_pads_zero(setup):
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    sc = score(params, cfg, prompt, mask)
+    lp = np.asarray(sc["logprobs"])
+    valid = np.asarray(sc["valid"])
+    # first valid token of each row has no scored prefix
+    for i in range(lp.shape[0]):
+        first = int(np.argmax(np.asarray(mask)[i]))
+        assert not valid[i, first]
+        assert lp[i, first] == 0.0
+    assert (lp[~valid] == 0.0).all()

@@ -1,0 +1,65 @@
+"""Sampling: temperature/top-p semantics + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.sampling import adjust_logits, entropy_of, logprobs_of, sample
+
+
+def test_greedy_at_zero_temperature():
+    logits = jnp.array([[0.1, 3.0, -1.0], [2.0, 0.0, 1.9]])
+    tok, lp = sample(jax.random.PRNGKey(0), logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(tok), [1, 0])
+    np.testing.assert_array_equal(np.asarray(lp), [0.0, 0.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), top_p=st.floats(0.2, 1.0))
+def test_top_p_distribution_valid(seed, top_p):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, 16)) * 2
+    logp = adjust_logits(logits, 1.0, top_p)
+    p = np.asarray(jnp.exp(logp))
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+    # argmax always kept
+    am = np.asarray(jnp.argmax(logits, -1))
+    assert (p[np.arange(3), am] > 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_top_p_keeps_nucleus_mass(seed):
+    """Kept tokens form the smallest set with mass >= p."""
+    top_p = 0.7
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, 12)) * 3
+    base = np.asarray(jax.nn.softmax(logits, -1))[0]
+    kept = np.asarray(jnp.exp(adjust_logits(logits, 1.0, top_p)))[0] > 1e-12
+    mass = base[kept].sum()
+    assert mass >= top_p - 1e-4
+    # removing the smallest kept token drops below p
+    if kept.sum() > 1:
+        smallest = np.where(kept, base, np.inf).argmin()
+        assert mass - base[smallest] < top_p + 1e-6
+
+
+def test_sampled_logprob_matches_logprobs_of():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (64, 20)) * 2
+    tok, lp = sample(jax.random.PRNGKey(2), logits, temperature=0.8, top_p=0.9)
+    lp2 = logprobs_of(logits, tok, 0.8, 0.9)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp2), atol=1e-5)
+
+
+def test_entropy_nonnegative_and_bounded():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (8, 32))
+    ent = np.asarray(entropy_of(logits))
+    assert (ent >= 0).all() and (ent <= np.log(32) + 1e-5).all()
+
+
+def test_sampling_frequencies_match_distribution():
+    """Empirical frequencies track softmax probs (vectorised over draws)."""
+    logits = jnp.log(jnp.array([[0.5, 0.3, 0.2]]))
+    keys = jax.random.split(jax.random.PRNGKey(4), 4000)
+    toks = jax.vmap(lambda k: sample(k, logits)[0][0])(keys)
+    freq = np.bincount(np.asarray(toks), minlength=3) / 4000
+    np.testing.assert_allclose(freq, [0.5, 0.3, 0.2], atol=0.04)

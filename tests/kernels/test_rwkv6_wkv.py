@@ -1,0 +1,62 @@
+"""rwkv6_wkv kernel: interpret-mode sweep vs the lax.scan oracle + state
+handoff (chunked processing must equal one shot — the decode-cache
+contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rwkv6_wkv.ops import wkv
+from repro.kernels.rwkv6_wkv.ref import wkv_ref
+
+
+def _case(B, T, H, hd, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("B,T,H,hd,bt", [
+    (1, 8, 1, 4, 4), (2, 37, 3, 8, 16), (1, 64, 2, 16, 32), (3, 16, 4, 8, 8),
+])
+def test_matches_ref(B, T, H, hd, bt):
+    r, k, v, w, u, s0 = _case(B, T, H, hd, seed=B * T + hd)
+    ya, sa = wkv(r, k, v, w, u, s0, impl="interpret", block_t=bt)
+    yb, sb = wkv(r, k, v, w, u, s0, impl="ref")
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_state_handoff():
+    """Running [0:T1] then [T1:T] from the carried state == one shot."""
+    B, T, H, hd = 2, 24, 2, 8
+    r, k, v, w, u, s0 = _case(B, T, H, hd, seed=5)
+    y_full, s_full = wkv(r, k, v, w, u, s0, impl="ref")
+    T1 = 10
+    y1, s1 = wkv(r[:, :T1], k[:, :T1], v[:, :T1], w[:, :T1], u, s0, impl="ref")
+    y2, s2 = wkv(r[:, T1:], k[:, T1:], v[:, T1:], w[:, T1:], u, s1, impl="ref")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_pad_tokens_leave_state_unchanged():
+    """w=1, k=0 at a position => state passes through (padding contract)."""
+    B, T, H, hd = 1, 6, 1, 4
+    r, k, v, w, u, s0 = _case(B, T, H, hd, seed=9)
+    k = k.at[:, 3].set(0.0)
+    w = w.at[:, 3].set(1.0)
+    _, s_a = wkv(r, k, v, w, u, s0, impl="ref")
+    # remove position 3 entirely
+    keep = [0, 1, 2, 4, 5]
+    _, s_b = wkv(r[:, keep], k[:, keep], v[:, keep], w[:, keep], u, s0,
+                 impl="ref")
+    np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b), atol=1e-5)

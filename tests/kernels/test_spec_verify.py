@@ -1,0 +1,79 @@
+"""spec_verify kernel: interpret-mode sweep vs the pure-jnp oracle +
+hypothesis properties on the verification rule itself."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.spec_verify.kernel import spec_verify_pallas
+from repro.kernels.spec_verify.ops import spec_verify
+from repro.kernels.spec_verify.ref import spec_verify_ref
+
+
+def _case(B, T, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    lp_curr = jax.random.normal(k1, (B, T)) * 0.7 - 1.5
+    lp_prev = jax.random.normal(k2, (B, T)) * 0.7 - 1.5
+    u = jax.random.uniform(k3, (B, T))
+    vl = jax.random.randint(k4, (B,), 0, T + 1).astype(jnp.int32)
+    return lp_curr, lp_prev, u, vl
+
+
+@pytest.mark.parametrize("B,T,bb,bt", [
+    (1, 16, 1, 16), (3, 100, 2, 32), (8, 512, 8, 128),
+    (5, 700, 4, 256), (16, 33, 16, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("log_l", [-1.0, 0.0, 0.5])
+def test_kernel_matches_ref(B, T, bb, bt, dtype, log_l):
+    lp_curr, lp_prev, u, vl = _case(B, T, seed=B * T)
+    lp_curr, lp_prev = lp_curr.astype(dtype), lp_prev.astype(dtype)
+    got = spec_verify(lp_curr, lp_prev, u, vl, log_l, impl="interpret",
+                      block_b=bb, block_t=bt)
+    want = spec_verify_ref(lp_curr.astype(jnp.float32),
+                           lp_prev.astype(jnp.float32), u, vl, log_l)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_limits():
+    lp_curr, lp_prev, u, _ = _case(4, 64)
+    vl = jnp.full((4,), 64, jnp.int32)
+    # l -> inf: accept everything
+    n = spec_verify_ref(lp_curr, lp_prev, u, vl, 1e9)
+    assert (n == 64).all()
+    # l -> 0: reject at position 0
+    n = spec_verify_ref(lp_curr, lp_prev, u, vl, -1e9)
+    assert (n == 0).all()
+    # identical policies, l>=1: accept everything (Eq. 3)
+    n = spec_verify_ref(lp_curr, lp_curr, u, vl, 0.0)
+    assert (n == 64).all()
+
+
+def test_empty_draft():
+    lp_curr, lp_prev, u, _ = _case(3, 32)
+    vl = jnp.zeros((3,), jnp.int32)
+    n = spec_verify(lp_curr, lp_prev, u, vl, 0.5, impl="interpret",
+                    block_b=2, block_t=16)
+    assert (np.asarray(n) == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       l1=st.floats(-2.0, 2.0), l2=st.floats(-2.0, 2.0))
+def test_monotone_in_lenience(seed, l1, l2):
+    """Shared randomness: larger lenience never shortens the prefix."""
+    lp_curr, lp_prev, u, vl = _case(4, 48, seed=seed)
+    lo, hi = min(l1, l2), max(l1, l2)
+    n_lo = np.asarray(spec_verify_ref(lp_curr, lp_prev, u, vl, lo))
+    n_hi = np.asarray(spec_verify_ref(lp_curr, lp_prev, u, vl, hi))
+    assert (n_hi >= n_lo).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_n_in_range(seed):
+    lp_curr, lp_prev, u, vl = _case(6, 40, seed=seed)
+    n = np.asarray(spec_verify_ref(lp_curr, lp_prev, u, vl, 0.3))
+    assert (n >= 0).all() and (n <= np.asarray(vl)).all()

@@ -1,0 +1,171 @@
+"""Rewards, tokenizer, dataset, AdamW, checkpoint."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dataset import PromptDataset
+from repro.data.tokenizer import EOS_ID, PAD_ID, VOCAB_SIZE, decode, encode
+from repro.optim import adamw
+from repro.rewards.mathgen import MathTaskConfig, generate_problems
+from repro.rewards.verifier import batch_rewards, extract_answer, verify_text
+
+
+# ------------------------------------------------------------------ tokenizer
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet="0123456789+-*/=(). abcxyz", max_size=40))
+def test_tokenizer_roundtrip(s):
+    assert decode(encode(s)) == s.lower()
+
+
+def test_special_ids_stable():
+    ids = encode("12", add_eos=True)
+    assert ids[0] == 1 and ids[-1] == EOS_ID
+    assert PAD_ID == 0
+    assert max(ids) < VOCAB_SIZE
+
+
+# ------------------------------------------------------------------ verifier
+
+
+def test_extract_answer():
+    assert extract_answer("the answer is 42") == 42
+    assert extract_answer("12+3=15") == 15
+    assert extract_answer("-7") == -7
+    assert extract_answer("no digits") is None
+
+
+def test_verify_text():
+    assert verify_text("3+4=7", 7) == 1.0
+    assert verify_text("3+4=8", 7) == 0.0
+    assert verify_text("", 7) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-999, 999))
+def test_verifier_accepts_own_encoding(n):
+    toks = encode(str(n), add_eos=True)
+    from repro.rewards.verifier import verify_tokens
+    assert verify_tokens(toks, n) == 1.0
+
+
+def test_batch_rewards():
+    toks = np.zeros((2, 8), np.int32)
+    row0 = encode("7", add_bos=False, add_eos=True)
+    toks[0, :len(row0)] = row0
+    lens = np.array([len(row0), 0])
+    r = batch_rewards(toks, lens, [7, 3])
+    np.testing.assert_allclose(r, [1.0, 0.0])
+
+
+# ------------------------------------------------------------------ dataset
+
+
+def test_dataset_group_expansion_and_keys():
+    problems = generate_problems(MathTaskConfig(num_problems=4))
+    ds = PromptDataset(problems, max_prompt_len=12)
+    batches = list(ds.epochs(prompts_per_batch=2, group_size=3, num_epochs=2))
+    assert len(batches) == 4
+    b = batches[0]
+    assert b.tokens.shape == (6, 12)
+    # same prompt repeated with distinct cache keys
+    assert b.cache_keys[0] != b.cache_keys[1]
+    assert b.answers[0] == b.answers[1] == b.answers[2]
+    # keys stable across epochs for the same problem
+    all_keys = set()
+    for bb in batches[:2]:
+        all_keys.update(bb.cache_keys)
+    epoch2_keys = set()
+    for bb in batches[2:]:
+        epoch2_keys.update(bb.cache_keys)
+    assert all_keys == epoch2_keys
+
+
+def test_left_padding_layout():
+    problems = generate_problems(MathTaskConfig(num_problems=2))
+    ds = PromptDataset(problems, max_prompt_len=16)
+    b = ds.sample_batch(__import__("random").Random(0), 2, 1)
+    for i in range(b.tokens.shape[0]):
+        m = b.mask[i]
+        # contiguous True suffix
+        first = int(np.argmax(m))
+        assert m[first:].all() and not m[:first].any()
+
+
+# ------------------------------------------------------------------ adamw
+
+
+def test_adamw_matches_manual_step():
+    cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                            weight_decay=0.0, clip_norm=1e9)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st_ = adamw.init(p)
+    new_p, st2, info = adamw.update(cfg, p, g, st_)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / 0.1, v / 0.01
+    want = np.array([1.0, -2.0]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, atol=1e-5)
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.5)
+    p = {"w": jnp.array([10.0])}
+    g = {"w": jnp.array([0.0])}
+    new_p, *_ = adamw.update(cfg, p, g, adamw.init(p))
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_grad_clip():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros((2,))}
+    g = {"w": jnp.array([30.0, 40.0])}   # norm 50 -> scaled by 1/50
+    _, _, info = adamw.update(cfg, p, g, adamw.init(p))
+    assert float(info["grad_norm"]) == pytest.approx(50.0)
+
+
+def test_lr_schedules():
+    c = adamw.AdamWConfig(lr=1.0, schedule="cosine", total_steps=100)
+    assert float(adamw.lr_at(c, 0)) == pytest.approx(1.0)
+    assert float(adamw.lr_at(c, 100)) == pytest.approx(0.0, abs=1e-6)
+    w = adamw.AdamWConfig(lr=1.0, schedule="warmup_cosine", total_steps=100,
+                          warmup_steps=10)
+    assert float(adamw.lr_at(w, 5)) == pytest.approx(0.5, abs=0.06)
+
+
+# ------------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.io import load_pytree, save_pytree
+    tree = {"a": jnp.arange(4.0), "b": [jnp.ones((2, 2)),
+                                        {"c": jnp.array(3)}],
+            "t": (jnp.zeros(1), jnp.ones(2))}
+    path = str(tmp_path / "ckpt")
+    save_pytree(path, tree, {"step": 7})
+    loaded, meta = load_pytree(path)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert isinstance(loaded["t"], tuple)
+
+
+def test_rollout_cache_roundtrip(tmp_path):
+    from repro.checkpoint.io import load_rollout_cache, save_rollout_cache
+    from repro.core.cache import RolloutCache
+    c = RolloutCache(history=3)
+    c.put(5, np.array([1, 2, 2], np.int32), np.array([-1., -2., -3.],
+                                                     np.float32), 3, step=9)
+    c.put(5, np.array([4], np.int32), np.zeros(1, np.float32), 1, step=10)
+    path = str(tmp_path / "c")
+    save_rollout_cache(path, c)
+    c2 = load_rollout_cache(path)
+    assert c2.get(5).step == 10
+    assert c2.get(5, lag=2).step == 9
+    np.testing.assert_array_equal(c2.get(5, lag=2).tokens, [1, 2, 2])

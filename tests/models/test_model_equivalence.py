@@ -1,0 +1,114 @@
+"""The engine contract per family: prefill+decode against the cache is
+exactly equivalent to a full forward (the property SPEC-RL's correctness
+rests on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+FAMILIES = {
+    "dense-gqa": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=97, qk_norm=True, qkv_bias=True),
+    "mla": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                d_ff=128, vocab_size=97, attention_kind="mla", q_lora_rank=32,
+                kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                v_head_dim=16),
+    "moe": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=128, vocab_size=97, num_experts=4, num_experts_per_tok=2,
+                num_shared_experts=1, moe_d_ff=64, first_dense_layers=1),
+    "swa": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=128, vocab_size=97, sliding_window=8),
+    "jamba-like": dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+                       d_ff=128, vocab_size=97, block_kind="mamba",
+                       attn_period=4, attn_offset=2, num_experts=4,
+                       num_experts_per_tok=2, moe_every=2),
+    "rwkv6": dict(num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+                  d_ff=128, vocab_size=97, block_kind="rwkv",
+                  rwkv_head_dim=16),
+    "whisper-like": dict(num_layers=2, d_model=64, num_heads=4,
+                         num_kv_heads=4, d_ff=128, vocab_size=97,
+                         encoder_layers=2, encoder_frames=24,
+                         cross_attention=True, pos_embed="learned",
+                         max_seq_len=64),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_prefill_decode_equals_forward(family):
+    cfg = ModelConfig(name=family, **FAMILIES[family])
+    cfg.validate()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 3,
+                                cfg.vocab_size)
+    positions = jnp.stack([
+        jnp.concatenate([jnp.full((3,), -1, jnp.int32),
+                         jnp.arange(T - 3, dtype=jnp.int32)]),
+        jnp.arange(T, dtype=jnp.int32)])
+    tokens = jnp.where(positions >= 0, tokens, 0)
+
+    extras = {}
+    if cfg.encoder_layers:
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.encoder_frames, cfg.d_model))
+        enc, epos = M.encode(params, cfg, frames)
+        extras = {"encoder_out": enc, "encoder_positions": epos}
+
+    logits, _ = M.forward(params, cfg, tokens, positions, **extras)
+    caches = M.init_cache(cfg, B, T + 4)
+    plog, caches = M.prefill(params, cfg, tokens, positions, caches, **extras)
+    np.testing.assert_allclose(np.asarray(plog), np.asarray(logits),
+                               atol=1e-4, rtol=1e-4)
+
+    # two decode steps vs extended forward
+    cur_tok = jnp.argmax(logits[:, -1:], axis=-1)
+    cur_pos = positions[:, -1:] + 1
+    all_tok, all_pos = tokens, positions
+    for step in range(2):
+        dlog, caches = M.decode_step(params, cfg, cur_tok, cur_pos, caches,
+                                     T + step, **extras)
+        all_tok = jnp.concatenate([all_tok, cur_tok], axis=1)
+        all_pos = jnp.concatenate([all_pos, cur_pos], axis=1)
+        flog, _ = M.forward(params, cfg, all_tok, all_pos, **extras)
+        np.testing.assert_allclose(np.asarray(dlog[:, 0]),
+                                   np.asarray(flog[:, -1]),
+                                   atol=1e-4, rtol=1e-4)
+        cur_tok = jnp.argmax(dlog, axis=-1)
+        cur_pos = cur_pos + 1
+
+
+def test_mtp_head_shapes():
+    cfg = ModelConfig(name="mtp", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=97, mtp=True)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 3, 97)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    logits, aux = M.forward(params, cfg, tokens, pos, return_mtp=True)
+    assert aux["mtp_logits"].shape == logits.shape
+    assert not jnp.isnan(aux["mtp_logits"]).any()
+
+
+def test_param_counts_full_configs():
+    """Full production configs have plausible parameter counts (via
+    eval_shape — no allocation)."""
+    from repro.configs import get_config
+    expect = {
+        "deepseek-7b": (6e9, 8e9),
+        "granite-34b": (30e9, 40e9),
+        "qwen3-0.6b": (0.4e9, 0.8e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "deepseek-v3-671b": (600e9, 720e9),
+        "qwen1.5-110b": (95e9, 125e9),
+        "rwkv6-3b": (2.5e9, 4e9),
+        "whisper-tiny": (0.02e9, 0.08e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "pixtral-12b": (11e9, 14e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        struct = jax.eval_shape(lambda c=cfg: M.init_lm(jax.random.PRNGKey(0), c))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(struct))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of range"

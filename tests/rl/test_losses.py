@@ -1,0 +1,80 @@
+"""Policy / value losses: clipping semantics, KL estimator, aggregation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl.losses import (PolicyLossConfig, kl_to_reference, masked_mean,
+                             policy_loss, value_loss)
+
+
+def _cfg(**kw):
+    return PolicyLossConfig(**kw)
+
+
+def test_ratio_one_gives_negative_mean_advantage():
+    lp = jnp.zeros((2, 4))
+    adv = jnp.ones((2, 4))
+    mask = jnp.ones((2, 4), bool)
+    loss, info = policy_loss(lp, lp, adv, mask, _cfg())
+    assert float(loss) == pytest.approx(-1.0)
+    assert float(info["clip_frac"]) == 0.0
+    assert float(info["approx_kl"]) == 0.0
+
+
+def test_positive_advantage_clipped_above():
+    """ratio >> 1+clip_high with adv>0: surrogate capped at (1+c_h)*adv."""
+    lp_old = jnp.zeros((1, 1))
+    lp_new = jnp.full((1, 1), 1.0)              # ratio = e
+    adv = jnp.ones((1, 1))
+    mask = jnp.ones((1, 1), bool)
+    loss, info = policy_loss(lp_new, lp_old, adv, mask,
+                             _cfg(clip_high=0.28))
+    assert float(loss) == pytest.approx(-1.28, abs=1e-5)
+    assert float(info["clip_frac"]) == 1.0
+
+
+def test_negative_advantage_dual_clip():
+    """Very large ratio with adv<0 is floored by the dual clip constant."""
+    lp_old = jnp.zeros((1, 1))
+    lp_new = jnp.full((1, 1), 5.0)              # ratio = e^5 ~ 148
+    adv = -jnp.ones((1, 1))
+    mask = jnp.ones((1, 1), bool)
+    loss, _ = policy_loss(lp_new, lp_old, adv, mask, _cfg(clip_c=10.0))
+    # surrogate = max(min(ratio*adv, clip*adv), c*adv) = -10
+    assert float(loss) == pytest.approx(10.0, abs=1e-4)
+
+
+def test_aggregation_token_vs_seq():
+    lp_old = jnp.zeros((2, 4))
+    lp_new = jnp.zeros((2, 4))
+    adv = jnp.array([[1.0, 1, 1, 1], [2.0, 0, 0, 0]])
+    mask = jnp.array([[True] * 4, [True, False, False, False]])
+    loss_seq, _ = policy_loss(lp_new, lp_old, adv, mask, _cfg(agg="seq"))
+    loss_tok, _ = policy_loss(lp_new, lp_old, adv, mask, _cfg(agg="token"))
+    # seq: mean(mean([1,1,1,1]), mean([2])) = 1.5; token: mean over 5 = 1.2
+    assert float(loss_seq) == pytest.approx(-1.5, abs=1e-5)
+    assert float(loss_tok) == pytest.approx(-1.2, abs=1e-5)
+
+
+def test_kl_estimator_nonneg_zero_at_equal():
+    lp = jnp.array([[-1.0, -2.0]])
+    mask = jnp.ones((1, 2), bool)
+    assert float(kl_to_reference(lp, lp, mask)) == pytest.approx(0.0)
+    lp_ref = lp + jnp.array([[0.5, -0.5]])
+    assert float(kl_to_reference(lp, lp_ref, mask)) > 0.0
+
+
+def test_value_loss_clipping():
+    old_v = jnp.zeros((1, 1))
+    returns = jnp.ones((1, 1))
+    mask = jnp.ones((1, 1), bool)
+    # new value moved way past the clip: loss uses the worse (clipped) branch
+    v = jnp.full((1, 1), 2.0)
+    l = value_loss(v, returns, old_v, mask, clip=0.2)
+    assert float(l) == pytest.approx(0.5 * max((2 - 1) ** 2, (0.2 - 1) ** 2))
+
+
+def test_masked_mean():
+    x = jnp.array([[1.0, 100.0]])
+    m = jnp.array([[True, False]])
+    assert float(masked_mean(x, m)) == pytest.approx(1.0)

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate the REDUCED variant of the same
+family (<=2 layers, d_model<=512, <=4 experts — plus one full hybrid period
+for jamba) and run one forward pass, one RL train step and one serve
+(decode) step on CPU, asserting output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.optim import adamw
+
+ARCHS = sorted(ARCH_IDS)
+
+
+def _inputs(cfg, B=2, T=12, key=0):
+    tokens = jax.random.randint(jax.random.PRNGKey(key), (B, T), 3,
+                                cfg.vocab_size)
+    # row 0 left-padded by 3
+    positions = jnp.stack([
+        jnp.concatenate([jnp.full((3,), -1, jnp.int32),
+                         jnp.arange(T - 3, dtype=jnp.int32)]),
+        jnp.arange(T, dtype=jnp.int32)])
+    tokens = jnp.where(positions >= 0, tokens, 0)
+    return tokens, positions
+
+
+def _extras(params, cfg, B=2):
+    out = {}
+    if cfg.encoder_layers:
+        frames = jax.random.normal(jax.random.PRNGKey(9),
+                                   (B, cfg.encoder_frames, cfg.d_model))
+        enc, pos = M.encode(params, cfg, frames)
+        out = {"encoder_out": enc, "encoder_positions": pos}
+    return out
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            params = M.init_lm(jax.random.PRNGKey(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch, smoke_models):
+    cfg, params = smoke_models(arch)
+    tokens, positions = _inputs(cfg)
+    extras = _extras(params, cfg)
+    prefix = None
+    if cfg.num_prefix_embeddings:
+        P = cfg.num_prefix_embeddings
+        prefix = jax.random.normal(jax.random.PRNGKey(4), (2, P, cfg.d_model))
+        vis = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (2, P))
+        positions_full = jnp.concatenate(
+            [vis, jnp.where(positions >= 0, positions + P, -1)], axis=1)
+        logits, aux = M.forward(params, cfg, tokens, positions_full,
+                                prefix_embeds=prefix, **extras)
+    else:
+        logits, aux = M.forward(params, cfg, tokens, positions, **extras)
+    assert logits.shape == (2, tokens.shape[1], cfg.vocab_size)
+    assert not jnp.isnan(logits).any(), f"{arch}: NaN logits"
+    if cfg.num_experts:
+        assert "moe_lb_loss" in aux
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, smoke_models):
+    """One LM-loss training step: grads flow, loss finite, params update."""
+    cfg, params = smoke_models(arch)
+    tokens, positions = _inputs(cfg)
+    extras = _extras(params, cfg)
+
+    def loss_fn(p):
+        logits, aux = M.forward(p, cfg, tokens, positions, **extras)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        mask = (positions[:, 1:] >= 0).astype(jnp.float32)
+        loss = (nll * mask).sum() / mask.sum()
+        if "moe_lb_loss" in aux:
+            loss = loss + 0.01 * aux["moe_lb_loss"]
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = adamw.global_norm(grads)
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grad norm"
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    new_params, _, _ = adamw.update(ocfg, params, grads, adamw.init(params))
+    # at least one param changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert changed, f"{arch}: update did not change params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_serve_step(arch, smoke_models):
+    """Prefill + one decode step against the cache, no NaNs, correct shape."""
+    cfg, params = smoke_models(arch)
+    tokens, positions = _inputs(cfg)
+    extras = _extras(params, cfg)
+    B, T = tokens.shape
+    caches = M.init_cache(cfg, B, T + 2)
+    logits, caches = M.prefill(params, cfg, tokens, positions, caches, **extras)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1)
+    npos = positions[:, -1:] + 1
+    dlogits, caches = M.decode_step(params, cfg, nxt, npos, caches, T, **extras)
+    assert dlogits.shape == (B, 1, cfg.vocab_size)
+    assert not jnp.isnan(dlogits).any(), f"{arch}: NaN decode logits"
