@@ -1,13 +1,21 @@
 """Kernel microbenchmarks: jit'd oracle paths (CPU wall-time) + interpret-mode
-correctness spot checks.  On TPU the pallas impls replace the oracles."""
+correctness spot checks.  On TPU the pallas impls replace the oracles.
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench [--smoke]
+
+--smoke shrinks shapes and iteration counts so CI can run the interpret-mode
+checks in seconds."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.cache_gather.ops import cache_roll
+from repro.kernels.cache_gather.ref import cache_roll_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.rwkv6_wkv.ops import wkv
 from repro.kernels.spec_verify.ops import spec_verify
@@ -25,14 +33,15 @@ def _time(fn, *args, iters=20, **kw):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> None:
-    B, T = 64, 1024
+def run(smoke: bool = False) -> None:
+    B, T = (8, 256) if smoke else (64, 1024)
+    iters = 3 if smoke else 20
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     lp_c = jax.random.normal(ks[0], (B, T)) - 1
     lp_p = jax.random.normal(ks[1], (B, T)) - 1
     u = jax.random.uniform(ks[2], (B, T))
     vl = jax.random.randint(ks[3], (B,), 0, T).astype(jnp.int32)
-    us = _time(spec_verify, lp_c, lp_p, u, vl, 0.5, impl="ref")
+    us = _time(spec_verify, lp_c, lp_p, u, vl, 0.5, impl="ref", iters=iters)
     emit("kernels/spec_verify_ref", us, f"B={B};T={T}")
     got = spec_verify(lp_c[:4, :256], lp_p[:4, :256], u[:4, :256],
                       jnp.minimum(vl[:4], 256), 0.5, impl="interpret")
@@ -41,22 +50,38 @@ def run() -> None:
     assert (np.asarray(got) == np.asarray(want)).all()
     emit("kernels/spec_verify_interpret_check", 0.0, "allclose=True")
 
-    q = jax.random.normal(ks[0], (2, 8, 256, 64))
-    k = jax.random.normal(ks[1], (2, 2, 256, 64))
-    v = jax.random.normal(ks[2], (2, 2, 256, 64))
-    pos = jnp.broadcast_to(jnp.arange(256, dtype=jnp.int32), (2, 256))
-    us = _time(flash_attention, q, k, v, pos, pos, impl="ref", iters=5)
-    emit("kernels/flash_attention_ref", us, "B2H8T256D64;gqa4x")
+    # cache_gather: the SPEC-RL KV compaction roll (one-pass rollout path)
+    R, S, D = (8, 64, 16) if smoke else (64, 512, 64)
+    buf = jax.random.normal(ks[0], (R, S, D))
+    shift = jax.random.randint(ks[1], (R,), 0, S + 1).astype(jnp.int32)
+    us = _time(cache_roll, buf, shift, impl="ref", iters=iters)
+    emit("kernels/cache_gather_ref", us, f"R={R};S={S};D={D}")
+    got = cache_roll(buf[:4, :32], shift[:4] % 32, impl="interpret")
+    want = cache_roll_ref(buf[:4, :32], shift[:4] % 32)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    emit("kernels/cache_gather_interpret_check", 0.0, "allclose=True")
 
-    r = jax.random.normal(ks[0], (2, 256, 4, 32))
-    kk = jax.random.normal(ks[1], (2, 256, 4, 32))
-    vv = jax.random.normal(ks[2], (2, 256, 4, 32))
-    w = jax.nn.sigmoid(jax.random.normal(ks[3], (2, 256, 4, 32)))
+    AT = 64 if smoke else 256
+    q = jax.random.normal(ks[0], (2, 8, AT, 64))
+    k = jax.random.normal(ks[1], (2, 2, AT, 64))
+    v = jax.random.normal(ks[2], (2, 2, AT, 64))
+    pos = jnp.broadcast_to(jnp.arange(AT, dtype=jnp.int32), (2, AT))
+    us = _time(flash_attention, q, k, v, pos, pos, impl="ref", iters=3)
+    emit("kernels/flash_attention_ref", us, f"B2H8T{AT}D64;gqa4x")
+
+    WT = 64 if smoke else 256
+    r = jax.random.normal(ks[0], (2, WT, 4, 32))
+    kk = jax.random.normal(ks[1], (2, WT, 4, 32))
+    vv = jax.random.normal(ks[2], (2, WT, 4, 32))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (2, WT, 4, 32)))
     uu = jax.random.normal(ks[0], (4, 32))
     s0 = jnp.zeros((2, 4, 32, 32))
-    us = _time(wkv, r, kk, vv, w, uu, s0, impl="ref", iters=5)
-    emit("kernels/rwkv6_wkv_ref", us, "B2T256H4hd32")
+    us = _time(wkv, r, kk, vv, w, uu, s0, impl="ref", iters=3)
+    emit("kernels/rwkv6_wkv_ref", us, f"B2T{WT}H4hd32")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + few iters (CI interpret-mode check)")
+    run(smoke=ap.parse_args().smoke)

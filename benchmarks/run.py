@@ -9,7 +9,7 @@ import argparse
 import time
 
 SUITES = ["table1", "table2", "table3", "table4", "fig2", "fig5", "fig6",
-          "kernels", "roofline"]
+          "kernels", "rollout", "roofline"]
 
 
 def main() -> None:
@@ -20,14 +20,14 @@ def main() -> None:
     selected = args.only.split(",") if args.only else SUITES
 
     from . import (fig2_overlap, fig5_diagnostics, fig6_diversity,
-                   kernels_bench, roofline, table1_main, table2_variants,
-                   table3_lenience, table4_breakdown)
+                   kernels_bench, rollout_stages, roofline, table1_main,
+                   table2_variants, table3_lenience, table4_breakdown)
     mods = {
         "table1": table1_main, "table2": table2_variants,
         "table3": table3_lenience, "table4": table4_breakdown,
         "fig2": fig2_overlap, "fig5": fig5_diagnostics,
         "fig6": fig6_diversity, "kernels": kernels_bench,
-        "roofline": roofline,
+        "rollout": rollout_stages, "roofline": roofline,
     }
     print("name,us_per_call,derived")
     t0 = time.time()

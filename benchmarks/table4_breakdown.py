@@ -1,5 +1,7 @@
 """Paper Table 4: per-stage time breakdown — verification + assembly overhead
-vs rollout savings (verl stage order)."""
+vs rollout savings (verl stage order).  The rollout stage is split into the
+engine's explicit sub-stages: verify (fused verify+prefill on the one-pass
+path), compact (cache_gather / left_align) and decode."""
 from __future__ import annotations
 
 import numpy as np
@@ -7,9 +9,9 @@ import numpy as np
 from .common import emit, make_trainer
 
 STEPS = 5
-STAGES = ["verify_time", "rollout_time", "assembly_time", "reward_time",
-          "old_logprob_time", "ref_time", "values_time", "adv_time",
-          "update_critic_time", "update_actor_time"]
+STAGES = ["verify_time", "compact_time", "decode_time", "assembly_time",
+          "reward_time", "old_logprob_time", "ref_time", "values_time",
+          "adv_time", "update_critic_time", "update_actor_time"]
 
 
 def run() -> None:
@@ -17,7 +19,8 @@ def run() -> None:
         tr = make_trainer("grpo", variant, seed=9)
         for _ in range(STEPS):
             tr.train_step()
-        h = tr.history[1:]          # skip compile-heavy first step
+        h = tr.history[2:]          # skip compile-heavy steps: cold-start
+                                    # generate + first speculative step
         parts = []
         total = 0.0
         for s in STAGES:

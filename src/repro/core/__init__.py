@@ -1,8 +1,10 @@
 """SPEC-RL core: the paper's contribution.
 
 - cache: previous-epoch rollout store (tokens + behaviour log-probs)
-- verify: draft-and-verify pass (Algorithm 1) over cached rollouts
-- spec_rollout: orchestrator — verify, resume, assemble, refresh cache
+- verify: draft-and-verify pass (Algorithm 1) over cached rollouts —
+  scoring-only (two-pass) or fused with the engine prefill (one-pass)
+- spec_rollout: orchestrator — verify, compact, resume, assemble,
+  refresh cache (engine paths in DESIGN.md §3)
 - lenience: fixed/warmup/adaptive lenience schedules
 - metrics: overlap / diversity / diagnostic metrics from the paper
 """

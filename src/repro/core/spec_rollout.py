@@ -3,11 +3,24 @@
 Per training step, for each prompt in the batch:
 
 1. retrieve the cached previous rollout as a *draft* (cold start ⇒ empty),
-2. verify all drafts in ONE packed scoring call of the current policy,
+2. verify all drafts in ONE packed forward of the current policy,
 3. keep the verified prefix ``y_prev[:n]``,
-4. left-align prompt ⊕ prefix (the paper's padding trick) and resume
-   generation for every row in ONE packed generate call,
+4. resume generation for every row in ONE packed decode,
 5. assemble ``y = y_prev[:n] ⊕ y_cont`` and refresh the cache immediately.
+
+Continuation runs on one of two engine paths (DESIGN.md §3):
+
+* **one-pass** (default for ``spec``/``delayed`` on attention trunks): the
+  verification forward is a *prefilling* one (verify_and_prefill), its KV
+  caches are compacted to the accepted region by the cache_gather kernel
+  (model.realign_decode_cache), and decoding resumes straight from the
+  compacted cache (engine.resume_from_cache).  Prompt ⊕ accepted prefix is
+  forwarded exactly once per step — no second prefill.
+* **two-pass** (fallback for recurrent trunks / ``random`` / ``full`` and
+  the ``one_pass='off'`` escape hatch): score-then-re-prefill, where
+  ``left_align`` packs prompt ⊕ prefix (the paper's padding trick) and
+  ``generate`` prefills it again.  Sample-for-sample identical to one-pass
+  under the same PRNG key (tested).
 
 Variants (paper Table 2 / §4.3): ``spec`` (the method), ``random`` (uniform
 rejection position, stale behaviour log-probs, no verification pass),
@@ -26,11 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.generate import GenerateConfig, generate, positions_from_mask
+from repro.engine.generate import (GenerateConfig, generate,
+                                   resume_from_cache)
+from repro.models import model as M
 from repro.models.config import ModelConfig
 
 from .cache import RolloutCache
-from .verify import verify_drafts
+from .verify import verify_and_prefill, verify_drafts
 
 VARIANTS = ("off", "spec", "random", "delayed", "full")
 
@@ -41,6 +56,9 @@ class SpecConfig:
     lenience: float = math.e ** 0.5     # paper default for GRPO
     cache_history: int = 4
     verify_impl: str = "auto"           # kernels.spec_verify impl selector
+    one_pass: str = "auto"              # 'auto' | 'on' | 'off' — fused
+                                        # verify→compact→resume engine path
+    compact_impl: str = "auto"          # kernels.cache_gather impl selector
 
     @property
     def cache_lag(self) -> int:
@@ -63,19 +81,29 @@ class RolloutBatch:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
-@jax.jit
-def left_align(tokens, mask):
-    """Roll each row so its last valid token sits in the last column.
+@functools.partial(jax.jit, static_argnames=("impl",))
+def left_align(tokens, mask, impl: str = "gather"):
+    """Shift each row so its last valid token sits in the last column.
 
     Requires the columns after the last valid one to be padding (true for
     [left-padded prompt | right-padded prefix] layouts).
+
+    impl='gather' (default) lowers to ONE take_along_axis gather with
+    modular source indices — the per-row dynamic roll lowers poorly on
+    TPU.  impl='roll' is the legacy vmap'd per-row jnp.roll, kept as the
+    fallback used by the non-spec variants (random / full ablations) and
+    as the oracle for the gather path (bit-identical by construction).
     """
     W = tokens.shape[1]
     idx = jnp.arange(W, dtype=jnp.int32)[None, :]
     end = jnp.max(jnp.where(mask, idx + 1, 0), axis=1)      # (B,)
     shift = W - end
-    roll = jax.vmap(lambda t, s: jnp.roll(t, s, axis=0))
-    return roll(tokens, shift), roll(mask, shift)
+    if impl == "roll":
+        roll = jax.vmap(lambda t, s: jnp.roll(t, s, axis=0))
+        return roll(tokens, shift), roll(mask, shift)
+    src = (idx - shift[:, None]) % W
+    return (jnp.take_along_axis(tokens, src, axis=1),
+            jnp.take_along_axis(mask, src, axis=1))
 
 
 @functools.partial(jax.jit, static_argnames=("pad_id",))
@@ -107,12 +135,29 @@ def _vanilla(params, cfg, gen, prompts, prompt_mask, key, model_kwargs):
     return out
 
 
+def use_one_pass(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
+    """Whether the fused verify→compact→resume path applies.
+
+    Needs per-slot KV state in every layer (attention-only trunk) and no
+    vision prefix (whose extra cache slots the compactor does not model).
+    """
+    if spec.variant not in ("spec", "delayed") or spec.one_pass == "off":
+        return False
+    ok = (M.supports_cache_realign(cfg)
+          and model_kwargs.get("prefix_embeds") is None)
+    if spec.one_pass == "on" and not ok:
+        raise ValueError("one_pass='on' requires an attention-only trunk "
+                         "and no prefix_embeds")
+    return ok
+
+
 def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             prompts, prompt_mask, prompt_ids: Sequence[int],
             cache: Optional[RolloutCache], key, step: int,
             **model_kwargs) -> RolloutBatch:
     """One rollout step for a prompt batch.  Host-level: the cache is host
-    memory; verification / generation / assembly are jit'd device calls."""
+    memory; verification / compaction / generation / assembly are jit'd
+    device calls."""
     assert spec.variant in VARIANTS, spec.variant
     B, P = prompts.shape
     N = gen.max_new_tokens
@@ -128,12 +173,14 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub, model_kwargs)
         resp, lp, length = out["tokens"], out["logprobs"], out["length"]
         resp_mask = jnp.arange(N)[None, :] < length[:, None]
+        rollout_time = time.perf_counter() - t0
         metrics.update(
             n_generated=int(out["n_generated"]), n_reused=0,
             verified_prefix_mean=0.0, full_reuse_ratio=0.0,
             accept_rate=0.0, draft_coverage=0.0,
-            verify_time=0.0, rollout_time=time.perf_counter() - t0,
-            assembly_time=0.0)
+            verify_time=0.0, rollout_time=rollout_time,
+            assembly_time=0.0, compact_time=0.0, decode_time=rollout_time,
+            one_pass=0.0, prefill_passes=1.0)
         _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
         return RolloutBatch(
             prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
@@ -145,50 +192,96 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     draft_lp = jnp.asarray(drafts["draft_logprobs"])
     draft_len = jnp.asarray(drafts["draft_len"])
     draft_eos = jnp.asarray(drafts["draft_eos"])
+    one_pass = use_one_pass(cfg, spec, model_kwargs)
 
-    # ---- 1. rejection positions ------------------------------------------
     tv0 = time.perf_counter()
-    if spec.variant in ("spec", "delayed"):
+    if one_pass:
+        # ---- fused path: ONE forward over prompt ⊕ draft -----------------
         key, sub = jax.random.split(key)
-        ver = verify_drafts(params, cfg, prompts, prompt_mask, draft_tokens,
-                            draft_lp, draft_len, sub, spec.log_lenience,
-                            temperature=gen.temperature, top_p=gen.top_p,
-                            impl=spec.verify_impl, **model_kwargs)
+        ver = verify_and_prefill(params, cfg, prompts, prompt_mask,
+                                 draft_tokens, draft_lp, draft_len, sub,
+                                 spec.log_lenience, temperature=gen.temperature,
+                                 top_p=gen.top_p, impl=spec.verify_impl,
+                                 **model_kwargs)
         n = ver["n"]
-        prefix_lp = ver["lp_curr"]          # current-policy probs (exact)
+        prefix_lp = ver["lp_curr"]
         accept_rate = float(ver["accept_rate"])
-    elif spec.variant == "random":
+        jax.block_until_ready(n)
+        verify_time = time.perf_counter() - tv0
+
+        # compact the caches to [prompt | draft[:n]], left-aligned at W
+        W = P + N
+        tc0 = time.perf_counter()
+        p_len = jnp.sum(prompt_mask, axis=1).astype(jnp.int32)
+        caches = M.realign_decode_cache(cfg, ver["caches"],
+                                        (N - n).astype(jnp.int32),
+                                        p_len + n, W, impl=spec.compact_impl)
+        jax.block_until_ready(jax.tree.leaves(caches)[0])
+        compact_time = time.perf_counter() - tc0
+
+        # resume decoding from the compacted cache — zero redundant prefill
+        full_reuse = (n == draft_len) & draft_eos
+        td0 = time.perf_counter()
         key, sub = jax.random.split(key)
-        frac = jax.random.uniform(sub, (B,))
-        n = jnp.floor(frac * (draft_len + 1)).astype(jnp.int32)
-        n = jnp.minimum(n, draft_len)
-        prefix_lp = draft_lp                # stale behaviour probs (biased)
-        accept_rate = float(jnp.where(draft_len.sum() > 0,
-                                      n.sum() / jnp.maximum(draft_len.sum(), 1),
-                                      0.0))
-    else:  # full
-        n = draft_len
-        prefix_lp = draft_lp
-        accept_rate = 1.0
-    jax.block_until_ready(n)
-    verify_time = time.perf_counter() - tv0
+        cont = resume_from_cache(params, cfg, gen, caches, ver["seed_logits"],
+                                 p_len + n, W, sub, initial_done=full_reuse,
+                                 row_budget=N - n, **model_kwargs)
+        jax.block_until_ready(cont["tokens"])
+        decode_time = time.perf_counter() - td0
+        rollout_time = compact_time + decode_time
+        prefill_passes = 1.0
+    else:
+        # ---- two-pass path: rejection positions then re-prefill ----------
+        if spec.variant in ("spec", "delayed"):
+            key, sub = jax.random.split(key)
+            ver = verify_drafts(params, cfg, prompts, prompt_mask, draft_tokens,
+                                draft_lp, draft_len, sub, spec.log_lenience,
+                                temperature=gen.temperature, top_p=gen.top_p,
+                                impl=spec.verify_impl, **model_kwargs)
+            n = ver["n"]
+            prefix_lp = ver["lp_curr"]      # current-policy probs (exact)
+            accept_rate = float(ver["accept_rate"])
+            prefill_passes = 2.0            # score fwd + continuation prefill
+        elif spec.variant == "random":
+            key, sub = jax.random.split(key)
+            frac = jax.random.uniform(sub, (B,))
+            n = jnp.floor(frac * (draft_len + 1)).astype(jnp.int32)
+            n = jnp.minimum(n, draft_len)
+            prefix_lp = draft_lp            # stale behaviour probs (biased)
+            accept_rate = float(jnp.where(draft_len.sum() > 0,
+                                          n.sum() / jnp.maximum(draft_len.sum(), 1),
+                                          0.0))
+            prefill_passes = 1.0
+        else:  # full
+            n = draft_len
+            prefix_lp = draft_lp
+            accept_rate = 1.0
+            prefill_passes = 1.0
+        jax.block_until_ready(n)
+        verify_time = time.perf_counter() - tv0
 
-    # ---- 2. continuation --------------------------------------------------
-    full_reuse = (n == draft_len) & draft_eos
-    j = jnp.arange(N, dtype=jnp.int32)[None, :]
-    prefix_mask = j < n[:, None]
-    combined = jnp.concatenate(
-        [prompts, jnp.where(prefix_mask, draft_tokens, gen.pad_id)], axis=1)
-    combined_mask = jnp.concatenate([prompt_mask, prefix_mask], axis=1)
-    aligned_tokens, aligned_mask = left_align(combined, combined_mask)
+        full_reuse = (n == draft_len) & draft_eos
+        tc0 = time.perf_counter()
+        j = jnp.arange(N, dtype=jnp.int32)[None, :]
+        prefix_mask = j < n[:, None]
+        combined = jnp.concatenate(
+            [prompts, jnp.where(prefix_mask, draft_tokens, gen.pad_id)], axis=1)
+        combined_mask = jnp.concatenate([prompt_mask, prefix_mask], axis=1)
+        align_impl = "gather" if spec.variant in ("spec", "delayed") else "roll"
+        aligned_tokens, aligned_mask = left_align(combined, combined_mask,
+                                                  impl=align_impl)
+        jax.block_until_ready(aligned_tokens)
+        compact_time = time.perf_counter() - tc0
 
-    key, sub = jax.random.split(key)
-    cont = generate(params, cfg, gen, aligned_tokens, aligned_mask, sub,
-                    initial_done=full_reuse, row_budget=N - n, **model_kwargs)
-    jax.block_until_ready(cont["tokens"])
-    rollout_time = time.perf_counter() - tv0 - verify_time
+        td0 = time.perf_counter()
+        key, sub = jax.random.split(key)
+        cont = generate(params, cfg, gen, aligned_tokens, aligned_mask, sub,
+                        initial_done=full_reuse, row_budget=N - n, **model_kwargs)
+        jax.block_until_ready(cont["tokens"])
+        decode_time = time.perf_counter() - td0
+        rollout_time = compact_time + decode_time
 
-    # ---- 3. assembly --------------------------------------------------------
+    # ---- assembly ----------------------------------------------------------
     ta0 = time.perf_counter()
     resp, lp, resp_mask, length = assemble(
         draft_tokens, prefix_lp, n, cont["tokens"], cont["logprobs"],
@@ -206,7 +299,9 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         accept_rate=accept_rate,
         draft_coverage=float((draft_len > 0).mean()),
         verify_time=verify_time, rollout_time=rollout_time,
-        assembly_time=assembly_time)
+        assembly_time=assembly_time, compact_time=compact_time,
+        decode_time=decode_time, one_pass=float(one_pass),
+        prefill_passes=prefill_passes)
     return RolloutBatch(
         prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
         response=np.asarray(resp), response_mask=np.asarray(resp_mask),

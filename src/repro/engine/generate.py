@@ -1,10 +1,20 @@
 """Batched autoregressive generation and teacher-forced scoring.
 
-One jit'd ``generate`` handles vanilla rollouts *and* SPEC-RL continuations
-(the caller concatenates prompt ⊕ verified prefix into the "prompt").
-Left-padded batches, dense caches, a single ``lax.while_loop`` with per-row
-done flags — the TPU-idiomatic replacement for vLLM's continuous batching
-(see DESIGN.md §3).
+The engine is built from two explicit, composable stages (see DESIGN.md §3):
+
+* **prefill** — one forward over the (left-padded) prompt that populates the
+  dense KV caches and yields the seed logits for the first sampled token;
+* **decode** — a single ``lax.while_loop`` with per-row done flags that
+  extends the caches one token at a time.
+
+``generate`` = prefill ∘ decode and serves vanilla rollouts as well as the
+legacy two-pass SPEC-RL continuation (caller concatenates prompt ⊕ verified
+prefix into the "prompt").  ``resume_from_cache`` is the decode stage alone:
+it starts the while_loop from an already-populated cache, per-row start
+positions and seed logits, which is how the one-pass speculative path
+continues straight out of verification with zero redundant prefill.
+Left-padded batches, dense caches — the TPU-idiomatic replacement for vLLM's
+continuous batching (see DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -83,8 +93,25 @@ def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
         write_offset = P
 
     next_pos = prompt_mask.sum(axis=1).astype(jnp.int32) + pos_offset  # (B,)
+    return _decode_loop(params, cfg, gen, caches, logits[:, -1], next_pos,
+                        write_offset, key, initial_done, row_budget, extras)
+
+
+def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
+                 seed_logits, next_pos, write_offset, key,
+                 initial_done, row_budget, extras) -> Dict[str, jnp.ndarray]:
+    """The decode stage: sample from ``seed_logits`` then run the while_loop.
+
+    caches: populated KV caches whose slots [0, write_offset) hold the
+    context; seed_logits: (B, V) logits of the first token to sample;
+    next_pos: (B,) position value of that first token.  Key-split order is
+    identical whether entered via ``generate`` or ``resume_from_cache`` so
+    the two-pass and one-pass SPEC-RL paths are sample-for-sample exact.
+    """
+    B = seed_logits.shape[0]
+    N = gen.max_new_tokens
     key, sub = jax.random.split(key)
-    tok0, lp0 = sample(sub, logits[:, -1], gen.temperature, gen.top_p)
+    tok0, lp0 = sample(sub, seed_logits, gen.temperature, gen.top_p)
 
     tokens_buf = jnp.full((B, N), gen.pad_id, jnp.int32)
     lp_buf = jnp.zeros((B, N), jnp.float32)
@@ -127,6 +154,29 @@ def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
         "length": length,
         "n_generated": length.sum(),
     }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "write_offset"))
+def resume_from_cache(params, cfg: ModelConfig, gen: GenerateConfig, caches,
+                      seed_logits, next_pos, write_offset: int, key,
+                      initial_done=None, row_budget=None,
+                      **model_kwargs) -> Dict[str, jnp.ndarray]:
+    """Continue decoding from an existing cache — the one-pass SPEC-RL entry.
+
+    caches: decode caches whose slots [0, write_offset) already hold
+    [left-aligned prompt ⊕ accepted prefix] (see model.realign_decode_cache);
+    seed_logits: (B, V) logits of the last accepted (or last prompt) token;
+    next_pos: (B,) int32 = prompt_len + n, the position the first continued
+    token will occupy.  Returns the same dict as ``generate``.
+
+    Bit-compatible with ``generate`` on the left-aligned layout: feeding the
+    same PRNG key to either entry point yields the same key-split sequence,
+    so continuation tokens/logprobs agree sample-for-sample.
+    """
+    extras = _model_extras(model_kwargs)
+    return _decode_loop(params, cfg, gen, caches, seed_logits,
+                        next_pos.astype(jnp.int32), write_offset, key,
+                        initial_done, row_budget, extras)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",

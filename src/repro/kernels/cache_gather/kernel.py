@@ -1,0 +1,55 @@
+"""Pallas-TPU kernel for SPEC-RL KV-cache compaction (cache_gather).
+
+After the fused verify+prefill forward, each row's accepted context
+[left-padded prompt | draft[:n]] already sits *contiguously* in the cache at
+slots [P - p_len, P + n).  Left-aligning it to the decode layout is therefore
+a per-row circular shift along the sequence axis — not an arbitrary gather —
+so the whole compaction is one fused dynamic-roll per (row, head) with a
+single HBM read and write per cache buffer, replacing the old host-visible
+``left_align`` + second prefill round trip.
+
+Grid: one program per flattened (run, batch, head) row.  The per-row shift
+arrives via scalar prefetch (SMEM) so it is available before the block DMA.
+The roll is realised as a dynamic slice of the sequence-doubled block, whose
+semantics (out[j] = x[(j - shift) mod S]) are stable across backends and
+interpret mode; wrapped-in slots carry stale K/V but their cache positions
+are rewritten to -1 by the caller, and position-masked attention never reads
+them (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _roll_kernel(shift_ref, in_ref, out_ref, *, seq_len: int):
+    r = pl.program_id(0)
+    s = shift_ref[r]
+    x = in_ref[0]                                    # (S, D)
+    doubled = jnp.concatenate([x, x], axis=0)        # (2S, D)
+    out_ref[0] = jax.lax.dynamic_slice_in_dim(doubled, seq_len - s, seq_len,
+                                              axis=0)
+
+
+def cache_roll_pallas(buf, shift, *, interpret: bool = False):
+    """buf: (R, S, D); shift: (R,) int32 in [0, S].
+
+    Returns out with out[r, j] = buf[r, (j - shift[r]) mod S].
+    """
+    R, S, D = buf.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, S, D), lambda r, shift_ref: (r, 0, 0))],
+        out_specs=pl.BlockSpec((1, S, D), lambda r, shift_ref: (r, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_roll_kernel, seq_len=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        interpret=interpret,
+    )(shift.astype(jnp.int32), buf)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the cache_gather compaction kernel.
+
+``cache_roll`` right-rotates each (S, D) row of a flattened KV-cache buffer
+by a per-row shift — the primitive behind model.realign_decode_cache, which
+left-aligns verified [prompt | draft[:n]] context for cache-resumed decoding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cache_roll_pallas
+from .ref import cache_roll_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def cache_roll(buf, shift, *, impl: str = "auto"):
+    """buf: (R, S, D); shift: (R,) int32 in [0, S].
+
+    Returns out[r, j] = buf[r, (j - shift[r]) mod S].
+    impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'.
+    """
+    assert buf.ndim == 3, buf.shape
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return cache_roll_ref(buf, shift)
+    return cache_roll_pallas(buf, shift, interpret=(impl == "interpret"))

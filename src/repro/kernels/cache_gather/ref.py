@@ -1,0 +1,17 @@
+"""jnp oracle for cache_gather: per-row circular right-shift along axis -2."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_roll_ref(buf, shift):
+    """buf: (R, S, D); shift: (R,) int32.
+
+    out[r, j] = buf[r, (j - shift[r]) mod S] — a single take_along_axis
+    gather (the same closed form the Pallas kernel realises as a dynamic
+    slice of the sequence-doubled block).
+    """
+    S = buf.shape[1]
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    src = (j - shift[:, None].astype(jnp.int32)) % S
+    return jnp.take_along_axis(buf, src[:, :, None], axis=1)

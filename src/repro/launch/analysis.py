@@ -201,15 +201,40 @@ def _dot_flops(op: Dict[str, Any], symbols: Dict[str, str]) -> float:
     return 2.0 * out_elems * contracted
 
 
+def _operand_group(rhs: str, opcode: str) -> Optional[str]:
+    """The balanced paren group right after the opcode — NOT the first paren
+    group on the rhs, which for tuple-result ops is the result type and for
+    TPU tiled layouts is the tiling annotation ``T(8,128)``."""
+    i = rhs.find(opcode + "(")
+    if i < 0:
+        return None
+    start = i + len(opcode) + 1
+    depth = 1
+    for j in range(start, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[start:j]
+    return None
+
+
 def _operand_bytes(op: Dict[str, Any], symbols: Dict[str, str]) -> int:
-    mo = re.search(r"\(\s*((?:%[\w.\-]+\s*,?\s*)+)\)", op["line"].split("=", 1)[1])
-    if not mo:
+    # Newer XLA prints typed operands ("f32[64,128]{1,0} %call.42"), older
+    # prints bare "%call.42" — take the inline type when present, else the
+    # symbol table.
+    group = _operand_group(op["line"].split("=", 1)[1], op["opcode"])
+    if not group:
         return 0
     total = 0
-    for o in mo.group(1).split(","):
-        o = o.strip().lstrip("%")
-        if o in symbols:
-            total += shape_bytes(symbols[o])
+    for typ, name in re.findall(
+            r"(?:([a-z]\w*\[[^\]]*\](?:\{[^}]*\})?)\s+)?%([\w.\-]+)",
+            group):
+        if typ:
+            total += shape_bytes(typ)
+        elif name in symbols:
+            total += shape_bytes(symbols[name])
     return total
 
 
@@ -263,6 +288,8 @@ def analyze_compiled(compiled, num_devices: int) -> Dict[str, Any]:
     """Full report: XLA cost/memory analysis + our HLO-parse corrections."""
     out: Dict[str, Any] = {}
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     out["xla_flops_per_device"] = float(ca.get("flops", 0.0))
     out["xla_bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
     ma = compiled.memory_analysis()

@@ -31,6 +31,18 @@ def _dt(cfg: ModelConfig):
     return jnp.dtype(cfg.param_dtype)
 
 
+# Forward-pass op counters (host-side).  Incremented at python level, so under
+# jit they count *traces*; wrap a region in ``jax.disable_jit()`` to count the
+# actual forwards executed — that is how the one-pass SPEC-RL benchmark/tests
+# assert "prompt ⊕ accepted prefix is forwarded exactly once per step".
+OP_COUNTS = {"forward": 0, "prefill": 0, "decode_step": 0}
+
+
+def reset_op_counts() -> None:
+    for k in OP_COUNTS:
+        OP_COUNTS[k] = 0
+
+
 def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
     cfg.validate()
     dtype = _dt(cfg)
@@ -108,6 +120,7 @@ def forward(params, cfg: ModelConfig, tokens, positions, *,
     positions must already cover P + T (pass positions for the FULL sequence).
     Returns (logits over token slots only, aux dict).
     """
+    OP_COUNTS["forward"] += 1
     x = _embed(params, cfg, tokens, positions if prefix_embeds is None
                else positions[:, prefix_embeds.shape[1]:])
     if prefix_embeds is not None:
@@ -147,12 +160,72 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return init_trunk_cache(cfg, batch, max_len, jnp.dtype(cfg.dtype))
 
 
+def supports_cache_realign(cfg: ModelConfig) -> bool:
+    """Cache compaction needs every trunk layer to hold per-slot KV state.
+
+    Recurrent blocks (mamba / rwkv) carry a single running state that cannot
+    be rewound past rejected draft tokens, so they take the two-pass path."""
+    from .config import ATTN
+    return all(kind == ATTN for kind, _ in cfg.layer_plan())
+
+
+def _roll_rows(buf, shift, impl):
+    """Right-rotate ``buf`` (..., S, D) along axis -2, per-batch shift.
+
+    buf: (run, B, S, D) or (run, B, H, S, D); shift: (B,) int32."""
+    from repro.kernels.cache_gather.ops import cache_roll
+    lead = buf.shape[:-2]                        # (run, B[, H])
+    reps = 1
+    for d in lead:
+        reps *= d
+    per_b = reps // (lead[0] * lead[1])          # heads folded after batch
+    shift_r = jnp.tile(jnp.repeat(shift.astype(jnp.int32), per_b), lead[0])
+    flat = buf.reshape((reps,) + buf.shape[-2:])
+    return cache_roll(flat, shift_r, impl=impl).reshape(buf.shape)
+
+
+def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
+                         width: int, *, impl: str = "auto"):
+    """Compact verify-prefill caches to the left-aligned decode layout.
+
+    After ``prefill`` over [left-padded prompt | right-padded draft] of width
+    ``width``, row b's accepted context (p_len + n = ``valid_len[b]`` tokens)
+    occupies the contiguous slot range [P - p_len, P + n).  Rotating the
+    sequence axis right by ``shift[b] = width - (P + n[b])`` lands it at
+    [width - valid_len, width) — exactly the layout ``prefill`` over the
+    left-aligned tokens would have produced — and slot positions are
+    rewritten in closed form (slots outside the valid range become -1, so
+    position-masked attention ignores whatever K/V the rotation wrapped in).
+
+    caches: trunk cache list (attention-only, see supports_cache_realign);
+    shift / valid_len: (B,) int32; width: python int (the prefilled width).
+    Returns the realigned cache pytree, ready for ``resume_from_cache`` with
+    write_offset = width.
+    """
+    assert supports_cache_realign(cfg), "realign needs attention-only trunks"
+    new_caches = []
+    for run in caches:
+        sc = run["self"]
+        S = sc["pos"].shape[-1]
+        run_len, B = sc["pos"].shape[0], sc["pos"].shape[1]
+        j = jnp.arange(S, dtype=jnp.int32)[None, :]
+        start = (width - valid_len.astype(jnp.int32))[:, None]
+        pos_row = jnp.where((j >= start) & (j < width), j - start, -1)
+        new_sc = {"pos": jnp.broadcast_to(pos_row[None], (run_len, B, S))}
+        for name in ("k", "v", "ckv", "krope"):
+            if name in sc:
+                new_sc[name] = _roll_rows(sc[name], shift, impl)
+        new_caches.append({"self": new_sc})
+    return new_caches
+
+
 def prefill(params, cfg: ModelConfig, tokens, positions, caches, *,
             encoder_out=None, encoder_positions=None, prefix_embeds=None,
             use_pallas: bool = False):
     """Run the prompt through the model, filling caches at slots [0, T).
 
     Returns (logits (B, T, V), new_caches)."""
+    OP_COUNTS["prefill"] += 1
     x = _embed(params, cfg, tokens, positions if prefix_embeds is None
                else positions[:, prefix_embeds.shape[1]:])
     if prefix_embeds is not None:
@@ -175,6 +248,7 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
 
     token: (B, 1); position: (B, 1); cache_start: scalar int32 — slot to write.
     Returns (logits (B, 1, V), new_caches)."""
+    OP_COUNTS["decode_step"] += 1
     x = _embed(params, cfg, token, position)
     x, caches, _ = apply_trunk(params["trunk"], cfg, x, position,
                                caches=caches, cache_start=cache_start,

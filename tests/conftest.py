@@ -2,8 +2,14 @@
 tests and benches must see the single real CPU device (the 512-device
 override belongs ONLY to repro.launch.dryrun)."""
 import os
+import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Make tests/hypothesis_compat.py importable from every test subdirectory
+# (the test tree has no __init__.py files, so pytest only puts each test
+# module's own directory on sys.path).
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 import jax.numpy as jnp

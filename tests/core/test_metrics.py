@@ -1,7 +1,7 @@
 """Overlap / diversity metrics (Fig. 2, Fig. 6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.metrics import (batch_overlap, distinct_n,
                                 prefix_match_fraction, rouge1_overlap,

@@ -96,6 +96,31 @@ def test_left_padding_invariance(setup):
                                   np.asarray(out2["tokens"]))
 
 
+def test_resume_from_cache_matches_generate(setup):
+    """Decoding from an externally prefilled cache == prefill-inside-generate
+    for the same key: the two engine entry points share one decode loop."""
+    from repro.engine.generate import resume_from_cache
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    B, P = prompt.shape
+    N = 10
+    gen = GenerateConfig(max_new_tokens=N)
+    key = jax.random.PRNGKey(11)
+    want = generate(params, cfg, gen, prompt, mask, key)
+
+    caches = M.init_cache(cfg, B, P + N)
+    logits, caches = M.prefill(params, cfg, prompt,
+                               positions_from_mask(mask), caches)
+    got = resume_from_cache(params, cfg, gen, caches, logits[:, -1],
+                            mask.sum(axis=1).astype(jnp.int32), P, key)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                  np.asarray(want["tokens"]))
+    np.testing.assert_array_equal(np.asarray(got["length"]),
+                                  np.asarray(want["length"]))
+    np.testing.assert_allclose(np.asarray(got["logprobs"]),
+                               np.asarray(want["logprobs"]), atol=1e-6)
+
+
 def test_score_first_token_and_pads_zero(setup):
     cfg, params = setup
     prompt, mask = _prompt(cfg)

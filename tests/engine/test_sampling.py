@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.engine.sampling import adjust_logits, entropy_of, logprobs_of, sample
 

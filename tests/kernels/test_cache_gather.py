@@ -1,0 +1,55 @@
+"""cache_gather kernel: interpret-mode per-row roll vs the jnp oracle across
+shapes (incl. non-tile-aligned), dtypes, and boundary shifts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cache_gather.ops import cache_roll
+from repro.kernels.cache_gather.ref import cache_roll_ref
+
+
+def _case(R, S, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    buf = jax.random.normal(ks[0], (R, S, D))
+    shift = jax.random.randint(ks[1], (R,), 0, S + 1).astype(jnp.int32)
+    return buf, shift
+
+
+@pytest.mark.parametrize("R,S,D", [
+    (1, 16, 8), (4, 32, 16), (3, 33, 8), (6, 24, 17), (2, 128, 64),
+])
+def test_interpret_matches_ref(R, S, D):
+    buf, shift = _case(R, S, D, seed=R * S + D)
+    got = cache_roll(buf, shift, impl="interpret")
+    want = cache_roll_ref(buf, shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ref_matches_numpy_roll():
+    buf, shift = _case(5, 24, 16, seed=3)
+    got = np.asarray(cache_roll(buf, shift, impl="ref"))
+    for r in range(5):
+        want = np.roll(np.asarray(buf)[r], int(shift[r]), axis=0)
+        np.testing.assert_array_equal(got[r], want)
+
+
+@pytest.mark.parametrize("shift_val", [0, 7, 24])
+def test_boundary_shifts(shift_val):
+    """shift 0 (identity), mid, and S (full wrap == identity)."""
+    buf = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 8))
+    shift = jnp.full((2,), shift_val, jnp.int32)
+    got = cache_roll(buf, shift, impl="interpret")
+    want = cache_roll_ref(buf, shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if shift_val in (0, 24):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(buf))
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32, jnp.int32])
+def test_dtypes(dtype):
+    buf, shift = _case(3, 32, 16, seed=9)
+    buf = buf.astype(dtype)
+    got = cache_roll(buf, shift, impl="interpret")
+    want = cache_roll_ref(buf, shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.spec_verify.kernel import spec_verify_pallas
 from repro.kernels.spec_verify.ops import spec_verify

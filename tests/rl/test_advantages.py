@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.rl.advantages import (gae_advantages, group_relative_advantages,
                                  terminal_reward_to_tokens, whiten)
