@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.kernels.cache_gather.ops import cache_roll
 from repro.kernels.cache_gather.ref import cache_roll_ref
+from repro.kernels.cache_slot_write.ops import cache_slot_write
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.rwkv6_wkv.ops import wkv
 from repro.kernels.spec_verify.ops import spec_verify
@@ -60,6 +61,18 @@ def run(smoke: bool = False) -> None:
     want = cache_roll_ref(buf[:4, :32], shift[:4] % 32)
     assert (np.asarray(got) == np.asarray(want)).all()
     emit("kernels/cache_gather_interpret_check", 0.0, "allclose=True")
+
+    # cache_slot_write: serving slot-admission scatter (DESIGN.md §6)
+    src = jax.random.normal(ks[2], (R // 2, S, D))
+    rows = jax.random.permutation(ks[3], R)[:R // 2].astype(jnp.int32)
+    us = _time(cache_slot_write, buf, src, rows, impl="ref", iters=iters)
+    emit("kernels/cache_slot_write_ref", us, f"Rd={R};Rs={R // 2};S={S};D={D}")
+    got = cache_slot_write(buf[:6, :32], src[:3, :32], rows[:3] % 6,
+                           impl="interpret")
+    want = cache_slot_write(buf[:6, :32], src[:3, :32], rows[:3] % 6,
+                            impl="ref")
+    assert (np.asarray(got) == np.asarray(want)).all()
+    emit("kernels/cache_slot_write_interpret_check", 0.0, "bit_exact=True")
 
     AT = 64 if smoke else 256
     q = jax.random.normal(ks[0], (2, 8, AT, 64))

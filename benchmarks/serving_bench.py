@@ -1,0 +1,192 @@
+"""Serving benchmark: fixed-batch decode vs the continuous-batching slot
+scheduler (vanilla and speculative-prefix admission) on a long-tailed
+response-length distribution.  Writes BENCH_serving.json.
+
+Fixed-batch decode runs each 8-request batch to its *slowest* row, so the
+long tail idles every short row; the slot scheduler backfills freed slots
+immediately.  Tokens are identical between the two engines (same
+per-request PRNG keys — asserted), so the comparison is pure scheduling.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import RolloutCache
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import Request, SlotEngine
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+SLOTS = 8
+PROMPT_LEN = 16
+# long tail: most rows short, 1-in-10 runs the full budget
+TAIL_FRACTIONS = (0.125, 0.25, 0.5, 1.0)
+TAIL_WEIGHTS = (0.5, 0.25, 0.15, 0.1)
+
+
+def _setup(N, seed=0):
+    cfg = ModelConfig(name="bench", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                      max_seq_len=max(256, PROMPT_LEN + 2 * N))
+    params = M.init_lm(jax.random.PRNGKey(seed), cfg)
+    gen = GenerateConfig(max_new_tokens=N, eos_id=VOCAB_SIZE - 1)
+    return cfg, params, gen
+
+
+def _requests(n_requests, N, seed=0):
+    rng = random.Random(seed)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (n_requests, PROMPT_LEN), 3,
+        VOCAB_SIZE - 1))
+    keys = np.asarray(jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.PRNGKey(seed + 2), i))(
+        jnp.arange(n_requests)))
+    vkeys = np.asarray(jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.PRNGKey(seed + 3), i))(
+        jnp.arange(n_requests)))
+    reqs = []
+    for i in range(n_requests):
+        budget = max(1, int(N * rng.choices(TAIL_FRACTIONS, TAIL_WEIGHTS)[0]))
+        reqs.append(Request(request_id=i, prompt=prompts[i].astype(np.int32),
+                            key=keys[i], verify_key=vkeys[i],
+                            max_new_tokens=budget))
+    return reqs
+
+
+def _run_fixed(cfg, params, gen, reqs):
+    """Fixed-batch baseline: SLOTS-sized batches decoded to the slowest row."""
+    from repro.engine.generate import generate
+    outs, n_gen = {}, 0
+    for lo in range(0, len(reqs), SLOTS):
+        chunk = reqs[lo:lo + SLOTS]
+        toks = np.stack([r.prompt for r in chunk])
+        mask = np.ones_like(toks, bool)
+        out = generate(params, cfg, gen, jnp.asarray(toks), jnp.asarray(mask),
+                       jnp.asarray(np.stack([r.key for r in chunk])),
+                       row_budget=jnp.asarray([r.max_new_tokens
+                                               for r in chunk], jnp.int32))
+        jax.block_until_ready(out["tokens"])
+        for j, r in enumerate(chunk):
+            outs[r.request_id] = np.asarray(
+                out["tokens"][j, :int(out["length"][j])])
+        n_gen += int(out["n_generated"])
+    return outs, n_gen
+
+
+def _run_slots(cfg, params, gen, reqs, drafts=None):
+    engine = SlotEngine(params, cfg, gen, num_slots=SLOTS,
+                        prompt_width=PROMPT_LEN, spec_prefix=drafts is not None,
+                        log_lenience=0.0)
+    for r in reqs:
+        if drafts is not None:
+            e = drafts.get(r.request_id)
+            r.draft_tokens, r.draft_logprobs = e.tokens, e.logprobs
+            r.draft_eos = e.ends_with_eos
+        engine.submit(r)
+    resps = engine.run()
+    outs = {i: resps[i].tokens for i in resps}
+    return outs, engine.stats(), resps
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(smoke: bool = False, out_path: str = OUT_PATH) -> dict:
+    N = 48 if smoke else 64
+    n_requests = 24 if smoke else 64
+    cfg, params, gen = _setup(N)
+
+    reqs = _requests(n_requests, N)
+    _run_fixed(cfg, params, gen, reqs[:SLOTS])          # compile warmup
+    _run_slots(cfg, params, gen, _requests(SLOTS, N, seed=7))
+
+    (fixed_out, n_gen_fixed), t_fixed = _timed(
+        lambda: _run_fixed(cfg, params, gen, reqs))
+    (slot_out, sched, _), t_slots = _timed(
+        lambda: _run_slots(cfg, params, gen, _requests(n_requests, N)))
+
+    # same per-request keys => identical tokens; the comparison is scheduling
+    for i in range(n_requests):
+        np.testing.assert_array_equal(slot_out[i], fixed_out[i])
+    n_gen_slots = int(sched["generated_tokens"])
+    assert n_gen_slots == n_gen_fixed, (n_gen_slots, n_gen_fixed)
+
+    # speculative-prefix admission: drafts from a previous (identical-policy)
+    # pass, so verification accepts nearly everything
+    drafts = RolloutCache()
+    _, _, warm_resps = _run_slots(cfg, params, gen, _requests(n_requests, N))
+    for i, resp in warm_resps.items():
+        drafts.put(i, resp.tokens, resp.logprobs, resp.length, step=0,
+                   eos_id=gen.eos_id)
+    _run_slots(cfg, params, gen, _requests(SLOTS, N), drafts=drafts)  # warmup
+    (spec_out, spec_sched, _), t_spec = _timed(
+        lambda: _run_slots(cfg, params, gen, _requests(n_requests, N),
+                           drafts=drafts))
+
+    served_spec = int(spec_sched["generated_tokens"]
+                      + spec_sched["reused_tokens"])
+    record = {
+        "backend": jax.default_backend(),
+        "slots": SLOTS, "requests": n_requests, "prompt_len": PROMPT_LEN,
+        "max_new_tokens": N,
+        "tail": {"fractions": TAIL_FRACTIONS, "weights": TAIL_WEIGHTS},
+        "fixed": {"time_s": t_fixed, "tokens": n_gen_fixed,
+                  "tok_per_s": n_gen_fixed / max(t_fixed, 1e-9)},
+        "slots_sched": {"time_s": t_slots, "tokens": n_gen_slots,
+                        "tok_per_s": n_gen_slots / max(t_slots, 1e-9),
+                        "occupancy": sched["occupancy"],
+                        "engine_steps": sched["engine_steps"]},
+        "slots_spec": {"time_s": t_spec, "generated": int(
+            spec_sched["generated_tokens"]),
+            "reused": int(spec_sched["reused_tokens"]),
+            "served_tok_per_s": served_spec / max(t_spec, 1e-9),
+            "occupancy": spec_sched["occupancy"]},
+    }
+    record["speedup_slots_vs_fixed"] = (record["slots_sched"]["tok_per_s"]
+                                        / record["fixed"]["tok_per_s"])
+    record["speedup_spec_vs_fixed"] = (record["slots_spec"]["served_tok_per_s"]
+                                       / record["fixed"]["tok_per_s"])
+    emit("serving/fixed", t_fixed * 1e6,
+         f"tok={n_gen_fixed};tok_s={record['fixed']['tok_per_s']:.0f}")
+    emit("serving/slots", t_slots * 1e6,
+         f"tok={n_gen_slots};tok_s={record['slots_sched']['tok_per_s']:.0f};"
+         f"occ={sched['occupancy']:.2f}")
+    emit("serving/slots_spec", t_spec * 1e6,
+         f"served={served_spec};tok_s="
+         f"{record['slots_spec']['served_tok_per_s']:.0f}")
+    emit("serving/speedup", 0.0,
+         f"slots={record['speedup_slots_vs_fixed']:.2f}x;"
+         f"spec={record['speedup_spec_vs_fixed']:.2f}x")
+    assert record["speedup_slots_vs_fixed"] >= 1.5, \
+        f"slot scheduler below 1.5x: {record['speedup_slots_vs_fixed']:.2f}"
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("serving/json", 0.0, out_path)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests, smaller budgets")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

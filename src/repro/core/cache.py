@@ -8,7 +8,7 @@ immediately after every step for the prompts that were rolled — the paper's
 """
 from __future__ import annotations
 
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -24,14 +24,25 @@ class CacheEntry:
 
 
 class RolloutCache:
-    """Maps prompt_id -> recent rollouts (most recent last)."""
+    """Maps prompt_id -> recent rollouts (most recent last).
 
-    def __init__(self, history: int = 4):
+    ``max_prompts`` bounds host memory: millions of distinct prompt_ids must
+    not grow the store without limit, so when set, the least-recently-used
+    prompt (by put *or* hit) is evicted on overflow.  An eviction only costs
+    a cold-start rollout for that prompt on its next visit — SPEC-RL stays
+    correct, it just loses the reuse speedup there — and ``stats()`` reports
+    the eviction counter so the trainer can see the pressure.
+    """
+
+    def __init__(self, history: int = 4, max_prompts: Optional[int] = None):
         self.history = max(2, history)
-        self._store: Dict[int, deque] = {}
+        assert max_prompts is None or max_prompts > 0, max_prompts
+        self.max_prompts = max_prompts
+        self._store: "OrderedDict[int, deque]" = OrderedDict()
         self.puts = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -41,9 +52,17 @@ class RolloutCache:
         tokens = np.asarray(tokens[:length], np.int32)
         logprobs = np.asarray(logprobs[:length], np.float32)
         ends = bool(length > 0 and tokens[-1] == eos_id)
-        q = self._store.setdefault(int(prompt_id), deque(maxlen=self.history))
+        pid = int(prompt_id)
+        q = self._store.get(pid)
+        if q is None:
+            q = self._store[pid] = deque(maxlen=self.history)
+        else:
+            self._store.move_to_end(pid)
         q.append(CacheEntry(tokens, logprobs, step, ends))
         self.puts += 1
+        while self.max_prompts is not None and len(self._store) > self.max_prompts:
+            self._store.popitem(last=False)          # least recently used
+            self.evictions += 1
 
     def get(self, prompt_id: int, lag: int = 1) -> Optional[CacheEntry]:
         """lag=1: most recent rollout; lag=2: one before it (Delayed Reuse)."""
@@ -52,6 +71,7 @@ class RolloutCache:
             self.misses += 1
             return None
         self.hits += 1
+        self._store.move_to_end(int(prompt_id))      # LRU touch
         return q[-lag]
 
     def batch_get(self, prompt_ids: Sequence[int], max_len: int, lag: int = 1
@@ -88,4 +108,6 @@ class RolloutCache:
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
         return {"size": len(self._store), "puts": self.puts,
-                "hit_rate": self.hits / total if total else 0.0}
+                "hit_rate": self.hits / total if total else 0.0,
+                "evictions": self.evictions,
+                "max_prompts": self.max_prompts or 0}

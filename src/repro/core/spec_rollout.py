@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.engine.generate import (GenerateConfig, generate,
                                    resume_from_cache)
+from repro.engine.sampling import split_key
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -59,6 +60,14 @@ class SpecConfig:
     one_pass: str = "auto"              # 'auto' | 'on' | 'off' — fused
                                         # verify→compact→resume engine path
     compact_impl: str = "auto"          # kernels.cache_gather impl selector
+    backfill: str = "none"              # 'none' | 'slots' — continuous-
+                                        # batching rollout (DESIGN.md §6):
+                                        # finished rows immediately pick up
+                                        # pending prompts via the serving
+                                        # slot scheduler
+    backfill_slots: int = 0             # decode-batch size for 'slots'
+                                        # (0 -> half the prompt batch)
+    cache_max_prompts: Optional[int] = None  # RolloutCache LRU bound
 
     @property
     def cache_lag(self) -> int:
@@ -157,8 +166,21 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             **model_kwargs) -> RolloutBatch:
     """One rollout step for a prompt batch.  Host-level: the cache is host
     memory; verification / compaction / generation / assembly are jit'd
-    device calls."""
+    device calls.
+
+    ``key`` may be (2,) — the classic batched PRNG stream — or (B, 2)
+    per-request keys, which make every row's tokens independent of batch
+    grouping (the contract the slot-backfill mode relies on).  With
+    ``spec.backfill == 'slots'`` the whole step is drained through the
+    serving slot scheduler instead of the fixed decode batch: rows that
+    finish early immediately pick up pending prompts (DESIGN.md §6).
+    """
     assert spec.variant in VARIANTS, spec.variant
+    if spec.backfill == "slots":
+        from repro.serving.rl_adapter import rollout_via_slots
+        return rollout_via_slots(params, cfg, gen, spec, prompts, prompt_mask,
+                                 prompt_ids, cache, key, step, **model_kwargs)
+    assert spec.backfill == "none", spec.backfill
     B, P = prompts.shape
     N = gen.max_new_tokens
     t0 = time.perf_counter()
@@ -169,7 +191,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     have_drafts = use_cache and int(drafts["draft_len"].sum()) > 0
 
     if not have_drafts:
-        key, sub = jax.random.split(key)
+        key, sub = split_key(key)
         out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub, model_kwargs)
         resp, lp, length = out["tokens"], out["logprobs"], out["length"]
         resp_mask = jnp.arange(N)[None, :] < length[:, None]
@@ -197,7 +219,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     tv0 = time.perf_counter()
     if one_pass:
         # ---- fused path: ONE forward over prompt ⊕ draft -----------------
-        key, sub = jax.random.split(key)
+        key, sub = split_key(key)
         ver = verify_and_prefill(params, cfg, prompts, prompt_mask,
                                  draft_tokens, draft_lp, draft_len, sub,
                                  spec.log_lenience, temperature=gen.temperature,
@@ -222,7 +244,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         # resume decoding from the compacted cache — zero redundant prefill
         full_reuse = (n == draft_len) & draft_eos
         td0 = time.perf_counter()
-        key, sub = jax.random.split(key)
+        key, sub = split_key(key)
         cont = resume_from_cache(params, cfg, gen, caches, ver["seed_logits"],
                                  p_len + n, W, sub, initial_done=full_reuse,
                                  row_budget=N - n, **model_kwargs)
@@ -233,7 +255,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     else:
         # ---- two-pass path: rejection positions then re-prefill ----------
         if spec.variant in ("spec", "delayed"):
-            key, sub = jax.random.split(key)
+            key, sub = split_key(key)
             ver = verify_drafts(params, cfg, prompts, prompt_mask, draft_tokens,
                                 draft_lp, draft_len, sub, spec.log_lenience,
                                 temperature=gen.temperature, top_p=gen.top_p,
@@ -243,8 +265,9 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             accept_rate = float(ver["accept_rate"])
             prefill_passes = 2.0            # score fwd + continuation prefill
         elif spec.variant == "random":
-            key, sub = jax.random.split(key)
-            frac = jax.random.uniform(sub, (B,))
+            key, sub = split_key(key)
+            frac = (jax.vmap(lambda k: jax.random.uniform(k))(sub)
+                    if jnp.ndim(sub) == 2 else jax.random.uniform(sub, (B,)))
             n = jnp.floor(frac * (draft_len + 1)).astype(jnp.int32)
             n = jnp.minimum(n, draft_len)
             prefix_lp = draft_lp            # stale behaviour probs (biased)
@@ -274,7 +297,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         compact_time = time.perf_counter() - tc0
 
         td0 = time.perf_counter()
-        key, sub = jax.random.split(key)
+        key, sub = split_key(key)
         cont = generate(params, cfg, gen, aligned_tokens, aligned_mask, sub,
                         initial_done=full_reuse, row_budget=N - n, **model_kwargs)
         jax.block_until_ready(cont["tokens"])

@@ -29,6 +29,19 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 
 
+def _accept_uniforms(key, B: int, N: int) -> jnp.ndarray:
+    """Per-token acceptance uniforms u (B, N).
+
+    key: (2,) — one stream for the whole batch — or (B, 2) per-row keys,
+    where row b's uniforms depend only on its own key.  Per-row streams make
+    the rejection index a per-request quantity, invariant to how requests
+    are grouped into verification batches (serving spec-prefix admission,
+    DESIGN.md §6)."""
+    if jnp.ndim(key) == 2:
+        return jax.vmap(lambda k: jax.random.uniform(k, (N,)))(key)
+    return jax.random.uniform(key, (B, N))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",
                                              "impl"))
 def verify_drafts(params, cfg: ModelConfig, prompt, prompt_mask,
@@ -54,7 +67,7 @@ def verify_drafts(params, cfg: ModelConfig, prompt, prompt_mask,
                **model_kwargs)
     lp_curr = sc["logprobs"][:, P:]                       # (B, N)
 
-    u = jax.random.uniform(key, (B, N))
+    u = _accept_uniforms(key, B, N)
     n = spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
                     impl=impl)
 
@@ -104,7 +117,7 @@ def verify_and_prefill(params, cfg: ModelConfig, prompt, prompt_mask,
                                    axis=1)
     lp_curr = jnp.where(valid, lp, 0.0)[:, P:]            # (B, N)
 
-    u = jax.random.uniform(key, (B, N))
+    u = _accept_uniforms(key, B, N)
     n = spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
                     impl=impl)
 

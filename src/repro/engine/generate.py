@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
-from .sampling import entropy_of, logprobs_of, sample
+from .sampling import entropy_of, logprobs_of, sample, split_key
 
 PAD = 0
 
@@ -107,10 +107,15 @@ def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
     next_pos: (B,) position value of that first token.  Key-split order is
     identical whether entered via ``generate`` or ``resume_from_cache`` so
     the two-pass and one-pass SPEC-RL paths are sample-for-sample exact.
+
+    ``key`` may be (2,) (batched sampling) or (B, 2) per-row keys; with
+    per-row keys row b's token stream depends only on its own key, which is
+    the invariant the serving slot scheduler's step loop mirrors split for
+    split (see serving/engine_loop.py and DESIGN.md §6).
     """
     B = seed_logits.shape[0]
     N = gen.max_new_tokens
-    key, sub = jax.random.split(key)
+    key, sub = split_key(key)
     tok0, lp0 = sample(sub, seed_logits, gen.temperature, gen.top_p)
 
     tokens_buf = jnp.full((B, N), gen.pad_id, jnp.int32)
@@ -135,7 +140,7 @@ def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
             params, cfg, tok_store[:, None],
             jnp.where(done[:, None], -1, next_pos[:, None]),
             caches, write_offset + step, **extras)
-        key, sub = jax.random.split(key)
+        key, sub = split_key(key)
         nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
         return (step + 1, done_next, nxt, nlp, next_pos + 1, caches,
                 tokens_buf, lp_buf, count, key)

@@ -5,6 +5,16 @@ SPEC-RL correctness requires the cached behaviour log-probs ``p_prev`` to be
 the true probabilities the rollout engine sampled from — i.e. *after*
 temperature and top-p renormalisation — so that the acceptance ratio
 q/p in Eq. (2) is exact.  ``sample`` therefore returns that log-prob.
+
+Per-request PRNG streams
+------------------------
+Every sampling entry point accepts either one PRNG key of shape (2,) —
+classic batched sampling, where a row's draw depends on its batch index —
+or per-row keys of shape (B, 2), where row b is sampled from its own key.
+Per-row keys make a row's token stream a function of (its key, its tokens)
+alone, independent of batch size, batch position and co-batched rows.  That
+invariance is what lets the serving slot scheduler (DESIGN.md §6) re-batch
+requests freely while staying token-identical to fixed-batch ``generate``.
 """
 from __future__ import annotations
 
@@ -12,6 +22,20 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def split_key(key):
+    """``jax.random.split`` lifted over an optional per-row key batch.
+
+    key: (2,) or (B, 2) uint32.  Returns (carry, sub) with key's shape; the
+    (2,) case is exactly ``jax.random.split(key)``, so callers migrating to
+    per-row keys keep their scalar-key PRNG streams bit-identical.
+    """
+    if jnp.ndim(key) == 2:
+        ks = jax.vmap(jax.random.split)(key)          # (B, 2, 2)
+        return ks[:, 0], ks[:, 1]
+    k1, k2 = jax.random.split(key)
+    return k1, k2
 
 
 def adjust_logits(logits, temperature: float = 1.0, top_p: float = 1.0):
@@ -38,14 +62,21 @@ def adjust_logits(logits, temperature: float = 1.0, top_p: float = 1.0):
 def sample(key, logits, temperature: float = 1.0, top_p: float = 1.0):
     """Sample one token per row.
 
-    logits: (B, V).  Returns (token (B,) int32, logprob (B,) float32) where
-    logprob is under the temperature/top-p-adjusted distribution.
+    logits: (B, V); key: (2,) for batched sampling or (B, 2) for per-row
+    streams (see module docstring).  Returns (token (B,) int32, logprob
+    (B,) float32) where logprob is under the temperature/top-p-adjusted
+    distribution.
     """
     logp = adjust_logits(logits.astype(jnp.float32), temperature, top_p)
     if temperature <= 0.0:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return tok, jnp.zeros(tok.shape, jnp.float32)
-    tok = jax.random.categorical(key, logp, axis=-1).astype(jnp.int32)
+    if jnp.ndim(key) == 2:
+        tok = jax.vmap(
+            lambda k, lp: jax.random.categorical(k, lp))(key, logp)
+        tok = tok.astype(jnp.int32)
+    else:
+        tok = jax.random.categorical(key, logp, axis=-1).astype(jnp.int32)
     lp = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
     return tok, lp
 

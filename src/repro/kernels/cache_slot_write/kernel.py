@@ -1,0 +1,54 @@
+"""Pallas-TPU kernel for serving slot admission (cache_slot_write).
+
+The continuous-batching engine (DESIGN.md §6) keeps one persistent dense KV
+cache of B slots.  When a slot frees, the next request's freshly prefilled
+cache row must replace the old row *in place* — a batched scatter along the
+flattened (run, batch, head) row axis, the write-side dual of cache_gather's
+per-row roll and sharing its (R, S, D) layout.
+
+Rather than scattering source rows (which would leave unwritten output
+blocks undefined without buffer aliasing), the kernel walks every
+*destination* row and pulls: the per-row source index arrives via scalar
+prefetch (SMEM), the input BlockSpec index map redirects the DMA to either
+the selected source row or the old destination row, and the body writes a
+select of the two.  One HBM read + write per cache row, no aliasing
+requirement, stable semantics in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slot_write_kernel(idx_ref, src_ref, dst_ref, out_ref):
+    d = pl.program_id(0)
+    out_ref[0] = jnp.where(idx_ref[d] >= 0, src_ref[0], dst_ref[0])
+
+
+def cache_slot_write_pallas(dst, src, src_for_dst, *, interpret: bool = False):
+    """dst: (Rd, S, D); src: (Rs, S, D); src_for_dst: (Rd,) int32.
+
+    Returns out with out[d] = src[src_for_dst[d]] where src_for_dst[d] >= 0
+    and out[d] = dst[d] elsewhere.
+    """
+    Rd, S, D = dst.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Rd,),
+        in_specs=[
+            # source block: redirected per destination row (clamped for the
+            # keep case, whose DMA result is discarded by the select)
+            pl.BlockSpec((1, S, D),
+                         lambda d, idx_ref: (jnp.maximum(idx_ref[d], 0), 0, 0)),
+            pl.BlockSpec((1, S, D), lambda d, idx_ref: (d, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, D), lambda d, idx_ref: (d, 0, 0)),
+    )
+    return pl.pallas_call(
+        _slot_write_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        interpret=interpret,
+    )(src_for_dst.astype(jnp.int32), src.astype(dst.dtype), dst)

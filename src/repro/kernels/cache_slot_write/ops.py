@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for the cache_slot_write admission kernel.
+
+``cache_slot_write`` replaces selected rows of a flattened KV-cache buffer
+with freshly prefilled source rows — the primitive behind
+model.write_cache_slots, which admits new requests into the persistent
+serving batch by in-place slot replacement (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cache_slot_write_pallas
+from .ref import cache_slot_write_ref
+
+
+def _invert_rows(dst_rows, n_dst: int, n_src: int):
+    """dst_rows: (Rs,) -> src_for_dst: (Rd,) with -1 for untouched rows.
+
+    Deterministic on duplicates: the LAST source row targeting a
+    destination wins (the admission path only ever duplicates identical
+    rows, but the contract should not depend on scatter ordering).
+    scatter-max over source indices IS last-wins — "last" = highest index —
+    and stays O(Rd + Rs) on the admission hot path.
+    """
+    return jnp.full((n_dst,), -1, jnp.int32).at[dst_rows].max(
+        jnp.arange(n_src, dtype=jnp.int32), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def cache_slot_write(dst, src, dst_rows, *, impl: str = "auto"):
+    """dst: (Rd, S, D); src: (Rs, S, D); dst_rows: (Rs,) int32 in [0, Rd).
+
+    Returns out with out[dst_rows[i]] = src[i] and every other destination
+    row unchanged.  Duplicate dst_rows: the last source row wins.
+    impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'.
+    """
+    assert dst.ndim == 3 and src.ndim == 3, (dst.shape, src.shape)
+    assert dst.shape[1:] == src.shape[1:], (dst.shape, src.shape)
+    src_for_dst = _invert_rows(dst_rows.astype(jnp.int32), dst.shape[0],
+                               src.shape[0])
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return cache_slot_write_ref(dst, src, src_for_dst)
+    return cache_slot_write_pallas(dst, src, src_for_dst,
+                                   interpret=(impl == "interpret"))

@@ -1,0 +1,22 @@
+"""jnp oracle for cache_slot_write: batched row scatter with keep-mask.
+
+The serving slot scheduler admits freshly prefilled requests into a
+persistent decode batch by replacing whole cache rows in place (DESIGN.md
+§6).  The closed form is a select over the destination rows: row ``d`` takes
+source row ``src_for_dst[d]`` when that index is >= 0 and keeps its old
+contents otherwise — the same inverse-map formulation the Pallas kernel
+realises block-by-block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_slot_write_ref(dst, src, src_for_dst):
+    """dst: (Rd, S, D); src: (Rs, S, D); src_for_dst: (Rd,) int32.
+
+    out[d] = src[src_for_dst[d]] if src_for_dst[d] >= 0 else dst[d].
+    """
+    take = jnp.clip(src_for_dst.astype(jnp.int32), 0, src.shape[0] - 1)
+    keep = (src_for_dst < 0)[:, None, None]
+    return jnp.where(keep, dst, src[take].astype(dst.dtype))

@@ -1,11 +1,16 @@
-"""Serving launcher: batched generation with any --arch (reduced variant on
-CPU), one prefill + decode loop per request batch.
+"""Serving launcher: continuous-batching slot server with a request arrival
+stream, speculative-prefix admission, and latency/throughput stats
+(DESIGN.md §6).  Falls back to one-shot fixed-batch generation for trunks
+the slot engine does not cover (recurrent state, encoder/vision extras).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+    PYTHONPATH=src python -m repro.launch.serve --no-smoke --arch qwen3-1.7b \
+        --requests 64 --slots 8 --spec-prefix
 """
 from __future__ import annotations
 
 import argparse
+import random
 import time
 
 import jax
@@ -13,53 +18,191 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.cache import RolloutCache
 from repro.data.dataset import PromptDataset
 from repro.data.tokenizer import VOCAB_SIZE, decode
 from repro.engine.generate import GenerateConfig, generate
 from repro.models import model as M
 from repro.rewards.mathgen import MathTaskConfig, generate_problems
+from repro.serving import Request, SlotEngine
+
+# long-tailed per-request budgets (fractions of --max-new-tokens): most
+# requests are short, a few run to the full budget — the regime where
+# fixed-batch decode idles on its stragglers
+TAIL_FRACTIONS = (0.25, 0.25, 0.5, 1.0)
+TAIL_WEIGHTS = (0.5, 0.25, 0.15, 0.1)
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", choices=sorted(ARCH_IDS), default="qwen3-0.6b")
-    p.add_argument("--smoke", action="store_true", default=True)
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--max-new-tokens", type=int, default=12)
-    args = p.parse_args(argv)
+def build_requests(ds: PromptDataset, rng: random.Random, n_requests: int,
+                   max_new_tokens: int, key) -> list:
+    batch = ds.sample_batch(rng, n_requests, 1)
+    keys = np.asarray(jax.vmap(
+        lambda i: jax.random.fold_in(key, i))(jnp.arange(n_requests)))
+    reqs = []
+    for i in range(n_requests):
+        p_len = int(batch.mask[i].sum())
+        budget = max(1, int(max_new_tokens *
+                            rng.choices(TAIL_FRACTIONS, TAIL_WEIGHTS)[0]))
+        reqs.append(Request(
+            request_id=i, prompt=batch.tokens[i, -p_len:].astype(np.int32),
+            key=keys[i], max_new_tokens=budget))
+    return reqs
 
-    cfg = get_config(args.arch).reduced(vocab_size=max(VOCAB_SIZE, 64))
-    if cfg.vocab_size < VOCAB_SIZE:
-        cfg = cfg.replace(vocab_size=VOCAB_SIZE)
-    params = M.init_lm(jax.random.PRNGKey(0), cfg)
 
-    problems = generate_problems(MathTaskConfig(num_problems=args.batch))
-    ds = PromptDataset(problems, max_prompt_len=10)
-    batch = ds.sample_batch(__import__("random").Random(0), args.batch, 1)
-    gen = GenerateConfig(max_new_tokens=args.max_new_tokens)
-
+def _model_extras(params, cfg, batch: int, seed: int = 1):
+    """Stub modality conditioning for encoder / vision trunks (the same
+    placeholder inputs the engine tests use)."""
     kw = {}
     if cfg.encoder_layers:
-        frames = jax.random.normal(jax.random.PRNGKey(1),
-                                   (args.batch, cfg.encoder_frames,
-                                    cfg.d_model))
+        frames = jax.random.normal(jax.random.PRNGKey(seed),
+                                   (batch, cfg.encoder_frames, cfg.d_model))
         enc, pos = M.encode(params, cfg, frames)
         kw = {"encoder_out": enc, "encoder_positions": pos}
     if cfg.num_prefix_embeddings:
         kw["prefix_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.num_prefix_embeddings, cfg.d_model))
+            jax.random.PRNGKey(seed + 1),
+            (batch, cfg.num_prefix_embeddings, cfg.d_model))
+    return kw
+
+
+def serve_fixed(params, cfg, gen, reqs, prompt_width, slots):
+    """Fixed-batch baseline: decode ``slots``-sized batches to the slowest
+    row (legacy serve.py behaviour).  Returns (tokens dict, n_generated)."""
+    outs, total = {}, 0
+    for lo in range(0, len(reqs), slots):
+        chunk = reqs[lo:lo + slots]
+        B = len(chunk)
+        toks = np.zeros((B, prompt_width), np.int32)
+        mask = np.zeros((B, prompt_width), bool)
+        for j, r in enumerate(chunk):
+            toks[j, prompt_width - len(r.prompt):] = r.prompt
+            mask[j, prompt_width - len(r.prompt):] = True
+        keys = jnp.asarray(np.stack([r.key for r in chunk]))
+        budget = jnp.asarray([r.max_new_tokens for r in chunk], jnp.int32)
+        out = generate(params, cfg, gen, jnp.asarray(toks), jnp.asarray(mask),
+                       keys, row_budget=budget,
+                       **_model_extras(params, cfg, B))
+        jax.block_until_ready(out["tokens"])
+        for j, r in enumerate(chunk):
+            L = int(out["length"][j])
+            outs[r.request_id] = np.asarray(out["tokens"][j, :L])
+        total += int(out["n_generated"])
+    return outs, total
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=sorted(ARCH_IDS), default="qwen3-0.6b")
+    p.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="tiny reduced run (default); --no-smoke serves the "
+                        "full request/token budget")
+    p.add_argument("--engine", choices=["auto", "slots", "fixed"],
+                   default="auto")
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode-batch slots (also the fixed-batch size)")
+    p.add_argument("--requests", type=int, default=None)
+    p.add_argument("--max-new-tokens", type=int, default=None)
+    p.add_argument("--prompt-len", type=int, default=10)
+    p.add_argument("--arrival-every", type=int, default=0,
+                   help="stagger arrivals: one request every K engine steps "
+                        "(0 = all queued up front)")
+    p.add_argument("--spec-prefix", action="store_true",
+                   help="serve every request twice: the first pass's output "
+                        "becomes the second pass's speculative prefix")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    n_requests = args.requests or (8 if args.smoke else 64)
+    max_new = args.max_new_tokens or (12 if args.smoke else 64)
+
+    cfg = get_config(args.arch).reduced(vocab_size=max(VOCAB_SIZE, 64))
+    if cfg.vocab_size < VOCAB_SIZE:
+        cfg = cfg.replace(vocab_size=VOCAB_SIZE)
+    params = M.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    gen = GenerateConfig(max_new_tokens=max_new)
+
+    rng = random.Random(args.seed)
+    problems = generate_problems(MathTaskConfig(num_problems=n_requests))
+    ds = PromptDataset(problems, max_prompt_len=args.prompt_len)
+    reqs = build_requests(ds, rng, n_requests, max_new,
+                          jax.random.PRNGKey(args.seed + 3))
+
+    engine_kind = args.engine
+    if engine_kind == "auto":
+        engine_kind = "slots" if M.supports_slot_serving(cfg) else "fixed"
+    if engine_kind == "slots" and not M.supports_slot_serving(cfg):
+        raise SystemExit(f"--engine slots unsupported for arch {cfg.name} "
+                         "(recurrent trunk or modality extras)")
+    if engine_kind == "fixed" and (args.spec_prefix or args.arrival_every):
+        raise SystemExit(
+            f"--spec-prefix/--arrival-every need the slot engine, but "
+            f"engine resolved to 'fixed' for arch {cfg.name}; drop the "
+            "flags or pick a slot-capable --arch")
 
     t0 = time.time()
-    out = generate(params, cfg, gen, jnp.asarray(batch.tokens),
-                   jnp.asarray(batch.mask), jax.random.PRNGKey(3), **kw)
-    jax.block_until_ready(out["tokens"])
+    if engine_kind == "fixed":
+        outs, n_gen = serve_fixed(params, cfg, gen, reqs, args.prompt_len,
+                                  args.slots)
+        dt = time.time() - t0
+        print(f"arch={cfg.name} engine=fixed: served {n_requests} requests, "
+              f"{n_gen} tokens in {dt:.2f}s ({n_gen / max(dt, 1e-9):.0f} tok/s)")
+        for i in range(min(n_requests, 4)):
+            print(f"  req{i}: {decode(outs[i])!r}")
+        return 0
+
+    drafts = None
+    if args.spec_prefix:
+        # pass 1 (vanilla) builds the draft cache; pass 2 below serves with
+        # speculative-prefix admission against the same policy
+        warm = SlotEngine(params, cfg, gen, num_slots=args.slots,
+                          prompt_width=args.prompt_len)
+        for r in reqs:
+            warm.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                key=r.key, max_new_tokens=r.max_new_tokens))
+        warm_resp = warm.run()
+        drafts = RolloutCache()
+        for i, r in enumerate(reqs):
+            resp = warm_resp[r.request_id]
+            drafts.put(r.request_id, resp.tokens, resp.logprobs, resp.length,
+                       step=0, eos_id=gen.eos_id)
+        vkeys = np.asarray(jax.vmap(
+            lambda i: jax.random.fold_in(jax.random.PRNGKey(args.seed + 11), i)
+        )(jnp.arange(n_requests)))
+        for i, r in enumerate(reqs):
+            e = drafts.get(r.request_id)
+            r.verify_key = vkeys[i]
+            r.draft_tokens, r.draft_logprobs = e.tokens, e.logprobs
+            r.draft_eos = e.ends_with_eos
+        t0 = time.time()
+
+    engine = SlotEngine(params, cfg, gen, num_slots=args.slots,
+                        prompt_width=args.prompt_len,
+                        spec_prefix=args.spec_prefix, log_lenience=0.0)
+    if args.arrival_every > 0:
+        arrivals = [(i * args.arrival_every, r) for i, r in enumerate(reqs)]
+        resps = engine.run(arrivals=arrivals)
+    else:
+        for r in reqs:
+            engine.submit(r)
+        resps = engine.run()
     dt = time.time() - t0
-    print(f"arch={cfg.name}: served {args.batch} requests, "
-          f"{int(out['n_generated'])} tokens in {dt:.2f}s")
-    for i in range(min(args.batch, 4)):
-        txt = decode(np.asarray(out["tokens"][i, :out["length"][i]]))
-        print(f"  req{i}: {txt!r}")
+    s = engine.stats()
+    n_gen = int(s["generated_tokens"])
+    print(f"arch={cfg.name} engine=slots(spec={args.spec_prefix}): served "
+          f"{n_requests} requests, {n_gen} generated "
+          f"(+{int(s['reused_tokens'])} reused) tokens in {dt:.2f}s "
+          f"({(n_gen + int(s['reused_tokens'])) / max(dt, 1e-9):.0f} tok/s)")
+    print(f"  occupancy={s['occupancy']:.2f} engine_steps={int(s['engine_steps'])} "
+          f"admissions={int(s['admitted'])} "
+          f"mean_queue_wait={s['mean_queue_wait'] * 1e3:.1f}ms "
+          f"mean_serve={s['mean_serve_time'] * 1e3:.1f}ms")
+    for i in range(min(n_requests, 4)):
+        r = resps[i]
+        full = np.concatenate([
+            np.asarray(reqs[i].draft_tokens[:r.n_accepted], np.int32)
+            if r.n_accepted else np.zeros(0, np.int32), r.tokens])
+        print(f"  req{i} [{r.finish_reason}]: {decode(full)!r}")
     return 0
 
 

@@ -132,11 +132,21 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     }
 
 
-def _cache_write(buf, update, start):
-    """Write ``update`` (length T) into ``buf`` at slot ``start`` on the seq axis."""
-    T = update.shape[-2] if update.ndim == 4 else update.shape[-2]
-    return jax.lax.dynamic_update_slice_in_dim(
-        buf, update.astype(buf.dtype), start, axis=-2)
+def _cache_write(buf, update, start, axis: int = -2):
+    """Write ``update`` (length T) into ``buf`` at slot ``start`` on ``axis``.
+
+    start: scalar — one slot for the whole batch (prefill / lockstep decode)
+    — or (B,) int32 — per-row slots, required by the serving slot scheduler
+    whose slots sit at different decode depths (DESIGN.md §6).  The per-row
+    form is a vmap'd dynamic_update_slice (a scatter), writing the same
+    values at the same indices as the scalar form does row by row.
+    """
+    update = update.astype(buf.dtype)
+    if jnp.ndim(start) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, update, start, axis)
+    return jax.vmap(
+        lambda b, u, s: jax.lax.dynamic_update_slice_in_dim(b, u, s, axis)
+    )(buf, update, start.astype(jnp.int32))
 
 
 # ------------------------------------------------------------------ GQA layer
@@ -193,8 +203,8 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
     if cache is not None:
         k_all = _cache_write(cache["k"], k, cache_start)
         v_all = _cache_write(cache["v"], v, cache_start)
-        pos_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], kv_pos.astype(jnp.int32), cache_start, axis=-1)
+        pos_all = _cache_write(cache["pos"], kv_pos.astype(jnp.int32),
+                               cache_start, axis=-1)
         new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
         k, v, kv_pos = k_all, v_all, pos_all
 
@@ -270,12 +280,11 @@ def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
     kv_pos = positions
     new_cache = None
     if cache is not None:
-        ckv_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_start, axis=1)
-        krope_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype), cache_start, axis=1)
-        pos_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], positions.astype(jnp.int32), cache_start, axis=-1)
+        ckv_all = _cache_write(cache["ckv"], ckv, cache_start, axis=-2)
+        krope_all = _cache_write(cache["krope"], k_rope[:, 0], cache_start,
+                                 axis=-2)
+        pos_all = _cache_write(cache["pos"], positions.astype(jnp.int32),
+                               cache_start, axis=-1)
         new_cache = {"ckv": ckv_all, "krope": krope_all, "pos": pos_all}
         ckv, k_rope, kv_pos = ckv_all, krope_all[:, None], pos_all
 

@@ -219,6 +219,63 @@ def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
     return new_caches
 
 
+def supports_slot_serving(cfg: ModelConfig, model_kwargs=None) -> bool:
+    """Whether the continuous-batching slot engine (DESIGN.md §6) applies.
+
+    Needs per-slot KV state (attention-only trunk, same constraint as cache
+    realignment) and none of the modality extras the persistent decode batch
+    does not carry (encoder memory / vision prefix)."""
+    kw = model_kwargs or {}
+    return (supports_cache_realign(cfg)
+            and not cfg.encoder_layers
+            and not cfg.num_prefix_embeddings
+            and kw.get("encoder_out") is None
+            and kw.get("prefix_embeds") is None)
+
+
+def write_cache_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
+                      impl: str = "auto"):
+    """Admit prefilled rows into the persistent serving batch, in place.
+
+    dst_caches: trunk caches over B slots; src_caches: same structure over R
+    admitted rows (same sequence length); slots: (R,) int32 destination slot
+    per source row.  Every leaf's row ``slots[i]`` along the batch axis is
+    replaced by source row ``i`` via the cache_slot_write batched scatter
+    (Pallas on TPU) on the flattened (run, batch[, head]) rows — the same
+    layout cache_gather rolls.  Duplicate slots must carry identical rows
+    (the admission path pads partial groups by duplicating a real row).
+
+    pos arrays ride a plain jnp scatter (they are tiny and int32).
+    Returns the updated cache pytree; untouched slots are bit-identical.
+    """
+    from repro.kernels.cache_slot_write.ops import cache_slot_write
+    assert supports_cache_realign(cfg), "slot serving needs attention trunks"
+    slots = slots.astype(jnp.int32)
+    new_caches = []
+    for dst_run, src_run in zip(dst_caches, src_caches):
+        dsc, ssc = dst_run["self"], src_run["self"]
+        run_len, B = dsc["pos"].shape[0], dsc["pos"].shape[1]
+        R = ssc["pos"].shape[1]
+        new_sc = {"pos": dsc["pos"].at[:, slots].set(ssc["pos"])}
+        for name in ("k", "v", "ckv", "krope"):
+            if name not in dsc:
+                continue
+            d, s = dsc[name], ssc[name]
+            per = 1                                  # heads folded after batch
+            for sz in d.shape[2:-2]:
+                per *= sz
+            r0 = jnp.arange(run_len, dtype=jnp.int32)[:, None, None]
+            h = jnp.arange(per, dtype=jnp.int32)[None, None, :]
+            rows = ((r0 * B + slots[None, :, None]) * per + h).reshape(-1)
+            flat = cache_slot_write(
+                d.reshape((run_len * B * per,) + d.shape[-2:]),
+                s.reshape((run_len * R * per,) + s.shape[-2:]),
+                rows, impl=impl)
+            new_sc[name] = flat.reshape(d.shape)
+        new_caches.append({"self": new_sc})
+    return new_caches
+
+
 def prefill(params, cfg: ModelConfig, tokens, positions, caches, *,
             encoder_out=None, encoder_positions=None, prefix_embeds=None,
             use_pallas: bool = False):
@@ -246,7 +303,9 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
                 use_pallas: bool = False):
     """One decode step.
 
-    token: (B, 1); position: (B, 1); cache_start: scalar int32 — slot to write.
+    token: (B, 1); position: (B, 1); cache_start: slot to write — scalar
+    int32 (lockstep decode) or (B,) int32 per-row slots (serving slot
+    scheduler, where each slot sits at its own decode depth).
     Returns (logits (B, 1, V), new_caches)."""
     OP_COUNTS["decode_step"] += 1
     x = _embed(params, cfg, token, position)

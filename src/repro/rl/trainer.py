@@ -166,7 +166,8 @@ class Trainer:
             self.critic_opt_state = adamw.init(self.critic_params)
         else:
             self.critic_params = None
-        self.cache = RolloutCache(history=spec.cache_history)
+        self.cache = RolloutCache(history=spec.cache_history,
+                                  max_prompts=spec.cache_max_prompts)
         self.gen = GenerateConfig(max_new_tokens=rl.max_new_tokens,
                                   temperature=rl.temperature, top_p=rl.top_p,
                                   eos_id=EOS_ID, pad_id=PAD_ID)

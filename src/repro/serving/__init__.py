@@ -1,0 +1,16 @@
+"""Continuous-batching rollout server (DESIGN.md §6).
+
+A slot-based serving layer between the engine and its two consumers:
+
+- request:     request/response dataclasses, QUEUED → PREFILLING →
+               DECODING → DONE lifecycle
+- scheduler:   admission queue, slot free-list, occupancy metrics
+- engine_loop: persistent decode batch over dense caches with in-place slot
+               replacement (cache_slot_write kernel) and speculative-prefix
+               admission (verify_and_prefill + cache_gather)
+- rl_adapter:  drains an RL training batch through the scheduler —
+               ``rollout(..., spec.backfill='slots')`` straggler backfill
+"""
+from .engine_loop import SlotEngine
+from .request import Request, Response
+from .scheduler import SlotScheduler

@@ -1,0 +1,403 @@
+"""Persistent continuous-batching decode loop over slot-replaced dense caches.
+
+The engine keeps ONE decode batch of ``num_slots`` rows alive over dense
+``(B, Hkv, S, D)`` caches (DESIGN.md §3 rejects paged KV on TPU — in-place
+slot replacement is the idiomatic alternative, §6).  Whenever a row emits
+EOS or exhausts its per-slot budget, the next queued request is prefilled —
+optionally through ``verify_and_prefill`` so a cached SPEC-RL draft becomes
+its speculative prefix — and written into the freed slot by the
+``cache_slot_write`` batched-scatter kernel.  No other row notices: the
+decode batch never drains to its slowest member.
+
+Three jit'd device programs, all statically shaped:
+
+* ``_admit_vanilla``  — prefill a padded admission group + seed sample;
+* ``_admit_spec``     — fused verify+prefill over [prompt | draft], compact
+  to the accepted prefix (cache_gather), seed sample at the last accepted
+  token — speculative-prefix admission;
+* ``_decode_chunk``   — ``chunk_steps`` decode steps for all B slots with
+  per-row write offsets (each slot sits at its own depth), per-row PRNG
+  streams and per-row budgets.  Its body is term-for-term the body of
+  ``engine/generate._decode_loop``, which is what makes slot-scheduled
+  output token-identical to fixed-batch ``generate`` (tested).
+
+Host side: numpy state vectors + the SlotScheduler; admission groups are
+padded to ``num_slots`` rows by duplicating a real admitted row (duplicate
+slot writes carry identical bytes), so every jit sees one shape.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.verify import verify_and_prefill
+from repro.engine.generate import GenerateConfig, positions_from_mask
+from repro.engine.sampling import sample, split_key
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+from .request import (FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE, Request,
+                      Response)
+from .scheduler import SlotScheduler
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen"))
+def _admit_vanilla(params, cfg: ModelConfig, gen: GenerateConfig, prompts,
+                   mask, keys):
+    """Prefill an admission group; mirrors ``generate`` up to the seed token.
+
+    prompts: (R, P) left-padded; keys: (R, 2) per-request decode keys.
+    Returns caches sized P + N per row (the exact layout fixed-batch
+    ``generate`` builds), the seed token/logprob and the carry keys.
+    """
+    R, P = prompts.shape
+    caches = M.init_cache(cfg, R, P + gen.max_new_tokens)
+    logits, caches = M.prefill(params, cfg, prompts, positions_from_mask(mask),
+                               caches)
+    keys, sub = split_key(keys)
+    tok0, lp0 = sample(sub, logits[:, -1], gen.temperature, gen.top_p)
+    return {"caches": caches, "tok0": tok0, "lp0": lp0,
+            "next_pos": mask.sum(axis=1).astype(jnp.int32), "keys": keys}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "verify_impl",
+                                             "compact_impl"))
+def _admit_spec(params, cfg: ModelConfig, gen: GenerateConfig, prompts, mask,
+                draft_tokens, draft_lp, draft_len, draft_eos, verify_keys,
+                decode_keys, log_lenience, *, verify_impl: str,
+                compact_impl: str):
+    """Speculative-prefix admission: one forward over [prompt | draft].
+
+    Identical device program to the fixed-batch one-pass rollout path
+    (verify_and_prefill → realign_decode_cache → seed sample), so a request
+    admitted here continues from the same compacted cache, seed logits and
+    PRNG stream as ``rollout`` would give it.
+    """
+    R, P = prompts.shape
+    N = draft_tokens.shape[1]
+    W = P + N
+    ver = verify_and_prefill(params, cfg, prompts, mask, draft_tokens,
+                             draft_lp, draft_len, verify_keys, log_lenience,
+                             temperature=gen.temperature, top_p=gen.top_p,
+                             impl=verify_impl)
+    n = ver["n"]
+    p_len = mask.sum(axis=1).astype(jnp.int32)
+    caches = M.realign_decode_cache(cfg, ver["caches"],
+                                    (N - n).astype(jnp.int32), p_len + n, W,
+                                    impl=compact_impl)
+    full_reuse = (n == draft_len) & draft_eos
+    keys, sub = split_key(decode_keys)
+    tok0, lp0 = sample(sub, ver["seed_logits"], gen.temperature, gen.top_p)
+    return {"caches": caches, "tok0": tok0, "lp0": lp0, "n": n,
+            "lp_curr": ver["lp_curr"], "full_reuse": full_reuse,
+            "next_pos": p_len + n, "keys": keys}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl"))
+def _write_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
+                 impl: str = "auto"):
+    return M.write_cache_slots(cfg, dst_caches, src_caches, slots, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "steps"))
+def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
+                  cur_tok, cur_lp, done, count, budget, next_pos, write_idx,
+                  keys, *, steps: int):
+    """``steps`` decode steps over all slots; per-row write offsets/streams.
+
+    Term-for-term the body of ``engine/generate._decode_loop`` (store →
+    count/done update → decode_step → split → sample), except the cache
+    write lands at the per-row ``write_idx`` instead of a batch-wide offset
+    and the loop never stops early — idle/done rows keep stepping with
+    position −1 (position-masked attention ignores those writes, and the
+    slot is fully rewritten at its next admission).
+    """
+    def body(carry, _):
+        caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys = carry
+        tok_store = jnp.where(done, gen.pad_id, cur_tok)
+        lp_store = jnp.where(done, 0.0, cur_lp)
+        count = count + (~done).astype(jnp.int32)
+        done_next = done | (cur_tok == gen.eos_id) | (count >= budget)
+        logits, caches = M.decode_step(
+            params, cfg, tok_store[:, None],
+            jnp.where(done[:, None], -1, next_pos[:, None]),
+            caches, write_idx)
+        keys, sub = split_key(keys)
+        nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
+        carry = (caches, nxt, nlp, done_next, count, next_pos + 1,
+                 write_idx + 1, keys)
+        return carry, (tok_store, lp_store)
+
+    init = (caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys)
+    carry, (toks, lps) = jax.lax.scan(body, init, None, length=steps)
+    caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys = carry
+    return {"caches": caches, "cur_tok": cur_tok, "cur_lp": cur_lp,
+            "done": done, "count": count, "next_pos": next_pos,
+            "write_idx": write_idx, "keys": keys,
+            "tokens": toks.T, "logprobs": lps.T}      # (B, steps)
+
+
+class SlotEngine:
+    """Continuous-batching generation engine with spec-prefix admission."""
+
+    def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig, *,
+                 num_slots: int, prompt_width: int, spec_prefix: bool = False,
+                 log_lenience: float = 0.0, chunk_steps: int = 8,
+                 verify_impl: str = "auto", compact_impl: str = "auto",
+                 slot_write_impl: str = "auto"):
+        assert M.supports_slot_serving(cfg), \
+            "slot serving needs an attention-only trunk without modality " \
+            "extras — use fixed-batch generate otherwise"
+        self.params, self.cfg, self.gen = params, cfg, gen
+        self.P = int(prompt_width)
+        self.N = int(gen.max_new_tokens)
+        self.spec_prefix = bool(spec_prefix)
+        self.log_lenience = float(log_lenience)
+        self.chunk_steps = max(1, int(chunk_steps))
+        self.verify_impl, self.compact_impl = verify_impl, compact_impl
+        self.slot_write_impl = slot_write_impl
+        # context ends at write_base; decode token t lands at write_base + t
+        # (vanilla: prefill layout [0, P); spec: compacted layout [0, P+N))
+        self.write_base = self.P + (self.N if spec_prefix else 0)
+        self.cache_len = self.write_base + self.N
+
+        B = int(num_slots)
+        self.caches = M.init_cache(cfg, B, self.cache_len)
+        self.scheduler = SlotScheduler(B)
+        self.cur_tok = np.zeros(B, np.int32)
+        self.cur_lp = np.zeros(B, np.float32)
+        self.done = np.ones(B, bool)
+        self.count = np.zeros(B, np.int32)
+        self.budget = np.zeros(B, np.int32)
+        self.next_pos = np.zeros(B, np.int32)
+        self.write_idx = np.full(B, self.write_base, np.int32)
+        self.keys = np.zeros((B, 2), np.uint32)
+        self._acc_tok: List[List[np.ndarray]] = [[] for _ in range(B)]
+        self._acc_lp: List[List[np.ndarray]] = [[] for _ in range(B)]
+        self._slot_n = np.zeros(B, np.int32)
+        self._slot_draft_len = np.zeros(B, np.int32)
+        self._slot_full_reuse = np.zeros(B, bool)
+        self._slot_prefix_lp: List[Optional[np.ndarray]] = [None] * B
+        self.responses: Dict[int, Response] = {}
+        self.steps = 0                      # engine decode steps elapsed
+        self.time_admit = 0.0
+        self.time_slot_write = 0.0
+        self.time_decode = 0.0
+        self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------- frontend
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) <= self.P, (len(req.prompt), self.P)
+        assert 0 <= req.max_new_tokens <= self.N, req.max_new_tokens
+        self.scheduler.submit(req, now=self._now())
+
+    def run(self, arrivals: Optional[Iterable[Tuple[int, Request]]] = None,
+            max_chunks: Optional[int] = None) -> Dict[int, Response]:
+        """Drive the loop until queue + slots drain (and arrivals exhaust).
+
+        arrivals: optional (due_step, Request) stream sorted by due_step —
+        requests arriving while the engine runs; the loop idles forward to
+        the next due step when it would otherwise drain.
+        """
+        it = iter(arrivals) if arrivals is not None else None
+        nxt = next(it, None) if it is not None else None
+        chunks = 0
+        while True:
+            while nxt is not None and nxt[0] <= self.steps:
+                self.submit(nxt[1])
+                nxt = next(it, None)
+            self._admit()
+            if self.scheduler.idle:
+                if nxt is None:
+                    break
+                self.steps = max(self.steps, int(nxt[0]))  # idle fast-forward
+                continue
+            self._run_chunk()
+            self._harvest()
+            chunks += 1
+            if max_chunks is not None and chunks >= max_chunks:
+                break
+        return self.responses
+
+    def stats(self) -> Dict[str, float]:
+        out = self.scheduler.stats()
+        out.update(engine_steps=float(self.steps),
+                   generated_tokens=float(sum(r.length
+                                              for r in self.responses.values())),
+                   reused_tokens=float(sum(r.n_accepted
+                                           for r in self.responses.values())),
+                   admit_time=self.time_admit,
+                   slot_write_time=self.time_slot_write,
+                   decode_time=self.time_decode,
+                   wall_time=self._now())
+        return out
+
+    # ------------------------------------------------------------ admission
+
+    def _pad_group(self, rows: List[np.ndarray]) -> np.ndarray:
+        """Stack + pad a group to num_slots rows by duplicating row 0."""
+        B = self.scheduler.num_slots
+        rows = rows + [rows[0]] * (B - len(rows))
+        return np.stack(rows)
+
+    def _admit(self) -> None:
+        while True:
+            group = self.scheduler.reserve(self._now())
+            if not group:
+                return
+            t0 = time.perf_counter()
+            B = self.scheduler.num_slots
+            slots = [s for s, _ in group]
+            reqs = [r for _, r in group]
+            prom = np.zeros((len(group), self.P), np.int32)
+            mask = np.zeros((len(group), self.P), bool)
+            for j, r in enumerate(reqs):
+                L = len(r.prompt)
+                prom[j, self.P - L:] = np.asarray(r.prompt, np.int32)
+                mask[j, self.P - L:] = True
+            prompts = self._pad_group(list(prom))
+            masks = self._pad_group(list(mask))
+            keys = self._pad_group([np.asarray(r.key, np.uint32) for r in reqs])
+
+            if self.spec_prefix:
+                dt = np.zeros((len(group), self.N), np.int32)
+                dl = np.zeros((len(group), self.N), np.float32)
+                dn = np.zeros((len(group),), np.int32)
+                de = np.zeros((len(group),), bool)
+                for j, r in enumerate(reqs):
+                    if r.has_draft:
+                        L = min(len(r.draft_tokens), self.N)
+                        dt[j, :L] = r.draft_tokens[:L]
+                        dl[j, :L] = r.draft_logprobs[:L]
+                        dn[j] = L
+                        de[j] = r.draft_eos and L == len(r.draft_tokens)
+                vkeys = self._pad_group(
+                    [np.asarray(r.verify_key, np.uint32) for r in reqs])
+                out = _admit_spec(
+                    self.params, self.cfg, self.gen, jnp.asarray(prompts),
+                    jnp.asarray(masks), jnp.asarray(self._pad_group(list(dt))),
+                    jnp.asarray(self._pad_group(list(dl))),
+                    jnp.asarray(self._pad_group(list(dn))),
+                    jnp.asarray(self._pad_group(list(de))),
+                    jnp.asarray(vkeys), jnp.asarray(keys),
+                    self.log_lenience, verify_impl=self.verify_impl,
+                    compact_impl=self.compact_impl)
+            else:
+                out = _admit_vanilla(self.params, self.cfg, self.gen,
+                                     jnp.asarray(prompts), jnp.asarray(masks),
+                                     jnp.asarray(keys))
+            jax.block_until_ready(out["tok0"])
+            t1 = time.perf_counter()
+            self.time_admit += t1 - t0
+
+            slot_ids = np.array(slots + [slots[0]] * (B - len(slots)),
+                                np.int32)
+            self.caches = _write_slots(self.cfg, self.caches, out["caches"],
+                                       jnp.asarray(slot_ids),
+                                       impl=self.slot_write_impl)
+            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+            self.time_slot_write += time.perf_counter() - t1
+
+            tok0 = np.asarray(out["tok0"])
+            lp0 = np.asarray(out["lp0"])
+            npos = np.asarray(out["next_pos"])
+            nkeys = np.asarray(out["keys"])
+            n = np.asarray(out["n"]) if self.spec_prefix else \
+                np.zeros(B, np.int32)
+            fr = np.asarray(out["full_reuse"]) if self.spec_prefix else \
+                np.zeros(B, bool)
+            lp_curr = np.asarray(out["lp_curr"]) if self.spec_prefix else None
+            for j, (slot, req) in enumerate(group):
+                nj = int(n[j])
+                budget = max(0, req.max_new_tokens - nj)
+                self.cur_tok[slot] = tok0[j]
+                self.cur_lp[slot] = lp0[j]
+                self.count[slot] = 0
+                self.budget[slot] = budget
+                self.next_pos[slot] = npos[j]
+                self.write_idx[slot] = self.write_base
+                self.keys[slot] = nkeys[j]
+                self.done[slot] = bool(fr[j]) or budget <= 0
+                self._acc_tok[slot] = []
+                self._acc_lp[slot] = []
+                self._slot_n[slot] = nj
+                self._slot_draft_len[slot] = int(dn[j]) if self.spec_prefix \
+                    else 0
+                self._slot_full_reuse[slot] = bool(fr[j])
+                self._slot_prefix_lp[slot] = lp_curr[j] if lp_curr is not None \
+                    else None
+                self.scheduler.activate(slot)
+            # full-reuse / zero-budget admissions finish without decoding;
+            # harvesting them here lets the loop keep back-filling
+            self._harvest()
+
+    # ---------------------------------------------------------- decode loop
+
+    def _run_chunk(self, steps: Optional[int] = None) -> None:
+        steps = steps or self.chunk_steps
+        busy = sum(1 for s in self.scheduler.active if not self.done[s])
+        t0 = time.perf_counter()
+        out = _decode_chunk(
+            self.params, self.cfg, self.gen, self.caches,
+            jnp.asarray(self.cur_tok), jnp.asarray(self.cur_lp),
+            jnp.asarray(self.done), jnp.asarray(self.count),
+            jnp.asarray(self.budget), jnp.asarray(self.next_pos),
+            jnp.asarray(self.write_idx), jnp.asarray(self.keys), steps=steps)
+        self.caches = out["caches"]
+        toks = np.asarray(out["tokens"])            # (B, steps)
+        lps = np.asarray(out["logprobs"])
+        self.time_decode += time.perf_counter() - t0
+        for name in ("cur_tok", "cur_lp", "done", "count", "next_pos",
+                     "write_idx", "keys"):
+            # np.array (not asarray): jax arrays view as read-only and the
+            # admission path writes these in place
+            setattr(self, name, np.array(out[name]))
+        for slot in self.scheduler.active:
+            self._acc_tok[slot].append(toks[slot])
+            self._acc_lp[slot].append(lps[slot])
+        self.steps += steps
+        self.scheduler.tick(busy, steps)
+
+    # -------------------------------------------------------------- harvest
+
+    def _harvest(self) -> List[Response]:
+        eos = self.gen.eos_id
+        finished = []
+        for slot in [s for s in self.scheduler.active if self.done[s]]:
+            req = self.scheduler.active[slot]
+            cnt = int(self.count[slot])
+            toks = (np.concatenate(self._acc_tok[slot])[:cnt]
+                    if self._acc_tok[slot] else np.zeros(0, np.int32))
+            lps = (np.concatenate(self._acc_lp[slot])[:cnt]
+                   if self._acc_lp[slot] else np.zeros(0, np.float32))
+            if self._slot_full_reuse[slot]:
+                reason = FINISH_FULL_REUSE
+            elif cnt > 0 and toks[-1] == eos:
+                reason = FINISH_EOS
+            else:
+                reason = FINISH_BUDGET
+            now = self._now()
+            resp = Response(
+                request_id=req.request_id, tokens=toks.astype(np.int32),
+                logprobs=lps.astype(np.float32), length=cnt,
+                finish_reason=reason, n_accepted=int(self._slot_n[slot]),
+                prefix_logprobs=self._slot_prefix_lp[slot],
+                draft_len=int(self._slot_draft_len[slot]), slot=slot,
+                queue_time=req.admitted_at - req.queued_at,
+                serve_time=now - req.admitted_at)
+            self.responses[req.request_id] = resp
+            self.scheduler.complete(slot, now=now)
+            self._acc_tok[slot] = []
+            self._acc_lp[slot] = []
+            self._slot_prefix_lp[slot] = None
+            finished.append(resp)
+        return finished

@@ -1,0 +1,86 @@
+"""Request / response dataclasses for the continuous-batching server.
+
+Lifecycle (DESIGN.md §6)::
+
+    QUEUED ──admission──► PREFILLING ──slot write──► DECODING ──eos/budget──► DONE
+
+A request carries its own PRNG streams (``key`` for decoding, ``verify_key``
+for spec-prefix acceptance), so its token output is a pure function of
+(prompt, draft, keys, params) — independent of which slot it lands in, what
+it is co-batched with, and when it is admitted.  That per-request determinism
+is the serving layer's correctness contract: slot-scheduled output is
+token-identical to fixed-batch ``generate``/``rollout`` (tested in
+tests/serving/test_slot_equivalence.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+# request states
+QUEUED = "QUEUED"
+PREFILLING = "PREFILLING"
+DECODING = "DECODING"
+DONE = "DONE"
+
+# finish reasons
+FINISH_EOS = "eos"
+FINISH_BUDGET = "budget"
+FINISH_FULL_REUSE = "full_reuse"
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    prompt: (p,) int32 token ids, unpadded (the engine left-pads to its
+    prompt width).  key: the decode PRNG key — the exact key ``generate``
+    would be called with for this row.  A draft (tokens + behaviour
+    log-probs from a previous rollout) makes the request eligible for
+    speculative-prefix admission, which needs ``verify_key`` for the
+    acceptance uniforms.
+    """
+    request_id: int
+    prompt: np.ndarray
+    key: np.ndarray                       # (2,) uint32 decode stream
+    max_new_tokens: int
+    verify_key: Optional[np.ndarray] = None
+    draft_tokens: Optional[np.ndarray] = None   # (L,) int32, unpadded
+    draft_logprobs: Optional[np.ndarray] = None  # (L,) float32
+    draft_eos: bool = False
+    arrival_time: float = 0.0
+    state: str = QUEUED
+    # lifecycle timestamps (engine-relative seconds), filled by the scheduler
+    queued_at: float = 0.0
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def has_draft(self) -> bool:
+        return self.draft_tokens is not None and len(self.draft_tokens) > 0
+
+
+@dataclass
+class Response:
+    """Completed request: reused prefix ⊕ generated continuation.
+
+    ``tokens``/``logprobs`` are the *continuation* only (length ``length``);
+    for spec-prefix admissions the accepted draft prefix (``n_accepted``
+    tokens, behaviour log-probs in ``prefix_logprobs``) precedes it — the
+    rl_adapter assembles the full response exactly like the fixed-batch
+    ``assemble``.
+    """
+    request_id: int
+    tokens: np.ndarray                    # (length,) int32 continuation
+    logprobs: np.ndarray                  # (length,) float32
+    length: int
+    finish_reason: str
+    n_accepted: int = 0
+    prefix_logprobs: Optional[np.ndarray] = None  # (N,) current-policy lp
+    draft_len: int = 0
+    slot: int = -1
+    queue_time: float = 0.0               # seconds spent QUEUED
+    serve_time: float = 0.0               # admission -> DONE
+    metrics: dict = field(default_factory=dict)

@@ -1,0 +1,106 @@
+"""Slot scheduler: admission queue, slot free-list, occupancy metrics.
+
+Pure host-side bookkeeping — no jax.  The scheduler owns WHICH request runs
+WHERE and WHEN; the engine loop (engine_loop.py) owns the device work.  Slots
+are the TPU-idiomatic replacement for paged-KV block tables (DESIGN.md §3/§6):
+the decode batch has a fixed number of rows over dense caches, and admission
+replaces a finished row in place.
+
+Admission is FIFO over the queue; the free-list is LIFO (a freed slot is the
+warmest candidate).  Per-slot budgets live in the engine's state vectors;
+the scheduler tracks the request lifecycle and aggregates metrics:
+queue-wait, slot occupancy (busy slot-steps / total slot-steps), admissions,
+completions.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .request import DECODING, DONE, PREFILLING, QUEUED, Request
+
+
+class SlotScheduler:
+    def __init__(self, num_slots: int):
+        assert num_slots > 0, num_slots
+        self.num_slots = num_slots
+        self.free: List[int] = list(range(num_slots - 1, -1, -1))
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        # metrics
+        self.submitted = 0
+        self.admitted = 0
+        self.completed = 0
+        self.busy_slot_steps = 0
+        self.total_slot_steps = 0
+        self.queue_wait_total = 0.0
+        self.serve_time_total = 0.0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        req.state = QUEUED
+        req.queued_at = now
+        self.queue.append(req)
+        self.submitted += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def reserve(self, now: float = 0.0) -> List[Tuple[int, Request]]:
+        """Pair queued requests (FIFO) with free slots; mark PREFILLING."""
+        group: List[Tuple[int, Request]] = []
+        while self.free and self.queue:
+            slot = self.free.pop()
+            req = self.queue.popleft()
+            req.state = PREFILLING
+            req.admitted_at = now
+            self.queue_wait_total += max(0.0, now - req.queued_at)
+            self.active[slot] = req
+            self.admitted += 1
+            group.append((slot, req))
+        return group
+
+    def activate(self, slot: int) -> None:
+        self.active[slot].state = DECODING
+
+    def complete(self, slot: int, now: float = 0.0) -> Request:
+        """Finish the request in ``slot`` and return the slot to the pool."""
+        req = self.active.pop(slot)
+        req.state = DONE
+        req.finished_at = now
+        self.serve_time_total += max(0.0, now - req.admitted_at)
+        self.free.append(slot)
+        self.completed += 1
+        return req
+
+    # -------------------------------------------------------------- metrics
+
+    def tick(self, busy_slots: int, steps: int = 1) -> None:
+        """Account ``steps`` decode steps with ``busy_slots`` rows working."""
+        self.busy_slot_steps += busy_slots * steps
+        self.total_slot_steps += self.num_slots * steps
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "num_slots": self.num_slots,
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "pending": len(self.queue),
+            "occupancy": (self.busy_slot_steps / self.total_slot_steps
+                          if self.total_slot_steps else 0.0),
+            "mean_queue_wait": (self.queue_wait_total / self.completed
+                                if self.completed else 0.0),
+            "mean_serve_time": (self.serve_time_total / self.completed
+                                if self.completed else 0.0),
+        }

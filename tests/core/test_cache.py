@@ -58,3 +58,45 @@ def test_history_eviction():
     assert c.get(1, lag=1).step == 4
     assert c.get(1, lag=2).step == 3
     assert c.get(1, lag=3) is None
+
+
+def test_lru_eviction_bounds_size():
+    c = RolloutCache(max_prompts=3)
+    for pid in range(5):
+        c.put(pid, np.array([pid], np.int32), np.zeros(1, np.float32), 1, 0)
+    assert len(c) == 3
+    assert c.stats()["evictions"] == 2
+    assert c.stats()["max_prompts"] == 3
+    assert c.get(0) is None and c.get(1) is None      # oldest evicted
+    assert c.get(4) is not None
+
+
+def test_lru_get_refreshes_recency():
+    c = RolloutCache(max_prompts=2)
+    c.put(0, np.array([0], np.int32), np.zeros(1, np.float32), 1, 0)
+    c.put(1, np.array([1], np.int32), np.zeros(1, np.float32), 1, 0)
+    assert c.get(0) is not None                       # touch 0 -> 1 is LRU
+    c.put(2, np.array([2], np.int32), np.zeros(1, np.float32), 1, 0)
+    assert c.get(1) is None                           # 1 evicted, not 0
+    assert c.get(0) is not None and c.get(2) is not None
+
+
+def test_lru_put_existing_refreshes_and_keeps_history():
+    c = RolloutCache(history=2, max_prompts=2)
+    for s in range(2):
+        c.put(0, np.array([s], np.int32), np.zeros(1, np.float32), 1, step=s)
+    c.put(1, np.array([9], np.int32), np.zeros(1, np.float32), 1, 0)
+    c.put(0, np.array([7], np.int32), np.zeros(1, np.float32), 1, step=2)
+    c.put(2, np.array([5], np.int32), np.zeros(1, np.float32), 1, 0)  # evicts 1
+    assert c.get(1) is None
+    assert c.get(0, lag=1).step == 2                  # history ring intact
+    assert c.get(0, lag=2).step == 1
+    assert c.stats()["evictions"] == 1
+
+
+def test_unbounded_by_default():
+    c = RolloutCache()
+    for pid in range(100):
+        c.put(pid, np.array([1], np.int32), np.zeros(1, np.float32), 1, 0)
+    assert len(c) == 100
+    assert c.stats()["evictions"] == 0

@@ -133,3 +133,114 @@ def test_score_first_token_and_pads_zero(setup):
         assert not valid[i, first]
         assert lp[i, first] == 0.0
     assert (lp[~valid] == 0.0).all()
+
+
+# ------------------------------------------------- resume_from_cache edges
+
+
+def _verify_resume(cfg, params, prompt, mask, draft_len_rows, log_lenience,
+                   key, N=12, draft_eos_rows=None):
+    """One-pass verify→compact→resume over crafted drafts; returns
+    (n, cont, draft) for comparison against the two-pass reference."""
+    from repro.core.spec_rollout import left_align
+    from repro.core.verify import verify_and_prefill
+    from repro.engine.generate import resume_from_cache
+    B, P = prompt.shape
+    draft = jax.random.randint(jax.random.PRNGKey(33), (B, N), 3,
+                               cfg.vocab_size)
+    if draft_eos_rows is not None:
+        gen_eos = 2
+        for i, dl in enumerate(draft_len_rows):
+            if draft_eos_rows[i] and dl > 0:
+                draft = draft.at[i, dl - 1].set(gen_eos)
+    draft_len = jnp.asarray(draft_len_rows, jnp.int32)
+    didx = jnp.arange(N)[None, :]
+    # pessimistic behaviour log-probs: random drafts score ~ -log V under
+    # the current policy, so -6 keeps the acceptance ratio near 1 and the
+    # lenience knob controls rejection
+    draft_lp = jnp.where(didx < draft_len[:, None], -6.0, 0.0)
+    kv, kd = jax.random.split(key)
+    ver = verify_and_prefill(params, cfg, prompt, mask, draft, draft_lp,
+                             draft_len, kv, log_lenience, impl="ref")
+    n = ver["n"]
+    W = P + N
+    p_len = mask.sum(axis=1).astype(jnp.int32)
+    caches = M.realign_decode_cache(cfg, ver["caches"],
+                                    (N - n).astype(jnp.int32), p_len + n, W,
+                                    impl="ref")
+    eos_at_n = jnp.take_along_axis(
+        draft, jnp.maximum(n - 1, 0)[:, None], axis=1)[:, 0] == 2
+    full_reuse = (n == draft_len) & (n > 0) & eos_at_n if draft_eos_rows \
+        else jnp.zeros((B,), bool)
+    gen = GenerateConfig(max_new_tokens=N)
+    cont = resume_from_cache(params, cfg, gen, caches, ver["seed_logits"],
+                             p_len + n, W, kd, initial_done=full_reuse,
+                             row_budget=N - n)
+    return n, cont, draft, draft_len, kd
+
+
+def test_resume_zero_accepted_prefix(setup):
+    """n = 0 everywhere (lenience -> 0 rejects all): resuming from the
+    compacted verify cache == generating from the bare prompt."""
+    from repro.core.spec_rollout import left_align
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    N = 12
+    key = jax.random.PRNGKey(21)
+    n, cont, _, _, kd = _verify_resume(cfg, params, prompt, mask,
+                                       [N, 7, 3], -1e9, key, N=N)
+    assert (np.asarray(n) == 0).all()
+    # reference: two-pass continuation over the aligned (prompt ⊕ nothing)
+    W = prompt.shape[1] + N
+    al_tok, al_mask = left_align(
+        jnp.concatenate([prompt, jnp.zeros((3, N), jnp.int32)], axis=1),
+        jnp.concatenate([mask, jnp.zeros((3, N), bool)], axis=1))
+    want = generate(params, cfg, GenerateConfig(max_new_tokens=N), al_tok,
+                    al_mask, kd, row_budget=jnp.full((3,), N, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cont["tokens"]),
+                                  np.asarray(want["tokens"]))
+    np.testing.assert_array_equal(np.asarray(cont["length"]),
+                                  np.asarray(want["length"]))
+
+
+def test_resume_fully_accepted_draft_with_eos(setup):
+    """Drafts fully accepted (lenience -> inf) and ending in EOS: the row is
+    initially done, resumes zero tokens, and keeps its budget at 0."""
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)
+    N = 12
+    n, cont, draft, draft_len, _ = _verify_resume(
+        cfg, params, prompt, mask, [5, 8, N], 1e9, jax.random.PRNGKey(23),
+        N=N, draft_eos_rows=[True, True, True])
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(draft_len))
+    assert (np.asarray(cont["length"]) == 0).all()
+    assert (np.asarray(cont["tokens"]) == 0).all()
+    assert int(cont["n_generated"]) == 0
+
+
+def test_resume_mixed_per_row_start_positions(setup):
+    """Rows with different prompt lengths AND different accepted-prefix
+    lengths resume from different cache depths; each row still matches the
+    two-pass reference built from its own aligned context."""
+    from repro.core.spec_rollout import left_align
+    cfg, params = setup
+    prompt, mask = _prompt(cfg)                  # mixed p_len already
+    N = 12
+    n, cont, draft, draft_len, kd = _verify_resume(
+        cfg, params, prompt, mask, [0, 6, N], 0.3, jax.random.PRNGKey(25),
+        N=N)
+    n_np = np.asarray(n)
+    assert len(set(n_np.tolist())) > 1           # genuinely mixed starts
+    didx = jnp.arange(N)[None, :]
+    prefix_mask = didx < n[:, None]
+    al_tok, al_mask = left_align(
+        jnp.concatenate([prompt, jnp.where(prefix_mask, draft, 0)], axis=1),
+        jnp.concatenate([mask, prefix_mask], axis=1))
+    want = generate(params, cfg, GenerateConfig(max_new_tokens=N), al_tok,
+                    al_mask, kd, row_budget=N - n)
+    np.testing.assert_array_equal(np.asarray(cont["tokens"]),
+                                  np.asarray(want["tokens"]))
+    np.testing.assert_array_equal(np.asarray(cont["length"]),
+                                  np.asarray(want["length"]))
+    np.testing.assert_allclose(np.asarray(cont["logprobs"]),
+                               np.asarray(want["logprobs"]), atol=1e-5)

@@ -1,0 +1,73 @@
+"""SlotScheduler semantics: FIFO admission over the free-list, request
+lifecycle states, occupancy/latency metrics, and RolloutCache LRU pressure
+feeding the admission queue."""
+import numpy as np
+import pytest
+
+from repro.serving.request import (DECODING, DONE, PREFILLING, QUEUED,
+                                   Request)
+from repro.serving.scheduler import SlotScheduler
+
+
+def _req(i, budget=4):
+    return Request(request_id=i, prompt=np.array([1, 2, 3], np.int32),
+                   key=np.zeros(2, np.uint32), max_new_tokens=budget)
+
+
+def test_fifo_admission_order():
+    s = SlotScheduler(2)
+    for i in range(5):
+        s.submit(_req(i))
+    group = s.reserve()
+    assert [r.request_id for _, r in group] == [0, 1]      # FIFO
+    assert s.pending == 3
+    assert all(r.state == PREFILLING for _, r in group)
+    assert len({slot for slot, _ in group}) == 2           # distinct slots
+
+
+def test_lifecycle_states_and_free_list():
+    s = SlotScheduler(1)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    (slot, req), = s.reserve()
+    assert req.state == PREFILLING and req.request_id == 0
+    s.activate(slot)
+    assert req.state == DECODING
+    assert not s.reserve()                                 # no free slot
+    done = s.complete(slot)
+    assert done.state == DONE and done is req
+    (slot2, req2), = s.reserve()                           # backfill
+    assert slot2 == slot and req2.request_id == 1
+
+
+def test_reserve_empty_queue_returns_nothing():
+    s = SlotScheduler(3)
+    assert s.reserve() == []
+    assert s.idle
+
+
+def test_occupancy_and_counters():
+    s = SlotScheduler(4)
+    for i in range(2):
+        s.submit(_req(i))
+    group = s.reserve()
+    for slot, _ in group:
+        s.activate(slot)
+    s.tick(busy_slots=2, steps=10)
+    for slot, _ in group:
+        s.complete(slot)
+    st = s.stats()
+    assert st["submitted"] == st["admitted"] == st["completed"] == 2
+    assert st["occupancy"] == pytest.approx(20 / 40)
+    assert st["pending"] == 0
+
+
+def test_queue_wait_accounting():
+    s = SlotScheduler(1)
+    s.submit(_req(0), now=0.0)
+    (slot, _), = s.reserve(now=2.0)
+    s.activate(slot)
+    s.complete(slot, now=5.0)
+    st = s.stats()
+    assert st["mean_queue_wait"] == pytest.approx(2.0)
+    assert st["mean_serve_time"] == pytest.approx(3.0)
