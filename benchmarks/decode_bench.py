@@ -1,0 +1,112 @@
+"""Per-token decode-attention microbenchmark: latency vs *live* cache length
+for the three decode impls — legacy naive (full-S materialised scores),
+length-bounded blocked (while_loop over live chunks) and the split-K Pallas
+flash-decode kernel (interpret mode off-TPU).  Writes BENCH_decode.json so
+the perf trajectory captures the decode win (DESIGN.md §7).
+
+The point of flash-decode is that cost tracks the *live* extent, not the
+allocated width S: a slot-server row 64 tokens into a 1024-slot cache should
+pay ~1/16th of full-width attention.  The naive row is flat in `live` by
+construction; blocked/flash fall with it.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_decode.json")
+
+B, HQ, HKV, D = 8, 8, 2, 64
+S_FULL, S_SMOKE = 1024, 256
+
+
+def _inputs(S, live, start=0, seed=0):
+    """A lockstep decode batch with live slots [start, start + live) in an
+    S-slot cache (start > 0 = the dead left padding a one-pass SPEC-RL
+    resume sits behind, see DESIGN.md §3/§7)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, HQ, 1, D))
+    k = jax.random.normal(ks[1], (B, HKV, S, D))
+    v = jax.random.normal(ks[2], (B, HKV, S, D))
+    j = jnp.arange(S, dtype=jnp.int32)
+    k_pos = jnp.broadcast_to(
+        jnp.where((j >= start) & (j < start + live), j - start, -1), (B, S))
+    q_pos = jnp.full((B,), live - 1, jnp.int32)
+    lengths = jnp.full((B,), start + live, jnp.int32)
+    starts = jnp.full((B,), start, jnp.int32)
+    return q, k, v, q_pos, k_pos, lengths, starts
+
+
+def _time(impl, args, iters):
+    out = decode_attention(*args, impl=impl)          # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = decode_attention(*args, impl=impl)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us / decode token
+
+
+def run(smoke: bool = False, out_path: str = OUT_PATH) -> None:
+    S = S_SMOKE if smoke else S_FULL
+    lives = [32, 128] if smoke else [32, 64, 128, 256, 512, S_FULL]
+    iters = 5 if smoke else 50
+    interp_iters = 2 if smoke else 5                  # interpret is host-side
+    record = {"backend": jax.default_backend(), "B": B, "Hq": HQ,
+              "Hkv": HKV, "D": D, "S": S, "iters": iters, "points": []}
+    for live in lives:
+        args = _inputs(S, live)
+        row = {"live": live,
+               "naive_us": _time("naive", args, iters),
+               "blocked_us": _time("blocked", args, iters),
+               "flash_interpret_us": _time("interpret", args, interp_iters)}
+        row["speedup_blocked_vs_naive"] = row["naive_us"] / max(
+            row["blocked_us"], 1e-9)
+        record["points"].append(row)
+        emit("decode_bench/point", row["blocked_us"],
+             f"S={S};live={live};naive={row['naive_us']:.1f}us;"
+             f"blocked={row['blocked_us']:.1f}us;"
+             f"speedup={row['speedup_blocked_vs_naive']:.2f}x")
+    short = record["points"][0]
+    record["speedup_short_live"] = short["speedup_blocked_vs_naive"]
+    # resume-shaped: a short live span sitting behind dead left padding
+    # (start bound skips it; naive still scans the full width)
+    live, start = lives[0], S - 2 * lives[0]
+    args = _inputs(S, live, start=start)
+    row = {"live": live, "start": start,
+           "naive_us": _time("naive", args, iters),
+           "blocked_us": _time("blocked", args, iters)}
+    row["speedup_blocked_vs_naive"] = row["naive_us"] / max(
+        row["blocked_us"], 1e-9)
+    record["resume_shaped"] = row
+    emit("decode_bench/resume_shaped", row["blocked_us"],
+         f"S={S};start={start};live={live};naive={row['naive_us']:.1f}us;"
+         f"blocked={row['blocked_us']:.1f}us;"
+         f"speedup={row['speedup_blocked_vs_naive']:.2f}x")
+    if not smoke:
+        # acceptance: >= 2x over naive at S=1024 with short live lengths
+        assert record["speedup_short_live"] >= 2.0, record["speedup_short_live"]
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("decode_bench/json", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small cache, few live points/iters (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

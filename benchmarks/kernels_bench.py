@@ -17,6 +17,8 @@ import numpy as np
 from repro.kernels.cache_gather.ops import cache_roll
 from repro.kernels.cache_gather.ref import cache_roll_ref
 from repro.kernels.cache_slot_write.ops import cache_slot_write
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.rwkv6_wkv.ops import wkv
 from repro.kernels.spec_verify.ops import spec_verify
@@ -73,6 +75,25 @@ def run(smoke: bool = False) -> None:
                             impl="ref")
     assert (np.asarray(got) == np.asarray(want)).all()
     emit("kernels/cache_slot_write_interpret_check", 0.0, "bit_exact=True")
+
+    # decode_attention: split-K flash-decode with per-row live lengths
+    DS = 64 if smoke else 512
+    dq = jax.random.normal(ks[0], (4, 8, 1, 32))
+    dk = jax.random.normal(ks[1], (4, 2, DS, 32))
+    dv = jax.random.normal(ks[2], (4, 2, DS, 32))
+    dlen = jnp.array([0, DS // 4, DS // 2, DS], jnp.int32)
+    j = jnp.arange(DS, dtype=jnp.int32)
+    dkpos = jnp.where(j[None, :] < dlen[:, None], j[None, :], -1)
+    dqpos = jnp.maximum(dlen - 1, -1)
+    us = _time(decode_attention, dq, dk, dv, dqpos, dkpos, dlen,
+               impl="blocked", iters=iters)
+    emit("kernels/decode_attention_blocked", us, f"B4Hq8Hkv2S{DS}D32")
+    got = decode_attention(dq, dk, dv, dqpos, dkpos, dlen, impl="interpret",
+                           block_k=32)
+    want = decode_attention_ref(dq, dk, dv, dqpos, dkpos, dlen)
+    assert np.allclose(np.asarray(got), np.asarray(want), atol=2e-5), \
+        np.abs(np.asarray(got) - np.asarray(want)).max()
+    emit("kernels/decode_attention_interpret_check", 0.0, "allclose=True")
 
     AT = 64 if smoke else 256
     q = jax.random.normal(ks[0], (2, 8, AT, 64))

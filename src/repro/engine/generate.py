@@ -87,19 +87,25 @@ def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
                                    prefix_embeds=prefix_embeds, **extras)
         pos_offset = Pv
         write_offset = P + Pv
+        # vision slots [0, Pv) are live ahead of the prompt's left padding,
+        # so the context is not contiguous from a single start slot
+        kv_start = None
     else:
         logits, caches = M.prefill(params, cfg, prompt, positions, caches, **extras)
         pos_offset = 0
         write_offset = P
+        kv_start = P - prompt_mask.sum(axis=1).astype(jnp.int32)
 
     next_pos = prompt_mask.sum(axis=1).astype(jnp.int32) + pos_offset  # (B,)
     return _decode_loop(params, cfg, gen, caches, logits[:, -1], next_pos,
-                        write_offset, key, initial_done, row_budget, extras)
+                        write_offset, key, initial_done, row_budget, extras,
+                        kv_start=kv_start)
 
 
 def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
                  seed_logits, next_pos, write_offset, key,
-                 initial_done, row_budget, extras) -> Dict[str, jnp.ndarray]:
+                 initial_done, row_budget, extras,
+                 kv_start=None) -> Dict[str, jnp.ndarray]:
     """The decode stage: sample from ``seed_logits`` then run the while_loop.
 
     caches: populated KV caches whose slots [0, write_offset) hold the
@@ -136,10 +142,14 @@ def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
         count = count + (~done).astype(jnp.int32)
         done_next = done | (cur_tok == gen.eos_id) | (count >= budget)
 
+        # live cache extent: [kv_start, write_offset + step] — the dead
+        # left padding in front of the context and the unwritten tail are
+        # both skipped by the flash-decode kernel
         logits, caches = M.decode_step(
             params, cfg, tok_store[:, None],
             jnp.where(done[:, None], -1, next_pos[:, None]),
-            caches, write_offset + step, **extras)
+            caches, write_offset + step,
+            kv_length=write_offset + 1 + step, kv_start=kv_start, **extras)
         key, sub = split_key(key)
         nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
         return (step + 1, done_next, nxt, nlp, next_pos + 1, caches,
@@ -179,9 +189,14 @@ def resume_from_cache(params, cfg: ModelConfig, gen: GenerateConfig, caches,
     so continuation tokens/logprobs agree sample-for-sample.
     """
     extras = _model_extras(model_kwargs)
+    next_pos = next_pos.astype(jnp.int32)
+    # compacted layout (§3): row b's context is contiguous in
+    # [write_offset - next_pos[b], write_offset) — a short accepted prefix
+    # decodes over its live extent, not the allocated verify width
     return _decode_loop(params, cfg, gen, caches, seed_logits,
-                        next_pos.astype(jnp.int32), write_offset, key,
-                        initial_done, row_budget, extras)
+                        next_pos, write_offset, key,
+                        initial_done, row_budget, extras,
+                        kv_start=write_offset - next_pos)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",

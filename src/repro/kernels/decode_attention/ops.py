@@ -1,0 +1,67 @@
+"""Jit'd public wrapper for flash-decode attention.
+
+``decode_attention`` is the T==1 decode dual of
+``kernels/flash_attention``: every decode step in ``generate``,
+``resume_from_cache`` and the serving slot engine routes here (see
+models/attention.py).  ``lengths`` carries each row's live cache extent
+(write offset + 1) and ``starts`` its first live slot (dead left-padding
+in front of a compacted / left-padded context), letting the blocked path
+iterate only live chunks and the Pallas kernel early-exit per row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_blocked, decode_attention_ref
+
+# Below this cache width a single naive score pass beats the blocked
+# while_loop's bookkeeping (one block_k=128 chunk covers it anyway).
+NAIVE_MAX_S = 128
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
+def decode_attention(q, k, v, q_pos, k_pos, lengths=None, starts=None, *,
+                     window: int = 0, impl: str = "auto",
+                     block_k: int = 128):
+    """Single-token decode attention over a dense cache.
+
+    q: (B, Hq, 1, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv) (Dk may differ
+    from Dv — MLA); q_pos: (B,) or (B, 1); k_pos: (B, S); lengths/starts:
+    optional (B,) int32 live bounds — slot j of row b is attended only when
+    starts[b] <= j < lengths[b] (None = [0, S)).  Returns (B, Hq, 1, Dv)
+    float32.
+
+    impl: 'auto' (pallas on TPU; elsewhere naive for S <= NAIVE_MAX_S,
+    length-bounded blocked beyond) | 'pallas' | 'interpret' | 'blocked' |
+    'naive'.
+    """
+    if impl == "auto":
+        if jax.default_backend() == "tpu":
+            impl = "pallas"
+        elif k.shape[2] <= NAIVE_MAX_S:
+            impl = "naive"
+        else:
+            impl = "blocked"
+    if impl == "naive":
+        return decode_attention_ref(q, k, v, q_pos, k_pos, lengths, starts,
+                                    window=window)
+    if impl == "blocked":
+        return decode_attention_blocked(q, k, v, q_pos, k_pos, lengths,
+                                        starts, window=window,
+                                        block_k=block_k)
+    B = q.shape[0]
+    S = k.shape[2]
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.minimum(lengths.reshape(B).astype(jnp.int32), S)
+    if starts is None:
+        starts = jnp.zeros((B,), jnp.int32)
+    starts = jnp.clip(starts.reshape(B).astype(jnp.int32), 0, S)
+    return decode_attention_pallas(q, k, v, q_pos.reshape(B), k_pos,
+                                   lengths, starts, window=window,
+                                   block_k=block_k,
+                                   interpret=(impl == "interpret"))

@@ -15,6 +15,11 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
                     window: int = 0, impl: str = "auto",
                     block_q: int = 128, block_k: int = 128):
     """impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'."""
+    # T == 1 would give a degenerate block_q=1 (single-MXU-row) schedule;
+    # decode-shaped calls belong to kernels/decode_attention instead.
+    assert q.shape[2] > 1, (
+        "flash_attention is the prefill/verify kernel; single-token decode "
+        f"(T={q.shape[2]}) must route to kernels/decode_attention")
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":

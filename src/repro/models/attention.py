@@ -18,6 +18,7 @@ holding each slot's position (-1 = empty).  TPU adaptation note: no paged KV
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -28,6 +29,13 @@ from .layers import (apply_dense, apply_rmsnorm, apply_rope, make_dense,
                      make_rmsnorm, split_keys)
 
 NEG_INF = -1e30
+
+
+@functools.lru_cache(maxsize=None)
+def _default_backend() -> str:
+    """Backend probe, hoisted out of the per-layer hot path (the answer
+    cannot change within a process)."""
+    return jax.default_backend()
 
 
 # ------------------------------------------------------------------ core math
@@ -117,6 +125,45 @@ def _blocked_attention(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
     return out.reshape(B, Hq, T, Dv)
 
 
+def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
+                      window: int, cache_start, kv_length, kv_start,
+                      use_pallas: bool) -> jnp.ndarray:
+    """Route a decode-shaped (T == 1, cached) call to the flash-decode op.
+
+    ``kv_length`` is the per-row live cache extent.  When the caller does
+    not thread it explicitly it is derived from ``cache_start``: the decode
+    token was just written at slot ``cache_start``, so every slot at or
+    beyond ``cache_start + 1`` is empty (pos == -1) and can be skipped.
+    ``kv_start`` is the per-row first live slot (the dead left-padding in
+    front of a left-padded / compacted context); only callers that know
+    their layout is contiguous from that slot may thread it — None means
+    start at 0, which is always safe.
+    """
+    B = q.shape[0]
+    if kv_length is None:
+        kv_length = jnp.asarray(cache_start, jnp.int32) + 1
+    lengths = jnp.broadcast_to(
+        jnp.asarray(kv_length, jnp.int32).reshape(-1), (B,))
+    starts = None if kv_start is None else jnp.broadcast_to(
+        jnp.asarray(kv_start, jnp.int32).reshape(-1), (B,))
+    if window > 0 and starts is not None:
+        # contiguous layout (the kv_start contract): slot j holds position
+        # j - start, so keys at or below start + q_pos - window are outside
+        # the sliding window — tighten the start bound to skip their blocks
+        # entirely (they were already window-masked; this changes no output)
+        qp = q_pos[:, 0].astype(jnp.int32)
+        starts = jnp.maximum(starts, starts + qp - window + 1)
+    impl = cfg.decode_impl
+    if impl == "auto" and use_pallas:
+        impl = "pallas" if _default_backend() == "tpu" else "interpret"
+    # remaining "auto" resolves in the op: pallas on TPU, else naive for
+    # tiny caches / length-bounded blocked beyond (DESIGN.md §7)
+    from repro.kernels.decode_attention.ops import decode_attention
+    return decode_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                            q_pos[:, 0], kv_pos, lengths, starts,
+                            window=window, impl=impl)
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     hd = cfg.resolved_head_dim
     if cfg.attention_kind == "mla":
@@ -170,13 +217,16 @@ def make_gqa(key, cfg: ModelConfig, dtype):
 
 def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
               causal=True, kv_x=None, kv_positions=None,
-              use_pallas: bool = False):
+              use_pallas: bool = False, kv_length=None, kv_start=None):
     """GQA attention.
 
     x: (B, T, d).  With ``cache`` given, writes K/V at ``cache_start`` and
     attends over the whole cache (decode / incremental prefill).  With
     ``kv_x`` given, performs cross-attention (no causal mask, no rope on kv
-    unless positions supplied).
+    unless positions supplied).  ``kv_length`` (scalar or (B,) int32) bounds
+    the live cache extent for decode-shaped calls (T == 1 with cache): those
+    are dispatched to the flash-decode kernel / length-bounded blocked path
+    instead of full-S attention.
     """
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -208,11 +258,20 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
         new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
         k, v, kv_pos = k_all, v_all, pos_all
 
-    if use_pallas and kv_x is None:
+    if cache is not None and kv_x is None and T == 1 and causal:
+        # single-token decode: flash-decode kernel with split-K and per-row
+        # cache-length early exit (or the length-bounded blocked fallback)
+        out = _decode_attention(cfg, q, k, v, positions, kv_pos,
+                                window=cfg.sliding_window,
+                                cache_start=cache_start, kv_length=kv_length,
+                                kv_start=kv_start, use_pallas=use_pallas)
+    elif use_pallas and kv_x is None and T > 1:
         # Pallas flash kernel (TPU; interpret mode in tests).  Same schedule
-        # as _blocked_attention but with MXU-aligned VMEM tiles.
+        # as _blocked_attention but with MXU-aligned VMEM tiles.  The decode
+        # dispatch above guarantees the prefill kernel never sees the
+        # degenerate block_q=1 shape.
         from repro.kernels.flash_attention.ops import flash_attention
-        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+        impl = "pallas" if _default_backend() == "tpu" else "interpret"
         out = flash_attention(q, k.astype(q.dtype), v.astype(q.dtype),
                               positions, kv_pos, causal=causal,
                               window=cfg.sliding_window, impl=impl,
@@ -258,7 +317,7 @@ def make_mla(key, cfg: ModelConfig, dtype):
 
 
 def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
-              causal=True):
+              causal=True, kv_length=None, kv_start=None):
     B, T, _ = x.shape
     H = cfg.num_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -297,8 +356,18 @@ def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
                                                   (B, H, S, rd))], axis=-1)
     qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    out = dot_product_attention(qfull, k, v, positions, kv_pos,
-                                window=0, causal=causal, impl=cfg.attn_impl)
+    if cache is not None and T == 1 and causal:
+        # MLA decode: after latent decompression this is MHA (G = 1) with
+        # distinct Dk/Dv head dims — shapes the flash-decode kernel and its
+        # length-bounded blocked fallback both support.
+        out = _decode_attention(cfg, qfull, k, v, positions, kv_pos,
+                                window=0, cache_start=cache_start,
+                                kv_length=kv_length, kv_start=kv_start,
+                                use_pallas=False)
+    else:
+        out = dot_product_attention(qfull, k, v, positions, kv_pos,
+                                    window=0, causal=causal,
+                                    impl=cfg.attn_impl)
     out = out.transpose(0, 2, 1, 3).reshape(B, T, H * vd)
     return apply_dense(p["wo"], out.astype(x.dtype)), new_cache
 
@@ -315,6 +384,9 @@ def make_attention(key, cfg: ModelConfig, dtype):
 def apply_attention(p, cfg: ModelConfig, x, positions, **kw):
     if cfg.attention_kind == "mla":
         kw.pop("kv_x", None), kw.pop("kv_positions", None)
-        kw.pop("use_pallas", None)   # MLA uses the jnp path (mixed head dims)
+        # MLA prefill stays on the jnp path (mixed head dims defeat the
+        # prefill flash tiling); decode routes to the flash-decode op, which
+        # handles Dk != Dv, inside apply_mla.
+        kw.pop("use_pallas", None)
         return apply_mla(p, cfg, x, positions, **kw)
     return apply_gqa(p, cfg, x, positions, **kw)

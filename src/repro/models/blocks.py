@@ -88,7 +88,7 @@ def init_block_cache(cfg: ModelConfig, sig: BlockSig, batch: int, max_len: int, 
 def apply_block(p, cfg: ModelConfig, sig: BlockSig, x, positions, *,
                 cache=None, cache_start=None, encoder_out=None,
                 encoder_positions=None, use_pallas: bool = False,
-                causal: bool = True):
+                causal: bool = True, kv_length=None, kv_start=None):
     kind, is_moe, cross = sig
     norm = apply_layernorm if kind == RWKV else functools.partial(
         apply_rmsnorm, eps=cfg.norm_eps)
@@ -100,7 +100,8 @@ def apply_block(p, cfg: ModelConfig, sig: BlockSig, x, positions, *,
         out, c = apply_attention(p["attn"], cfg, h, positions,
                                  cache=None if cache is None else cache["self"],
                                  cache_start=cache_start, causal=causal,
-                                 use_pallas=use_pallas)
+                                 use_pallas=use_pallas, kv_length=kv_length,
+                                 kv_start=kv_start)
         if c is not None:
             new_cache["self"] = c
     elif kind == MAMBA:
@@ -175,7 +176,7 @@ def _maybe_remat(fn, cfg: ModelConfig):
 def apply_trunk(trunk_params, cfg: ModelConfig, x, positions, *,
                 caches=None, cache_start=None, encoder_out=None,
                 encoder_positions=None, use_pallas: bool = False,
-                causal: bool = True):
+                causal: bool = True, kv_length=None, kv_start=None):
     """Run all layers.  Returns (x, new_caches, aux_mean)."""
     runs = signature_runs(cfg)
     new_caches = [] if caches is not None else None
@@ -196,7 +197,8 @@ def apply_trunk(trunk_params, cfg: ModelConfig, x, positions, *,
                 layer_p, cfg, sig, h, positions,
                 cache=layer_c, cache_start=cache_start,
                 encoder_out=encoder_out, encoder_positions=encoder_positions,
-                use_pallas=use_pallas, causal=causal)
+                use_pallas=use_pallas, causal=causal, kv_length=kv_length,
+                kv_start=kv_start)
             outs = (new_c, aux) if cache is not None else aux
             return h, outs
 

@@ -47,6 +47,9 @@ class ModelConfig:
     pos_embed: str = "rope"           # rope|learned (whisper decoder)
     sliding_window: int = 0           # 0 = full attention; >0 = SWA (mixtral)
     attn_impl: str = "naive"          # naive (materialised scores) | blocked (online-softmax XLA flash)
+    decode_impl: str = "auto"         # T==1 decode attention: auto (pallas on TPU;
+                                      # naive for tiny caches, length-bounded blocked
+                                      # beyond) | naive | blocked | pallas | interpret
 
     # -- MLA (deepseek-v3) ---------------------------------------------------
     q_lora_rank: int = 0
@@ -164,6 +167,8 @@ class ModelConfig:
 
     def validate(self) -> None:
         assert self.block_kind in VALID_BLOCKS, self.block_kind
+        assert self.decode_impl in ("auto", "naive", "blocked", "pallas",
+                                    "interpret"), self.decode_impl
         if self.num_heads:
             assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
                 f"{self.name}: num_heads {self.num_heads} not divisible by "

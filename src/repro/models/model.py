@@ -300,12 +300,18 @@ def prefill(params, cfg: ModelConfig, tokens, positions, caches, *,
 
 def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, *,
                 encoder_out=None, encoder_positions=None,
-                use_pallas: bool = False):
+                use_pallas: bool = False, kv_length=None, kv_start=None):
     """One decode step.
 
     token: (B, 1); position: (B, 1); cache_start: slot to write — scalar
     int32 (lockstep decode) or (B,) int32 per-row slots (serving slot
     scheduler, where each slot sits at its own decode depth).
+    kv_length: optional per-row live cache extent (scalar or (B,) int32);
+    attention beyond it is skipped by the flash-decode kernel.  Defaults to
+    ``cache_start + 1`` — the just-written slot is the deepest live one.
+    kv_start: optional per-row first live slot; pass only when the context
+    is contiguous from that slot (left-padded prompt / compacted layout,
+    no vision prefix) so the kernel can also skip the dead left padding.
     Returns (logits (B, 1, V), new_caches)."""
     OP_COUNTS["decode_step"] += 1
     x = _embed(params, cfg, token, position)
@@ -313,6 +319,7 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
                                caches=caches, cache_start=cache_start,
                                encoder_out=encoder_out,
                                encoder_positions=encoder_positions,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas, kv_length=kv_length,
+                               kv_start=kv_start)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return _logits(params, cfg, x), caches

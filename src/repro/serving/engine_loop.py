@@ -123,10 +123,15 @@ def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
         lp_store = jnp.where(done, 0.0, cur_lp)
         count = count + (~done).astype(jnp.int32)
         done_next = done | (cur_tok == gen.eos_id) | (count >= budget)
+        # per-row live extents: each slot sits at its own decode depth, so
+        # the flash-decode kernel early-exits per row at write_idx + 1 and
+        # skips the dead left padding below write_idx - next_pos (the
+        # admitted context is contiguous — prefill or compacted layout)
         logits, caches = M.decode_step(
             params, cfg, tok_store[:, None],
             jnp.where(done[:, None], -1, next_pos[:, None]),
-            caches, write_idx)
+            caches, write_idx, kv_length=write_idx + 1,
+            kv_start=write_idx - next_pos)
         keys, sub = split_key(keys)
         nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
         carry = (caches, nxt, nlp, done_next, count, next_pos + 1,

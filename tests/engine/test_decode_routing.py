@@ -1,0 +1,147 @@
+"""Decode-path routing: generate / resume_from_cache / slot-server outputs
+are sample-for-sample identical whichever decode-attention impl serves the
+T==1 steps — legacy naive, the length-bounded blocked path, or the split-K
+Pallas kernel in interpret mode (ISSUE 3 acceptance criterion)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine.generate import (GenerateConfig, generate,
+                                   positions_from_mask, resume_from_cache)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=32)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 3, 32)
+    mask = np.ones((3, 8), bool)
+    mask[0, :3] = False
+    mask[2, :1] = False
+    mask = jnp.asarray(mask)
+    return cfg, params, jnp.where(mask, prompt, 0), mask
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_array_equal(np.asarray(a["length"]),
+                                  np.asarray(b["length"]))
+    np.testing.assert_allclose(np.asarray(a["logprobs"]),
+                               np.asarray(b["logprobs"]), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["blocked", "interpret"])
+def test_generate_token_identity(setup, impl):
+    cfg, params, prompt, mask = setup
+    gen = GenerateConfig(max_new_tokens=12)
+    key = jax.random.PRNGKey(7)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, key)
+    got = generate(params, cfg.replace(decode_impl=impl), gen, prompt, mask,
+                   key)
+    _assert_same(got, want)
+
+
+def test_auto_flips_to_blocked_beyond_naive_width(setup):
+    """S > NAIVE_MAX_S: 'auto' decode takes the length-bounded blocked path
+    and still reproduces the legacy naive samples token for token."""
+    from repro.kernels.decode_attention.ops import NAIVE_MAX_S
+    cfg, params, prompt, mask = setup
+    N = NAIVE_MAX_S + 8 - prompt.shape[1]        # cache width P + N = 136
+    gen = GenerateConfig(max_new_tokens=N, eos_id=31)   # rare eos: deep rows
+    key = jax.random.PRNGKey(9)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, key)
+    got = generate(params, cfg.replace(decode_impl="auto"), gen, prompt,
+                   mask, key)
+    _assert_same(got, want)
+    assert int(np.asarray(want["length"]).max()) > 64   # genuinely deep
+
+
+@pytest.mark.parametrize("impl", ["blocked", "interpret"])
+def test_resume_from_cache_token_identity(setup, impl):
+    cfg, params, prompt, mask = setup
+    B, P = prompt.shape
+    N = 12
+    gen = GenerateConfig(max_new_tokens=N)
+    key = jax.random.PRNGKey(11)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, key)
+    cfg_i = cfg.replace(decode_impl=impl)
+    caches = M.init_cache(cfg_i, B, P + N)
+    logits, caches = M.prefill(params, cfg_i, prompt,
+                               positions_from_mask(mask), caches)
+    got = resume_from_cache(params, cfg_i, gen, caches, logits[:, -1],
+                            mask.sum(axis=1).astype(jnp.int32), P, key)
+    _assert_same(got, want)
+
+
+def test_slot_server_token_identity(setup):
+    """Slot-scheduled decode (per-row write depths -> per-row kv_length)
+    through the blocked path == fixed-batch naive generate per request."""
+    from repro.serving import Request, SlotEngine
+    cfg, params, prompt, mask = setup
+    B, P = prompt.shape
+    N = 12
+    gen = GenerateConfig(max_new_tokens=N)
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(19), i)
+                    )(jnp.arange(B))
+    budget = jnp.array([N, 3, 7], jnp.int32)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, keys, row_budget=budget)
+
+    eng = SlotEngine(params, cfg.replace(decode_impl="blocked"), gen,
+                     num_slots=2, prompt_width=P, chunk_steps=4)
+    kn, pn, mn = np.asarray(keys), np.asarray(prompt), np.asarray(mask)
+    for i in range(B):
+        pl = int(mn[i].sum())
+        eng.submit(Request(request_id=i, prompt=pn[i, P - pl:], key=kn[i],
+                           max_new_tokens=int(budget[i])))
+    resps = eng.run()
+    for i in range(B):
+        L = int(want["length"][i])
+        assert resps[i].length == L
+        np.testing.assert_array_equal(resps[i].tokens,
+                                      np.asarray(want["tokens"])[i, :L])
+        np.testing.assert_allclose(resps[i].logprobs,
+                                   np.asarray(want["logprobs"])[i, :L],
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_mla_decode_routing_identity(setup):
+    """apply_mla's decode dispatch (G=1, Dk != Dv): blocked == naive."""
+    _, _, prompt, mask = setup
+    cfg = ModelConfig(name="mla", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=4, d_ff=128, vocab_size=32,
+                      attention_kind="mla", q_lora_rank=32, kv_lora_rank=32,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+    params = M.init_lm(jax.random.PRNGKey(2), cfg)
+    gen = GenerateConfig(max_new_tokens=10)
+    key = jax.random.PRNGKey(13)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, key)
+    got = generate(params, cfg.replace(decode_impl="blocked"), gen, prompt,
+                   mask, key)
+    _assert_same(got, want)
+
+
+def test_sliding_window_decode_routing_identity(setup):
+    _, _, prompt, mask = setup
+    cfg = ModelConfig(name="swa", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=32,
+                      sliding_window=6)
+    params = M.init_lm(jax.random.PRNGKey(3), cfg)
+    gen = GenerateConfig(max_new_tokens=12)
+    key = jax.random.PRNGKey(17)
+    want = generate(params, cfg.replace(decode_impl="naive"), gen, prompt,
+                    mask, key)
+    for impl in ("blocked", "interpret"):
+        got = generate(params, cfg.replace(decode_impl=impl), gen, prompt,
+                       mask, key)
+        _assert_same(got, want)
