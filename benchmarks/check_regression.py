@@ -1,0 +1,124 @@
+"""Bench-regression guard: compare freshly recorded BENCH_*.json speedup
+ratios against the committed baselines and fail on >30% regression.
+
+Baselines live in ``benchmarks/baselines/`` and are recorded in the SAME
+``--smoke`` mode CI runs, so ratios compare like-for-like (the repo-root
+BENCH_*.json are the full-mode perf-trajectory records — different shapes,
+different ratios — and are not what CI regenerates).  Only *speedup-like*
+keys are guarded (key name contains ``speedup``, value numeric).  Two
+tiers: ratios whose baseline is at least ``--min-baseline`` (default 1.2)
+— actual protected speedups — fail on a >``--threshold`` (30%) relative
+drop; sub-floor ratios (a ratio at or below ~1.0 in the smoke regime is a
+recorded trade-off, not a speedup — e.g. the dispatch-bound one-pass CPU
+shapes noted for PR 3, or blocked-vs-naive at smoke cache widths, and its
+timing noise is large) are still guarded against *catastrophic* collapse
+via the wider ``--floor-threshold`` (60%), so no file is ever a silent
+no-op.  A baseline path missing from the fresh record IS a failure — it
+means the bench silently stopped recording it.  No jax import — this runs
+in seconds on any runner.
+
+    python benchmarks/check_regression.py --fresh-dir bench-artifacts \
+        --files BENCH_rollout.json BENCH_decode.json BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterator, Tuple
+
+
+def iter_speedups(obj, path: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield (json-path, value) for every numeric key containing 'speedup'."""
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            sub = f"{path}.{k}" if path else str(k)
+            if "speedup" in str(k) and isinstance(v, (int, float)):
+                yield sub, float(v)
+            else:
+                yield from iter_speedups(v, sub)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from iter_speedups(v, f"{path}[{i}]")
+
+
+def check_file(baseline_path: str, fresh_path: str, threshold: float,
+               min_baseline: float, floor_threshold: float
+               ) -> Tuple[int, int]:
+    """Returns (checked, failed) and prints one line per guarded ratio."""
+    with open(baseline_path) as f:
+        base = dict(iter_speedups(json.load(f)))
+    with open(fresh_path) as f:
+        fresh = dict(iter_speedups(json.load(f)))
+    name = os.path.basename(baseline_path)
+    checked = failed = 0
+    for key, bval in base.items():
+        fval = fresh.get(key)
+        if fval is None:
+            print(f"FAIL {name}:{key} missing from fresh record")
+            failed += 1
+            checked += 1
+            continue
+        strict = bval >= min_baseline
+        tol = threshold if strict else floor_threshold
+        tier = "" if strict else \
+            f" [sub-{min_baseline:.1f}x baseline, lax tier]"
+        checked += 1
+        floor = bval * (1.0 - tol)
+        status = "ok  " if fval >= floor else "FAIL"
+        if fval < floor:
+            failed += 1
+        print(f"{status} {name}:{key} baseline {bval:.2f}x fresh {fval:.2f}x "
+              f"(floor {floor:.2f}x){tier}")
+    return checked, failed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "baselines"),
+                    help="directory holding the committed smoke baselines")
+    ap.add_argument("--fresh-dir", default="bench-artifacts",
+                    help="directory holding the just-recorded BENCH_*.json")
+    ap.add_argument("--files", nargs="+",
+                    default=["BENCH_rollout.json", "BENCH_decode.json",
+                             "BENCH_serving.json"])
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional regression of a protected "
+                         "(>= min-baseline) speedup ratio")
+    ap.add_argument("--min-baseline", type=float, default=1.2,
+                    help="baselines below this use the lax floor-threshold "
+                         "tier instead of the strict one")
+    ap.add_argument("--floor-threshold", type=float, default=0.60,
+                    help="max allowed fractional drop of a sub-floor ratio "
+                         "(catches collapses without crying wolf on noise)")
+    args = ap.parse_args(argv)
+
+    total = failures = 0
+    for fn in args.files:
+        bpath = os.path.join(args.baseline_dir, fn)
+        fpath = os.path.join(args.fresh_dir, fn)
+        if not os.path.exists(bpath):
+            print(f"FAIL missing committed baseline {bpath}")
+            failures += 1
+            continue
+        if not os.path.exists(fpath):
+            print(f"FAIL missing fresh record {fpath} (bench did not run?)")
+            failures += 1
+            continue
+        c, f = check_file(bpath, fpath, args.threshold, args.min_baseline,
+                          args.floor_threshold)
+        if c == 0:
+            print(f"FAIL {fn}: no speedup ratios found to guard")
+            failures += 1
+        total += c
+        failures += f
+    print(f"bench-regression guard: {total} ratios checked, "
+          f"{failures} failures (threshold {args.threshold:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -139,8 +139,10 @@ def assemble(draft_tokens, prefix_lp, n, cont_tokens, cont_lp, cont_len,
     return tokens, lp, in_resp, total
 
 
-def _vanilla(params, cfg, gen, prompts, prompt_mask, key, model_kwargs):
-    out = generate(params, cfg, gen, prompts, prompt_mask, key, **model_kwargs)
+def _vanilla(params, cfg, gen, prompts, prompt_mask, key, model_kwargs,
+             mesh=None):
+    out = generate(params, cfg, gen, prompts, prompt_mask, key, mesh=mesh,
+                   **model_kwargs)
     return out
 
 
@@ -162,7 +164,7 @@ def use_one_pass(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
 
 def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             prompts, prompt_mask, prompt_ids: Sequence[int],
-            cache: Optional[RolloutCache], key, step: int,
+            cache: Optional[RolloutCache], key, step: int, mesh=None,
             **model_kwargs) -> RolloutBatch:
     """One rollout step for a prompt batch.  Host-level: the cache is host
     memory; verification / compaction / generation / assembly are jit'd
@@ -174,13 +176,25 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     ``spec.backfill == 'slots'`` the whole step is drained through the
     serving slot scheduler instead of the fixed decode batch: rows that
     finish early immediately pick up pending prompts (DESIGN.md §6).
+
+    ``mesh``: optional live Mesh (DESIGN.md §8).  Batch rows are placed over
+    the data axes, params are expected pre-sharded by the caller, and every
+    device stage — verify, compact, resume/generate — runs the same SPMD
+    program, so the output is token-identical to the single-device path.
     """
     assert spec.variant in VARIANTS, spec.variant
     if spec.backfill == "slots":
         from repro.serving.rl_adapter import rollout_via_slots
         return rollout_via_slots(params, cfg, gen, spec, prompts, prompt_mask,
-                                 prompt_ids, cache, key, step, **model_kwargs)
+                                 prompt_ids, cache, key, step, mesh=mesh,
+                                 **model_kwargs)
     assert spec.backfill == "none", spec.backfill
+    if mesh is not None:
+        from repro.distributed.mesh import shard_batch
+        prompts, prompt_mask = shard_batch(mesh, (jnp.asarray(prompts),
+                                                  jnp.asarray(prompt_mask)))
+        if jnp.ndim(key) == 2:
+            key = shard_batch(mesh, key)
     B, P = prompts.shape
     N = gen.max_new_tokens
     t0 = time.perf_counter()
@@ -192,7 +206,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
 
     if not have_drafts:
         key, sub = split_key(key)
-        out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub, model_kwargs)
+        out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub,
+                       model_kwargs, mesh=mesh)
         resp, lp, length = out["tokens"], out["logprobs"], out["length"]
         resp_mask = jnp.arange(N)[None, :] < length[:, None]
         rollout_time = time.perf_counter() - t0
@@ -214,6 +229,10 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     draft_lp = jnp.asarray(drafts["draft_logprobs"])
     draft_len = jnp.asarray(drafts["draft_len"])
     draft_eos = jnp.asarray(drafts["draft_eos"])
+    if mesh is not None:
+        from repro.distributed.mesh import shard_batch
+        draft_tokens, draft_lp, draft_len, draft_eos = shard_batch(
+            mesh, (draft_tokens, draft_lp, draft_len, draft_eos))
     one_pass = use_one_pass(cfg, spec, model_kwargs)
 
     tv0 = time.perf_counter()
@@ -224,7 +243,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
                                  draft_tokens, draft_lp, draft_len, sub,
                                  spec.log_lenience, temperature=gen.temperature,
                                  top_p=gen.top_p, impl=spec.verify_impl,
-                                 **model_kwargs)
+                                 mesh=mesh, **model_kwargs)
         n = ver["n"]
         prefix_lp = ver["lp_curr"]
         accept_rate = float(ver["accept_rate"])
@@ -237,7 +256,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         p_len = jnp.sum(prompt_mask, axis=1).astype(jnp.int32)
         caches = M.realign_decode_cache(cfg, ver["caches"],
                                         (N - n).astype(jnp.int32),
-                                        p_len + n, W, impl=spec.compact_impl)
+                                        p_len + n, W, impl=spec.compact_impl,
+                                        mesh=mesh)
         jax.block_until_ready(jax.tree.leaves(caches)[0])
         compact_time = time.perf_counter() - tc0
 
@@ -247,7 +267,7 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         key, sub = split_key(key)
         cont = resume_from_cache(params, cfg, gen, caches, ver["seed_logits"],
                                  p_len + n, W, sub, initial_done=full_reuse,
-                                 row_budget=N - n, **model_kwargs)
+                                 row_budget=N - n, mesh=mesh, **model_kwargs)
         jax.block_until_ready(cont["tokens"])
         decode_time = time.perf_counter() - td0
         rollout_time = compact_time + decode_time
@@ -259,7 +279,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             ver = verify_drafts(params, cfg, prompts, prompt_mask, draft_tokens,
                                 draft_lp, draft_len, sub, spec.log_lenience,
                                 temperature=gen.temperature, top_p=gen.top_p,
-                                impl=spec.verify_impl, **model_kwargs)
+                                impl=spec.verify_impl, mesh=mesh,
+                                **model_kwargs)
             n = ver["n"]
             prefix_lp = ver["lp_curr"]      # current-policy probs (exact)
             accept_rate = float(ver["accept_rate"])
@@ -299,7 +320,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         td0 = time.perf_counter()
         key, sub = split_key(key)
         cont = generate(params, cfg, gen, aligned_tokens, aligned_mask, sub,
-                        initial_done=full_reuse, row_budget=N - n, **model_kwargs)
+                        initial_done=full_reuse, row_budget=N - n, mesh=mesh,
+                        **model_kwargs)
         jax.block_until_ready(cont["tokens"])
         decode_time = time.perf_counter() - td0
         rollout_time = compact_time + decode_time

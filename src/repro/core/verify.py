@@ -22,6 +22,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.shard_wrap import sharded_spec_verify
 from repro.engine.generate import positions_from_mask, score
 from repro.engine.sampling import logprobs_of
 from repro.kernels.spec_verify.ops import spec_verify
@@ -43,11 +44,11 @@ def _accept_uniforms(key, B: int, N: int) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",
-                                             "impl"))
+                                             "impl", "mesh"))
 def verify_drafts(params, cfg: ModelConfig, prompt, prompt_mask,
                   draft_tokens, draft_logprobs, draft_len, key,
                   log_lenience, *, temperature: float = 1.0,
-                  top_p: float = 1.0, impl: str = "auto",
+                  top_p: float = 1.0, impl: str = "auto", mesh=None,
                   **model_kwargs) -> Dict[str, jnp.ndarray]:
     """prompt: (B, P) left-padded; draft_*: (B, N) right-padded.
 
@@ -68,20 +69,30 @@ def verify_drafts(params, cfg: ModelConfig, prompt, prompt_mask,
     lp_curr = sc["logprobs"][:, P:]                       # (B, N)
 
     u = _accept_uniforms(key, B, N)
-    n = spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
-                    impl=impl)
+    n = _spec_verify(mesh, lp_curr, draft_logprobs, u, draft_len,
+                     log_lenience, impl)
 
     total = jnp.maximum(draft_len.sum(), 1)
     accept_rate = n.sum() / total
     return {"n": n, "lp_curr": lp_curr, "accept_rate": accept_rate}
 
 
+def _spec_verify(mesh, lp_curr, draft_logprobs, u, draft_len, log_lenience,
+                 impl):
+    """Dispatch the accept/first-reject kernel, via §8 shard_map on a mesh."""
+    if mesh is not None:
+        return sharded_spec_verify(mesh, lp_curr, draft_logprobs, u,
+                                   draft_len, log_lenience, impl=impl)
+    return spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
+                       impl=impl)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",
-                                             "impl"))
+                                             "impl", "mesh"))
 def verify_and_prefill(params, cfg: ModelConfig, prompt, prompt_mask,
                        draft_tokens, draft_logprobs, draft_len, key,
                        log_lenience, *, temperature: float = 1.0,
-                       top_p: float = 1.0, impl: str = "auto",
+                       top_p: float = 1.0, impl: str = "auto", mesh=None,
                        **model_kwargs) -> Dict[str, jnp.ndarray]:
     """Fused verification + engine prefill over [prompt | draft] (one pass).
 
@@ -108,6 +119,9 @@ def verify_and_prefill(params, cfg: ModelConfig, prompt, prompt_mask,
     extras = {k: model_kwargs.get(k) for k in
               ("encoder_out", "encoder_positions")}
     caches = M.init_cache(cfg, B, W + N)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh)
     logits, caches = M.prefill(params, cfg, full, positions, caches, **extras)
 
     # same token-logprob extraction as engine.score (logits[t] -> token t+1)
@@ -118,8 +132,8 @@ def verify_and_prefill(params, cfg: ModelConfig, prompt, prompt_mask,
     lp_curr = jnp.where(valid, lp, 0.0)[:, P:]            # (B, N)
 
     u = _accept_uniforms(key, B, N)
-    n = spec_verify(lp_curr, draft_logprobs, u, draft_len, log_lenience,
-                    impl=impl)
+    n = _spec_verify(mesh, lp_curr, draft_logprobs, u, draft_len,
+                     log_lenience, impl)
 
     seed_idx = P + n.astype(jnp.int32) - 1                # n==0 -> last prompt tok
     seed_logits = jnp.take_along_axis(

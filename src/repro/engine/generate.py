@@ -53,15 +53,20 @@ def _model_extras(model_kwargs):
             ("encoder_out", "encoder_positions")}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "gen"))
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "mesh"))
 def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
-             key, initial_done=None, row_budget=None,
+             key, initial_done=None, row_budget=None, mesh=None,
              **model_kwargs) -> Dict[str, jnp.ndarray]:
     """prompt: (B, P) int32 left-padded; prompt_mask: (B, P) bool.
 
     initial_done: optional (B,) bool — rows that must not decode at all
     (SPEC-RL full-reuse rows).  row_budget: optional (B,) int32 — per-row max
     generated tokens (SPEC-RL continuation budget = max_resp - prefix_len).
+    mesh: optional live Mesh (static) — the KV caches are constrained
+    batch-over-data / heads-over-model and decode attention runs inside the
+    §8 shard_map boundary; with sharded params/inputs the whole program
+    compiles SPMD.  ``None`` is the single-device path, bit-for-bit the
+    pre-mesh behaviour.
 
     Returns dict with:
       tokens     (B, N) generated tokens (pad after eos)
@@ -77,6 +82,9 @@ def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
 
     cache_len = P + N + (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
     caches = M.init_cache(cfg, B, cache_len)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh)
 
     if prefix_embeds is not None:
         Pv = prefix_embeds.shape[1]
@@ -99,13 +107,13 @@ def generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt, prompt_mask,
     next_pos = prompt_mask.sum(axis=1).astype(jnp.int32) + pos_offset  # (B,)
     return _decode_loop(params, cfg, gen, caches, logits[:, -1], next_pos,
                         write_offset, key, initial_done, row_budget, extras,
-                        kv_start=kv_start)
+                        kv_start=kv_start, mesh=mesh)
 
 
 def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
                  seed_logits, next_pos, write_offset, key,
                  initial_done, row_budget, extras,
-                 kv_start=None) -> Dict[str, jnp.ndarray]:
+                 kv_start=None, mesh=None) -> Dict[str, jnp.ndarray]:
     """The decode stage: sample from ``seed_logits`` then run the while_loop.
 
     caches: populated KV caches whose slots [0, write_offset) hold the
@@ -149,7 +157,8 @@ def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
             params, cfg, tok_store[:, None],
             jnp.where(done[:, None], -1, next_pos[:, None]),
             caches, write_offset + step,
-            kv_length=write_offset + 1 + step, kv_start=kv_start, **extras)
+            kv_length=write_offset + 1 + step, kv_start=kv_start,
+            mesh=mesh, **extras)
         key, sub = split_key(key)
         nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
         return (step + 1, done_next, nxt, nlp, next_pos + 1, caches,
@@ -171,10 +180,11 @@ def _decode_loop(params, cfg: ModelConfig, gen: GenerateConfig, caches,
     }
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "gen", "write_offset"))
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "write_offset",
+                                             "mesh"))
 def resume_from_cache(params, cfg: ModelConfig, gen: GenerateConfig, caches,
                       seed_logits, next_pos, write_offset: int, key,
-                      initial_done=None, row_budget=None,
+                      initial_done=None, row_budget=None, mesh=None,
                       **model_kwargs) -> Dict[str, jnp.ndarray]:
     """Continue decoding from an existing cache — the one-pass SPEC-RL entry.
 
@@ -190,13 +200,16 @@ def resume_from_cache(params, cfg: ModelConfig, gen: GenerateConfig, caches,
     """
     extras = _model_extras(model_kwargs)
     next_pos = next_pos.astype(jnp.int32)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh)
     # compacted layout (§3): row b's context is contiguous in
     # [write_offset - next_pos[b], write_offset) — a short accepted prefix
     # decodes over its live extent, not the allocated verify width
     return _decode_loop(params, cfg, gen, caches, seed_logits,
                         next_pos, write_offset, key,
                         initial_done, row_budget, extras,
-                        kv_start=write_offset - next_pos)
+                        kv_start=write_offset - next_pos, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "temperature", "top_p",

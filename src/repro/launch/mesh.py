@@ -1,10 +1,18 @@
 """Production meshes (assignment): single pod (16, 16) = 256 chips with axes
 (data, model); multi-pod (2, 16, 16) = 512 chips with axes (pod, data,
 model).  A FUNCTION, not a module constant — importing this module never
-touches jax device state."""
+touches jax device state.
+
+The *runtime* mesh — the one the trainer / rollout / serving stack actually
+executes on — is configured with ``repro.distributed.mesh.MeshConfig``
+(re-exported here), which falls back to single-device when the host cannot
+fit the axes (DESIGN.md §8).
+"""
 from __future__ import annotations
 
 import jax
+
+from repro.distributed.mesh import MeshConfig  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

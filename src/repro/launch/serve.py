@@ -6,6 +6,9 @@ the slot engine does not cover (recurrent state, encoder/vision extras).
     PYTHONPATH=src python -m repro.launch.serve --smoke
     PYTHONPATH=src python -m repro.launch.serve --no-smoke --arch qwen3-1.7b \
         --requests 64 --slots 8 --spec-prefix
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --smoke \
+        --mesh-data 2 --mesh-model 2      # one scheduler per data shard (§8)
 """
 from __future__ import annotations
 
@@ -21,10 +24,11 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core.cache import RolloutCache
 from repro.data.dataset import PromptDataset
 from repro.data.tokenizer import VOCAB_SIZE, decode
+from repro.distributed.mesh import MeshConfig, data_size, shard_params
 from repro.engine.generate import GenerateConfig, generate
 from repro.models import model as M
 from repro.rewards.mathgen import MathTaskConfig, generate_problems
-from repro.serving import Request, SlotEngine
+from repro.serving import Request, make_slot_engine
 
 # long-tailed per-request budgets (fractions of --max-new-tokens): most
 # requests are short, a few run to the full budget — the regime where
@@ -110,6 +114,13 @@ def main(argv=None):
     p.add_argument("--spec-prefix", action="store_true",
                    help="serve every request twice: the first pass's output "
                         "becomes the second pass's speculative prefix")
+    p.add_argument("--mesh-data", type=int, default=1,
+                   help="data shards — one slot scheduler per shard (§8)")
+    p.add_argument("--mesh-model", type=int, default=1,
+                   help="model-parallel axis size per shard")
+    p.add_argument("--require-mesh", action="store_true",
+                   help="fail instead of silently serving single-device "
+                        "when the host has fewer devices than the mesh")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -121,6 +132,18 @@ def main(argv=None):
         cfg = cfg.replace(vocab_size=VOCAB_SIZE)
     params = M.init_lm(jax.random.PRNGKey(args.seed), cfg)
     gen = GenerateConfig(max_new_tokens=max_new)
+    mesh = MeshConfig(data=args.mesh_data, model=args.mesh_model,
+                      require=args.require_mesh).build()
+    if mesh is not None and data_size(mesh) <= 1:
+        # model-only mesh: shard params here; the slot engine head-shards
+        # its caches from the same mesh
+        params = shard_params(mesh, cfg, params)
+
+    def make_engine(spec_prefix: bool):
+        return make_slot_engine(params, cfg, gen, mesh=mesh,
+                                num_slots=args.slots,
+                                prompt_width=args.prompt_len,
+                                spec_prefix=spec_prefix, log_lenience=0.0)
 
     rng = random.Random(args.seed)
     problems = generate_problems(MathTaskConfig(num_problems=n_requests))
@@ -155,8 +178,7 @@ def main(argv=None):
     if args.spec_prefix:
         # pass 1 (vanilla) builds the draft cache; pass 2 below serves with
         # speculative-prefix admission against the same policy
-        warm = SlotEngine(params, cfg, gen, num_slots=args.slots,
-                          prompt_width=args.prompt_len)
+        warm = make_engine(spec_prefix=False)
         for r in reqs:
             warm.submit(Request(request_id=r.request_id, prompt=r.prompt,
                                 key=r.key, max_new_tokens=r.max_new_tokens))
@@ -176,9 +198,7 @@ def main(argv=None):
             r.draft_eos = e.ends_with_eos
         t0 = time.time()
 
-    engine = SlotEngine(params, cfg, gen, num_slots=args.slots,
-                        prompt_width=args.prompt_len,
-                        spec_prefix=args.spec_prefix, log_lenience=0.0)
+    engine = make_engine(spec_prefix=args.spec_prefix)
     if args.arrival_every > 0:
         arrivals = [(i * args.arrival_every, r) for i, r in enumerate(reqs)]
         resps = engine.run(arrivals=arrivals)
@@ -189,7 +209,9 @@ def main(argv=None):
     dt = time.time() - t0
     s = engine.stats()
     n_gen = int(s["generated_tokens"])
-    print(f"arch={cfg.name} engine=slots(spec={args.spec_prefix}): served "
+    shards = int(s.get("num_shards", 1))
+    print(f"arch={cfg.name} engine=slots(spec={args.spec_prefix}, "
+          f"shards={shards}): served "
           f"{n_requests} requests, {n_gen} generated "
           f"(+{int(s['reused_tokens'])} reused) tokens in {dt:.2f}s "
           f"({(n_gen + int(s['reused_tokens'])) / max(dt, 1e-9):.0f} tok/s)")

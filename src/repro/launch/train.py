@@ -1,11 +1,18 @@
 """Distributed training launcher.
 
 On real hardware this runs the RLVR trainer with parameters laid out by the
-partition rules over the production mesh.  On this CPU container it runs
-single-device (mesh (1,1)) — the full-mesh path is proven by dryrun.py.
+partition rules over the production mesh; ``--mesh-data/--mesh-model`` build
+the runtime mesh (DESIGN.md §8) and the whole rollout → verify → train loop
+executes SPMD on it.  A (1, 1) mesh — or too few devices — falls back to
+single-device execution, token-identical by the §8 contract.  On a CPU
+container virtual devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-        --smoke --steps 4          # reduced variant, CPU
+        --smoke --steps 4          # reduced variant, CPU, single device
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.train --smoke --steps 4 \
+        --mesh-data 4 --mesh-model 2
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import SpecConfig
 from repro.data.dataset import PromptDataset
 from repro.data.tokenizer import VOCAB_SIZE
+from repro.distributed.mesh import MeshConfig
 from repro.optim.adamw import AdamWConfig
 from repro.rewards.mathgen import MathTaskConfig, generate_problems
 from repro.rl.trainer import RLConfig, Trainer
@@ -38,6 +46,13 @@ def main(argv=None):
     p.add_argument("--prompts-per-batch", type=int, default=4)
     p.add_argument("--max-new-tokens", type=int, default=10)
     p.add_argument("--lr", type=float, default=5e-7)
+    p.add_argument("--mesh-data", type=int, default=1,
+                   help="data-parallel axis size (1 = off)")
+    p.add_argument("--mesh-model", type=int, default=1,
+                   help="model-parallel axis size (1 = off)")
+    p.add_argument("--require-mesh", action="store_true",
+                   help="fail instead of falling back when the host has "
+                        "fewer devices than the mesh needs")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -55,8 +70,12 @@ def main(argv=None):
                   optim=AdamWConfig(lr=args.lr))
     spec = SpecConfig(variant=args.variant, lenience=args.lenience,
                       verify_impl="auto")
-    tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0))
-    print(f"arch={cfg.name} devices={jax.device_count()} "
+    mesh_cfg = MeshConfig(data=args.mesh_data, model=args.mesh_model,
+                          require=args.require_mesh)
+    tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg)
+    mesh_desc = (f"{args.mesh_data}x{args.mesh_model}" if tr.mesh is not None
+                 else "off")
+    print(f"arch={cfg.name} devices={jax.device_count()} mesh={mesh_desc} "
           f"params={sum(x.size for x in jax.tree.leaves(tr.params)) / 1e6:.1f}M")
     for _ in range(args.steps):
         m = tr.train_step()

@@ -127,7 +127,7 @@ def _blocked_attention(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
 
 def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
                       window: int, cache_start, kv_length, kv_start,
-                      use_pallas: bool) -> jnp.ndarray:
+                      use_pallas: bool, mesh=None) -> jnp.ndarray:
     """Route a decode-shaped (T == 1, cached) call to the flash-decode op.
 
     ``kv_length`` is the per-row live cache extent.  When the caller does
@@ -138,6 +138,10 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
     front of a left-padded / compacted context); only callers that know
     their layout is contiguous from that slot may thread it — None means
     start at 0, which is always safe.
+
+    ``mesh`` routes the call through the shard_map boundary (DESIGN.md §8):
+    each device runs the kernel on its local (batch, head) block with a
+    static per-shard shape instead of leaving a Pallas black box to GSPMD.
     """
     B = q.shape[0]
     if kv_length is None:
@@ -158,6 +162,13 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
         impl = "pallas" if _default_backend() == "tpu" else "interpret"
     # remaining "auto" resolves in the op: pallas on TPU, else naive for
     # tiny caches / length-bounded blocked beyond (DESIGN.md §7)
+    if mesh is not None:
+        from repro.distributed.shard_wrap import sharded_decode_attention
+        if starts is None:
+            starts = jnp.zeros((B,), jnp.int32)
+        return sharded_decode_attention(
+            mesh, q, k.astype(q.dtype), v.astype(q.dtype), q_pos[:, 0],
+            kv_pos, lengths, starts, window=window, impl=impl)
     from repro.kernels.decode_attention.ops import decode_attention
     return decode_attention(q, k.astype(q.dtype), v.astype(q.dtype),
                             q_pos[:, 0], kv_pos, lengths, starts,
@@ -217,7 +228,8 @@ def make_gqa(key, cfg: ModelConfig, dtype):
 
 def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
               causal=True, kv_x=None, kv_positions=None,
-              use_pallas: bool = False, kv_length=None, kv_start=None):
+              use_pallas: bool = False, kv_length=None, kv_start=None,
+              mesh=None):
     """GQA attention.
 
     x: (B, T, d).  With ``cache`` given, writes K/V at ``cache_start`` and
@@ -264,7 +276,8 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
         out = _decode_attention(cfg, q, k, v, positions, kv_pos,
                                 window=cfg.sliding_window,
                                 cache_start=cache_start, kv_length=kv_length,
-                                kv_start=kv_start, use_pallas=use_pallas)
+                                kv_start=kv_start, use_pallas=use_pallas,
+                                mesh=mesh)
     elif use_pallas and kv_x is None and T > 1:
         # Pallas flash kernel (TPU; interpret mode in tests).  Same schedule
         # as _blocked_attention but with MXU-aligned VMEM tiles.  The decode
@@ -317,7 +330,7 @@ def make_mla(key, cfg: ModelConfig, dtype):
 
 
 def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None,
-              causal=True, kv_length=None, kv_start=None):
+              causal=True, kv_length=None, kv_start=None, mesh=None):
     B, T, _ = x.shape
     H = cfg.num_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -363,7 +376,7 @@ def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
         out = _decode_attention(cfg, qfull, k, v, positions, kv_pos,
                                 window=0, cache_start=cache_start,
                                 kv_length=kv_length, kv_start=kv_start,
-                                use_pallas=False)
+                                use_pallas=False, mesh=mesh)
     else:
         out = dot_product_attention(qfull, k, v, positions, kv_pos,
                                     window=0, causal=causal,

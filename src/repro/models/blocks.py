@@ -88,7 +88,8 @@ def init_block_cache(cfg: ModelConfig, sig: BlockSig, batch: int, max_len: int, 
 def apply_block(p, cfg: ModelConfig, sig: BlockSig, x, positions, *,
                 cache=None, cache_start=None, encoder_out=None,
                 encoder_positions=None, use_pallas: bool = False,
-                causal: bool = True, kv_length=None, kv_start=None):
+                causal: bool = True, kv_length=None, kv_start=None,
+                mesh=None):
     kind, is_moe, cross = sig
     norm = apply_layernorm if kind == RWKV else functools.partial(
         apply_rmsnorm, eps=cfg.norm_eps)
@@ -101,7 +102,7 @@ def apply_block(p, cfg: ModelConfig, sig: BlockSig, x, positions, *,
                                  cache=None if cache is None else cache["self"],
                                  cache_start=cache_start, causal=causal,
                                  use_pallas=use_pallas, kv_length=kv_length,
-                                 kv_start=kv_start)
+                                 kv_start=kv_start, mesh=mesh)
         if c is not None:
             new_cache["self"] = c
     elif kind == MAMBA:
@@ -176,7 +177,8 @@ def _maybe_remat(fn, cfg: ModelConfig):
 def apply_trunk(trunk_params, cfg: ModelConfig, x, positions, *,
                 caches=None, cache_start=None, encoder_out=None,
                 encoder_positions=None, use_pallas: bool = False,
-                causal: bool = True, kv_length=None, kv_start=None):
+                causal: bool = True, kv_length=None, kv_start=None,
+                mesh=None):
     """Run all layers.  Returns (x, new_caches, aux_mean)."""
     runs = signature_runs(cfg)
     new_caches = [] if caches is not None else None
@@ -198,7 +200,7 @@ def apply_trunk(trunk_params, cfg: ModelConfig, x, positions, *,
                 cache=layer_c, cache_start=cache_start,
                 encoder_out=encoder_out, encoder_positions=encoder_positions,
                 use_pallas=use_pallas, causal=causal, kv_length=kv_length,
-                kv_start=kv_start)
+                kv_start=kv_start, mesh=mesh)
             outs = (new_c, aux) if cache is not None else aux
             return h, outs
 

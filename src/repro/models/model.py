@@ -14,6 +14,7 @@ encoder (audio).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -185,7 +186,7 @@ def _roll_rows(buf, shift, impl):
 
 
 def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
-                         width: int, *, impl: str = "auto"):
+                         width: int, *, impl: str = "auto", mesh=None):
     """Compact verify-prefill caches to the left-aligned decode layout.
 
     After ``prefill`` over [left-padded prompt | right-padded draft] of width
@@ -201,8 +202,29 @@ def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
     shift / valid_len: (B,) int32; width: python int (the prefilled width).
     Returns the realigned cache pytree, ready for ``resume_from_cache`` with
     write_offset = width.
+
+    Under a ``mesh`` the per-buffer roll runs inside a shard_map boundary
+    over the batch (data) axis — each device rolls its local cache rows with
+    a static per-shard shape — and the output is constrained back to the
+    decode-cache layout (DESIGN.md §8).
     """
     assert supports_cache_realign(cfg), "realign needs attention-only trunks"
+    roll = _roll_rows
+    if mesh is not None:
+        from repro.distributed.shard_wrap import (batch_axis_name,
+                                                  batch_shardable,
+                                                  shard_map_call)
+        from jax.sharding import PartitionSpec as P
+
+        def roll(buf, shift_, impl_):
+            if not batch_shardable(mesh, buf.shape[1]):
+                return _roll_rows(buf, shift_, impl_)
+            d = batch_axis_name(mesh)
+            bspec = P(None, d, *([None] * (buf.ndim - 2)))
+            return shard_map_call(
+                mesh, functools.partial(_roll_rows, impl=impl_),
+                (bspec, P(d)), bspec, buf, shift_)
+
     new_caches = []
     for run in caches:
         sc = run["self"]
@@ -214,8 +236,11 @@ def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
         new_sc = {"pos": jnp.broadcast_to(pos_row[None], (run_len, B, S))}
         for name in ("k", "v", "ckv", "krope"):
             if name in sc:
-                new_sc[name] = _roll_rows(sc[name], shift, impl)
+                new_sc[name] = roll(sc[name], shift, impl)
         new_caches.append({"self": new_sc})
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        new_caches = constrain_caches(cfg, new_caches, mesh)
     return new_caches
 
 
@@ -234,7 +259,7 @@ def supports_slot_serving(cfg: ModelConfig, model_kwargs=None) -> bool:
 
 
 def write_cache_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
-                      impl: str = "auto"):
+                      impl: str = "auto", mesh=None):
     """Admit prefilled rows into the persistent serving batch, in place.
 
     dst_caches: trunk caches over B slots; src_caches: same structure over R
@@ -247,31 +272,51 @@ def write_cache_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
 
     pos arrays ride a plain jnp scatter (they are tiny and int32).
     Returns the updated cache pytree; untouched slots are bit-identical.
+
+    Under a ``mesh`` with a KV-head-sharded cache the scatter runs inside a
+    shard_map boundary over the head axis: slot indices are *batch* indices
+    and therefore replicated, so each model shard rewrites its local head
+    slice independently (DESIGN.md §8).
     """
     from repro.kernels.cache_slot_write.ops import cache_slot_write
     assert supports_cache_realign(cfg), "slot serving needs attention trunks"
     slots = slots.astype(jnp.int32)
+
+    def scatter(d, s, slots_):
+        run_len, B = d.shape[0], d.shape[1]
+        R = s.shape[1]
+        per = 1                                      # heads folded after batch
+        for sz in d.shape[2:-2]:
+            per *= sz
+        r0 = jnp.arange(run_len, dtype=jnp.int32)[:, None, None]
+        h = jnp.arange(per, dtype=jnp.int32)[None, None, :]
+        rows = ((r0 * B + slots_[None, :, None]) * per + h).reshape(-1)
+        flat = cache_slot_write(
+            d.reshape((run_len * B * per,) + d.shape[-2:]),
+            s.reshape((run_len * R * per,) + s.shape[-2:]),
+            rows, impl=impl)
+        return flat.reshape(d.shape)
+
     new_caches = []
     for dst_run, src_run in zip(dst_caches, src_caches):
         dsc, ssc = dst_run["self"], src_run["self"]
-        run_len, B = dsc["pos"].shape[0], dsc["pos"].shape[1]
-        R = ssc["pos"].shape[1]
         new_sc = {"pos": dsc["pos"].at[:, slots].set(ssc["pos"])}
         for name in ("k", "v", "ckv", "krope"):
             if name not in dsc:
                 continue
             d, s = dsc[name], ssc[name]
-            per = 1                                  # heads folded after batch
-            for sz in d.shape[2:-2]:
-                per *= sz
-            r0 = jnp.arange(run_len, dtype=jnp.int32)[:, None, None]
-            h = jnp.arange(per, dtype=jnp.int32)[None, None, :]
-            rows = ((r0 * B + slots[None, :, None]) * per + h).reshape(-1)
-            flat = cache_slot_write(
-                d.reshape((run_len * B * per,) + d.shape[-2:]),
-                s.reshape((run_len * R * per,) + s.shape[-2:]),
-                rows, impl=impl)
-            new_sc[name] = flat.reshape(d.shape)
+            h_ax = None
+            if mesh is not None and d.ndim == 5:
+                from repro.distributed.shard_wrap import model_axis
+                h_ax = model_axis(mesh, d.shape[2])
+            if h_ax is not None:
+                from repro.distributed.shard_wrap import shard_map_call
+                from jax.sharding import PartitionSpec as P
+                hspec = P(None, None, h_ax, None, None)
+                new_sc[name] = shard_map_call(
+                    mesh, scatter, (hspec, hspec, P()), hspec, d, s, slots)
+            else:
+                new_sc[name] = scatter(d, s, slots)
         new_caches.append({"self": new_sc})
     return new_caches
 
@@ -300,7 +345,8 @@ def prefill(params, cfg: ModelConfig, tokens, positions, caches, *,
 
 def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, *,
                 encoder_out=None, encoder_positions=None,
-                use_pallas: bool = False, kv_length=None, kv_start=None):
+                use_pallas: bool = False, kv_length=None, kv_start=None,
+                mesh=None):
     """One decode step.
 
     token: (B, 1); position: (B, 1); cache_start: slot to write — scalar
@@ -312,6 +358,8 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
     kv_start: optional per-row first live slot; pass only when the context
     is contiguous from that slot (left-padded prompt / compacted layout,
     no vision prefix) so the kernel can also skip the dead left padding.
+    mesh: optional live Mesh — decode attention then runs inside the §8
+    shard_map boundary (batch over data, KV heads over model).
     Returns (logits (B, 1, V), new_caches)."""
     OP_COUNTS["decode_step"] += 1
     x = _embed(params, cfg, token, position)
@@ -320,6 +368,6 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
                                encoder_out=encoder_out,
                                encoder_positions=encoder_positions,
                                use_pallas=use_pallas, kv_length=kv_length,
-                               kv_start=kv_start)
+                               kv_start=kv_start, mesh=mesh)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return _logits(params, cfg, x), caches

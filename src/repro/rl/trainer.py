@@ -28,6 +28,8 @@ from repro.core.lenience import FixedLenience
 from repro.core.spec_rollout import RolloutBatch
 from repro.data.dataset import PromptBatch, PromptDataset
 from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.distributed.mesh import (MeshConfig, shard_batch, shard_opt_state,
+                                    shard_params)
 from repro.engine.generate import GenerateConfig, positions_from_mask, score
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -145,7 +147,7 @@ class Trainer:
     def __init__(self, model_cfg: ModelConfig, rl: RLConfig, spec: SpecConfig,
                  dataset: PromptDataset, key,
                  critic_cfg: Optional[ModelConfig] = None,
-                 lenience_schedule=None):
+                 lenience_schedule=None, mesh=None):
         self.cfg = model_cfg
         self.rl = rl
         self.spec = spec
@@ -154,16 +156,30 @@ class Trainer:
         self.lenience_schedule = lenience_schedule or FixedLenience(
             spec.lenience)
         self.dataset = dataset
+        # mesh (DESIGN.md §8): a MeshConfig (or prebuilt Mesh) shards params
+        # and optimizer moments by the param_spec rules and batch rows over
+        # the data axes; rollout AND the update steps then compile SPMD on
+        # one mesh with no host round-trips between stages.  ``None`` (or a
+        # config that does not fit the host's devices) is the single-device
+        # path, token-identical by the §8 contract.
+        if isinstance(mesh, MeshConfig):
+            mesh = mesh.build()
+        self.mesh = mesh
         k1, k2, k3, self.key = jax.random.split(key, 4)
-        self.params = M.init_lm(k1, model_cfg)
-        self.opt_state = adamw.init(self.params)
+        self.params = shard_params(mesh, model_cfg, M.init_lm(k1, model_cfg))
+        self.opt_state = shard_opt_state(mesh, model_cfg, self.params,
+                                         adamw.init(self.params))
         self.pcfg = rl.policy_cfg()
-        self.ref_params = jax.tree.map(jnp.copy, self.params) \
+        self.ref_params = shard_params(
+            mesh, model_cfg, jax.tree.map(jnp.copy, self.params)) \
             if self.pcfg.kl_coef > 0 else None
         self.critic_cfg = critic_cfg or model_cfg
         if rl.algo == "ppo":
-            self.critic_params = init_critic(k2, self.critic_cfg)
-            self.critic_opt_state = adamw.init(self.critic_params)
+            self.critic_params = shard_params(
+                mesh, self.critic_cfg, init_critic(k2, self.critic_cfg))
+            self.critic_opt_state = shard_opt_state(
+                mesh, self.critic_cfg, self.critic_params,
+                adamw.init(self.critic_params))
         else:
             self.critic_params = None
         self.cache = RolloutCache(history=spec.cache_history,
@@ -185,7 +201,8 @@ class Trainer:
             self.spec = replace(self.spec, lenience=cur_l)
         rb = rollout(self.params, self.cfg, self.gen, self.spec,
                      jnp.asarray(batch.tokens), jnp.asarray(batch.mask),
-                     batch.cache_keys, self.cache, sub, self.step_idx)
+                     batch.cache_keys, self.cache, sub, self.step_idx,
+                     mesh=self.mesh)
         self.gen_steps += 1
         self.total_generated_tokens += rb.metrics["n_generated"]
         return rb
@@ -239,6 +256,12 @@ class Trainer:
         resp_mask = jnp.asarray(rb.response_mask)
         lengths = jnp.asarray(rb.length)
         rew = jnp.asarray(rewards)
+        if self.mesh is not None:
+            # batch rows over the data axes: old-logprob / value / update
+            # steps compile SPMD against the sharded params — rollout and
+            # train run on the same mesh with no host re-layout between
+            full_tokens, full_mask, resp_mask, lengths, rew = shard_batch(
+                self.mesh, (full_tokens, full_mask, resp_mask, lengths, rew))
 
         # ---- old log-probs (veRL stage; ratio == 1 at the first epoch) ----
         t0 = time.perf_counter()

@@ -10,7 +10,10 @@ A slot-based serving layer between the engine and its two consumers:
                admission (verify_and_prefill + cache_gather)
 - rl_adapter:  drains an RL training batch through the scheduler —
                ``rollout(..., spec.backfill='slots')`` straggler backfill
+- mesh_server: one scheduler per data shard over model-only submeshes with
+               shard-local admission and a gathered metrics view (§8)
 """
 from .engine_loop import SlotEngine
+from .mesh_server import MeshSlotServer, make_slot_engine
 from .request import Request, Response
 from .scheduler import SlotScheduler

@@ -46,9 +46,9 @@ from .request import (FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE, Request,
 from .scheduler import SlotScheduler
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "gen"))
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "mesh"))
 def _admit_vanilla(params, cfg: ModelConfig, gen: GenerateConfig, prompts,
-                   mask, keys):
+                   mask, keys, mesh=None):
     """Prefill an admission group; mirrors ``generate`` up to the seed token.
 
     prompts: (R, P) left-padded; keys: (R, 2) per-request decode keys.
@@ -57,6 +57,9 @@ def _admit_vanilla(params, cfg: ModelConfig, gen: GenerateConfig, prompts,
     """
     R, P = prompts.shape
     caches = M.init_cache(cfg, R, P + gen.max_new_tokens)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh, batch=False)
     logits, caches = M.prefill(params, cfg, prompts, positions_from_mask(mask),
                                caches)
     keys, sub = split_key(keys)
@@ -66,11 +69,11 @@ def _admit_vanilla(params, cfg: ModelConfig, gen: GenerateConfig, prompts,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "gen", "verify_impl",
-                                             "compact_impl"))
+                                             "compact_impl", "mesh"))
 def _admit_spec(params, cfg: ModelConfig, gen: GenerateConfig, prompts, mask,
                 draft_tokens, draft_lp, draft_len, draft_eos, verify_keys,
                 decode_keys, log_lenience, *, verify_impl: str,
-                compact_impl: str):
+                compact_impl: str, mesh=None):
     """Speculative-prefix admission: one forward over [prompt | draft].
 
     Identical device program to the fixed-batch one-pass rollout path
@@ -84,12 +87,12 @@ def _admit_spec(params, cfg: ModelConfig, gen: GenerateConfig, prompts, mask,
     ver = verify_and_prefill(params, cfg, prompts, mask, draft_tokens,
                              draft_lp, draft_len, verify_keys, log_lenience,
                              temperature=gen.temperature, top_p=gen.top_p,
-                             impl=verify_impl)
+                             impl=verify_impl, mesh=mesh)
     n = ver["n"]
     p_len = mask.sum(axis=1).astype(jnp.int32)
     caches = M.realign_decode_cache(cfg, ver["caches"],
                                     (N - n).astype(jnp.int32), p_len + n, W,
-                                    impl=compact_impl)
+                                    impl=compact_impl, mesh=mesh)
     full_reuse = (n == draft_len) & draft_eos
     keys, sub = split_key(decode_keys)
     tok0, lp0 = sample(sub, ver["seed_logits"], gen.temperature, gen.top_p)
@@ -98,16 +101,17 @@ def _admit_spec(params, cfg: ModelConfig, gen: GenerateConfig, prompts, mask,
             "next_pos": p_len + n, "keys": keys}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "impl"))
+@functools.partial(jax.jit, static_argnames=("cfg", "impl", "mesh"))
 def _write_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
-                 impl: str = "auto"):
-    return M.write_cache_slots(cfg, dst_caches, src_caches, slots, impl=impl)
+                 impl: str = "auto", mesh=None):
+    return M.write_cache_slots(cfg, dst_caches, src_caches, slots, impl=impl,
+                               mesh=mesh)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "gen", "steps"))
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "steps", "mesh"))
 def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
                   cur_tok, cur_lp, done, count, budget, next_pos, write_idx,
-                  keys, *, steps: int):
+                  keys, *, steps: int, mesh=None):
     """``steps`` decode steps over all slots; per-row write offsets/streams.
 
     Term-for-term the body of ``engine/generate._decode_loop`` (store →
@@ -131,7 +135,7 @@ def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
             params, cfg, tok_store[:, None],
             jnp.where(done[:, None], -1, next_pos[:, None]),
             caches, write_idx, kv_length=write_idx + 1,
-            kv_start=write_idx - next_pos)
+            kv_start=write_idx - next_pos, mesh=mesh)
         keys, sub = split_key(keys)
         nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
         carry = (caches, nxt, nlp, done_next, count, next_pos + 1,
@@ -154,7 +158,7 @@ class SlotEngine:
                  num_slots: int, prompt_width: int, spec_prefix: bool = False,
                  log_lenience: float = 0.0, chunk_steps: int = 8,
                  verify_impl: str = "auto", compact_impl: str = "auto",
-                 slot_write_impl: str = "auto"):
+                 slot_write_impl: str = "auto", mesh=None):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
             "extras — use fixed-batch generate otherwise"
@@ -166,6 +170,12 @@ class SlotEngine:
         self.chunk_steps = max(1, int(chunk_steps))
         self.verify_impl, self.compact_impl = verify_impl, compact_impl
         self.slot_write_impl = slot_write_impl
+        # One engine serves ONE data shard: its decode batch stays whole and
+        # only the KV head axis (and the params the caller pre-sharded)
+        # spread over the mesh's ``model`` axis.  Data parallelism lives one
+        # level up — MeshSlotServer runs one engine per data-shard submesh
+        # (DESIGN.md §8).
+        self.mesh = mesh
         # context ends at write_base; decode token t lands at write_base + t
         # (vanilla: prefill layout [0, P); spec: compacted layout [0, P+N))
         self.write_base = self.P + (self.N if spec_prefix else 0)
@@ -173,6 +183,9 @@ class SlotEngine:
 
         B = int(num_slots)
         self.caches = M.init_cache(cfg, B, self.cache_len)
+        if mesh is not None:
+            from repro.distributed.mesh import shard_caches
+            self.caches = shard_caches(cfg, self.caches, mesh, batch=False)
         self.scheduler = SlotScheduler(B)
         self.cur_tok = np.zeros(B, np.int32)
         self.cur_lp = np.zeros(B, np.float32)
@@ -295,11 +308,11 @@ class SlotEngine:
                     jnp.asarray(self._pad_group(list(de))),
                     jnp.asarray(vkeys), jnp.asarray(keys),
                     self.log_lenience, verify_impl=self.verify_impl,
-                    compact_impl=self.compact_impl)
+                    compact_impl=self.compact_impl, mesh=self.mesh)
             else:
                 out = _admit_vanilla(self.params, self.cfg, self.gen,
                                      jnp.asarray(prompts), jnp.asarray(masks),
-                                     jnp.asarray(keys))
+                                     jnp.asarray(keys), mesh=self.mesh)
             jax.block_until_ready(out["tok0"])
             t1 = time.perf_counter()
             self.time_admit += t1 - t0
@@ -308,7 +321,8 @@ class SlotEngine:
                                 np.int32)
             self.caches = _write_slots(self.cfg, self.caches, out["caches"],
                                        jnp.asarray(slot_ids),
-                                       impl=self.slot_write_impl)
+                                       impl=self.slot_write_impl,
+                                       mesh=self.mesh)
             jax.block_until_ready(jax.tree.leaves(self.caches)[0])
             self.time_slot_write += time.perf_counter() - t1
 
@@ -356,7 +370,8 @@ class SlotEngine:
             jnp.asarray(self.cur_tok), jnp.asarray(self.cur_lp),
             jnp.asarray(self.done), jnp.asarray(self.count),
             jnp.asarray(self.budget), jnp.asarray(self.next_pos),
-            jnp.asarray(self.write_idx), jnp.asarray(self.keys), steps=steps)
+            jnp.asarray(self.write_idx), jnp.asarray(self.keys), steps=steps,
+            mesh=self.mesh)
         self.caches = out["caches"]
         toks = np.asarray(out["tokens"])            # (B, steps)
         lps = np.asarray(out["logprobs"])

@@ -1,0 +1,181 @@
+"""Mesh-parallel slot serving: one scheduler per data shard (DESIGN.md §8).
+
+The slot engine's admission scatter indexes *global* decode-batch rows, so
+sharding one engine's batch over the ``data`` axis would turn every
+admission into a cross-shard write.  Instead the data axis is handled one
+level up: ``MeshSlotServer`` splits the (data, model) mesh into one
+model-only submesh per data shard (disjoint devices), runs a full
+``SlotEngine`` — scheduler, free-list, persistent caches — on each, and
+round-robins incoming requests across them.  Admission is therefore
+**shard-local**: a freed slot on shard i is refilled from shard i's queue
+with no cross-shard traffic, and each shard's params/caches spread only
+over its own ``model`` axis.
+
+Because every request owns its PRNG streams (serving/request.py), output is
+independent of which shard a request lands on — the server is
+token-identical to a single engine over the same requests, which is the
+§6 equivalence contract lifted to the mesh (asserted in
+tests/distributed/test_mesh_rollout.py).
+
+``stats()`` returns the gathered metrics view: token/time counters summed,
+occupancy and queue/serve means weighted by per-shard step counts, plus a
+``per_shard`` breakdown.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.distributed.mesh import data_submeshes, shard_params
+from repro.engine.generate import GenerateConfig
+from repro.models.config import ModelConfig
+
+from .engine_loop import SlotEngine
+from .request import Request, Response
+
+
+def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
+                     mesh=None, num_slots: int, prompt_width: int,
+                     spec_prefix: bool = False, log_lenience: float = 0.0,
+                     chunk_steps: int = 8, verify_impl: str = "auto",
+                     compact_impl: str = "auto",
+                     slot_write_impl: str = "auto"):
+    """One factory for both mesh regimes (the single dispatch point shared
+    by serving/rl_adapter.py and launch/serve.py).
+
+    A mesh with a data axis yields a ``MeshSlotServer`` — ``num_slots`` is
+    rounded down to a multiple of the shard count (floored at one slot per
+    shard) and params are placed per submesh inside.  Otherwise one
+    ``SlotEngine`` (head-sharding its caches when a model-only mesh is
+    given); that path expects params already placed by the caller.
+    """
+    from repro.distributed.mesh import data_size
+    kw = dict(num_slots=num_slots, prompt_width=prompt_width,
+              spec_prefix=spec_prefix, log_lenience=log_lenience,
+              chunk_steps=chunk_steps, verify_impl=verify_impl,
+              compact_impl=compact_impl, slot_write_impl=slot_write_impl)
+    if mesh is not None and data_size(mesh) > 1:
+        D = data_size(mesh)
+        kw["num_slots"] = max(D, num_slots - num_slots % D)
+        return MeshSlotServer(params, cfg, gen, mesh=mesh, **kw)
+    return SlotEngine(params, cfg, gen, mesh=mesh, **kw)
+
+
+class MeshSlotServer:
+    """Per-data-shard slot engines behind one submit/run/stats frontend.
+
+    params are placed per submesh (replicated over data, ``param_spec``-
+    sharded over model); ``num_slots`` is the TOTAL slot count, split evenly
+    across shards (it must divide).  The frontend mirrors ``SlotEngine``:
+    ``submit`` / ``run(arrivals=...)`` / ``responses`` / ``stats``.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig, *,
+                 mesh, num_slots: int, prompt_width: int,
+                 spec_prefix: bool = False, log_lenience: float = 0.0,
+                 chunk_steps: int = 8, verify_impl: str = "auto",
+                 compact_impl: str = "auto", slot_write_impl: str = "auto"):
+        self.submeshes = data_submeshes(mesh)
+        D = len(self.submeshes)
+        assert num_slots % D == 0 and num_slots >= D, \
+            (f"num_slots={num_slots} must split evenly over {D} data shards")
+        self.cfg, self.gen = cfg, gen
+        self.engines: List[SlotEngine] = [
+            SlotEngine(shard_params(sm, cfg, params), cfg, gen,
+                       num_slots=num_slots // D, prompt_width=prompt_width,
+                       spec_prefix=spec_prefix, log_lenience=log_lenience,
+                       chunk_steps=chunk_steps, verify_impl=verify_impl,
+                       compact_impl=compact_impl,
+                       slot_write_impl=slot_write_impl, mesh=sm)
+            for sm in self.submeshes]
+        self._rr = 0                       # round-robin submission cursor
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.engines)
+
+    @property
+    def responses(self) -> Dict[int, Response]:
+        out: Dict[int, Response] = {}
+        for e in self.engines:
+            out.update(e.responses)
+        return out
+
+    # ------------------------------------------------------------- frontend
+
+    def submit(self, req: Request) -> None:
+        """Shard-local admission: the request joins one shard's FIFO queue."""
+        self.engines[self._rr].submit(req)
+        self._rr = (self._rr + 1) % len(self.engines)
+
+    def run(self, arrivals: Optional[Iterable[Tuple[int, Request]]] = None,
+            max_chunks: Optional[int] = None) -> Dict[int, Response]:
+        """Drive all shard engines, interleaved chunk by chunk.
+
+        Each engine admits from its own queue and decodes its own chunk;
+        interleaving keeps the per-shard device programs in flight together
+        (disjoint devices — dispatch overlaps until each shard's next
+        host sync).  ``arrivals`` are routed round-robin like ``submit``
+        and become due against their shard's local step counter.
+        """
+        subs: List[List[Tuple[int, Request]]] = [[] for _ in self.engines]
+        if arrivals is not None:
+            for j, (due, req) in enumerate(arrivals):
+                subs[j % len(self.engines)].append((due, req))
+        nxt = [iter(s) for s in subs]
+        due = [next(it, None) for it in nxt]
+        chunks = 0
+        while True:
+            moved = False
+            for i, e in enumerate(self.engines):
+                while due[i] is not None and due[i][0] <= e.steps:
+                    e.submit(due[i][1])
+                    due[i] = next(nxt[i], None)
+                e._admit()
+                if not e.scheduler.idle:
+                    e._run_chunk()
+                    e._harvest()
+                    moved = True
+                elif due[i] is not None:
+                    e.steps = max(e.steps, int(due[i][0]))  # idle fast-forward
+                    moved = True
+            chunks += 1
+            if max_chunks is not None and chunks >= max_chunks:
+                break
+            if not moved:
+                break
+        return self.responses
+
+    # -------------------------------------------------------------- metrics
+
+    def stats(self) -> Dict[str, float]:
+        """Gathered view over the shard-local schedulers."""
+        per = [e.stats() for e in self.engines]
+        steps = [p["engine_steps"] for p in per]
+        total_steps = sum(steps) or 1.0
+        completed = [p["completed"] for p in per]
+        total_done = sum(completed) or 1.0
+        out: Dict[str, float] = {
+            "num_shards": float(len(per)),
+            "num_slots": sum(p["num_slots"] for p in per),
+            "submitted": sum(p["submitted"] for p in per),
+            "admitted": sum(p["admitted"] for p in per),
+            "completed": sum(completed),
+            "pending": sum(p["pending"] for p in per),
+            "generated_tokens": sum(p["generated_tokens"] for p in per),
+            "reused_tokens": sum(p["reused_tokens"] for p in per),
+            "admit_time": sum(p["admit_time"] for p in per),
+            "slot_write_time": sum(p["slot_write_time"] for p in per),
+            "decode_time": sum(p["decode_time"] for p in per),
+            "wall_time": max(p["wall_time"] for p in per),
+            "engine_steps": max(steps),
+            "occupancy": sum(p["occupancy"] * s for p, s in zip(per, steps))
+            / total_steps,
+            "mean_queue_wait": sum(p["mean_queue_wait"] * c
+                                   for p, c in zip(per, completed))
+            / total_done,
+            "mean_serve_time": sum(p["mean_serve_time"] * c
+                                   for p, c in zip(per, completed))
+            / total_done,
+        }
+        out["per_shard"] = per
+        return out

@@ -31,7 +31,6 @@ from repro.engine.sampling import split_key
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
-from .engine_loop import SlotEngine
 from .request import Request
 
 
@@ -47,8 +46,15 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
                       spec: SpecConfig, prompts, prompt_mask,
                       prompt_ids: Sequence[int],
                       cache: Optional[RolloutCache], key, step: int,
-                      **model_kwargs) -> RolloutBatch:
-    """Slot-scheduled equivalent of ``rollout`` (same RolloutBatch contract)."""
+                      mesh=None, **model_kwargs) -> RolloutBatch:
+    """Slot-scheduled equivalent of ``rollout`` (same RolloutBatch contract).
+
+    Under a ``mesh`` with a data axis the batch drains through the
+    MeshSlotServer — one scheduler per data shard, shard-local admission
+    (DESIGN.md §8); a model-only mesh runs one engine with head-sharded
+    caches.  Either way the per-request PRNG streams keep the output
+    token-identical to the fixed-batch path.
+    """
     if model_kwargs:
         extras = {k: v for k, v in model_kwargs.items() if v is not None}
         if extras:
@@ -89,11 +95,14 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
         verify_keys = None
     decode_keys = np.asarray(decode_keys)
 
-    engine = SlotEngine(params, cfg, gen, num_slots=num_slots,
-                        prompt_width=P, spec_prefix=have_drafts,
-                        log_lenience=spec.log_lenience,
-                        verify_impl=spec.verify_impl,
-                        compact_impl=spec.compact_impl)
+    from .mesh_server import make_slot_engine
+    engine = make_slot_engine(params, cfg, gen, mesh=mesh,
+                              num_slots=num_slots, prompt_width=P,
+                              spec_prefix=have_drafts,
+                              log_lenience=spec.log_lenience,
+                              verify_impl=spec.verify_impl,
+                              compact_impl=spec.compact_impl)
+    num_slots = int(engine.stats()["num_slots"])    # post-rounding, for metrics
     for i in range(B):
         p_len = int(mask_np[i].sum())
         row = prompts_np[i, P - p_len:] if p_len else prompts_np[i, :0]
@@ -106,7 +115,8 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
             req.draft_logprobs = drafts["draft_logprobs"][i, :L]
             req.draft_eos = bool(drafts["draft_eos"][i])
         engine.submit(req)
-    engine.run()
+    responses = engine.run()        # merged snapshot (MeshSlotServer's
+    # .responses property re-merges per access — don't hit it per row)
     sched = engine.stats()
 
     # ---- reassemble in training-batch order --------------------------------
@@ -117,7 +127,7 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
     prefix_lp = np.zeros((B, N), np.float32)
     full_reuse = np.zeros((B,), bool)
     for i in range(B):
-        r = engine.responses[i]
+        r = responses[i]
         cont_tok[i, :r.length] = r.tokens
         cont_lp[i, :r.length] = r.logprobs
         cont_len[i] = r.length

@@ -1,0 +1,231 @@
+"""Sharded vs single-device token identity (DESIGN.md §8).
+
+Every execution strategy added so far carries the same invariant: tokens
+are a pure function of (params, prompts, keys), independent of HOW the
+computation is laid out.  This file extends it to the mesh: generate,
+one-pass SPEC-RL rollout (resume_from_cache), the slot-server backfill path
+and a full trainer step each run on a 2×2 (data, model) debug mesh and are
+asserted token-identical to the single-device reference in the same
+process — including the uneven-head case where ``param_spec`` replicates
+KV (3 kv heads on a 2-way model axis).
+
+Device-count setup follows the CI-env pattern: the multi-device lane sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before pytest
+starts; under fewer than 4 visible devices everything here skips cleanly
+(in-process XLA_FLAGS mutation would silently no-op once jax initialised).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RolloutCache, SpecConfig, rollout
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.distributed.mesh import (MeshConfig, data_submeshes, shard_batch,
+                                    shard_params)
+from repro.distributed.shard_wrap import sharded_decode_attention
+from repro.engine.generate import GenerateConfig, generate
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI multi-device lane sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _cfg(**kw):
+    base = dict(name="mesh-tiny", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                max_seq_len=256)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _inputs(B, P, seed=1):
+    prompts = jax.random.randint(jax.random.PRNGKey(seed), (B, P), 3,
+                                 VOCAB_SIZE - 1)
+    mask = jnp.ones((B, P), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(seed + 1), i))(jnp.arange(B))
+    return prompts, mask, keys
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return MeshConfig(data=2, model=2).build()
+
+
+def assert_rb_equal(a, b):
+    np.testing.assert_array_equal(a.response, b.response)
+    np.testing.assert_array_equal(a.response_mask, b.response_mask)
+    np.testing.assert_array_equal(a.length, b.length)
+    np.testing.assert_allclose(a.behaviour_logprobs, b.behaviour_logprobs,
+                               atol=1e-4)
+
+
+# ------------------------------------------------------------------ generate
+
+
+@pytest.mark.parametrize("kv_heads", [2, 3])
+def test_generate_identity(mesh22, kv_heads):
+    """Sharded generate == single-device, incl. kv=3 (heads replicated —
+    the uneven-head param_spec case on a 2-way model axis)."""
+    cfg = _cfg(num_kv_heads=kv_heads, num_heads=6 if kv_heads == 3 else 4,
+               head_dim=16)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=10, eos_id=VOCAB_SIZE - 1)
+    prompts, mask, keys = _inputs(8, 9)
+    ref = generate(params, cfg, gen, prompts, mask, keys)
+    sp = shard_params(mesh22, cfg, params)
+    out = generate(sp, cfg, gen, *shard_batch(mesh22, (prompts, mask, keys)),
+                   mesh=mesh22)
+    np.testing.assert_array_equal(np.asarray(ref["tokens"]),
+                                  np.asarray(out["tokens"]))
+    np.testing.assert_array_equal(np.asarray(ref["length"]),
+                                  np.asarray(out["length"]))
+    np.testing.assert_allclose(np.asarray(ref["logprobs"]),
+                               np.asarray(out["logprobs"]), atol=1e-4)
+
+
+def test_generate_identity_scalar_key(mesh22):
+    """The classic (2,) batched PRNG stream is also layout-invariant."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=8, eos_id=VOCAB_SIZE - 1)
+    prompts, mask, _ = _inputs(4, 7)
+    key = jax.random.PRNGKey(3)
+    ref = generate(params, cfg, gen, prompts, mask, key)
+    sp = shard_params(mesh22, cfg, params)
+    out = generate(sp, cfg, gen, *shard_batch(mesh22, (prompts, mask)), key,
+                   mesh=mesh22)
+    np.testing.assert_array_equal(np.asarray(ref["tokens"]),
+                                  np.asarray(out["tokens"]))
+
+
+# ------------------------------------------------- one-pass rollout (resume)
+
+
+def test_spec_rollout_identity(mesh22):
+    """verify_and_prefill → realign (shard_map roll) → resume_from_cache on
+    the mesh matches the single-device one-pass rollout step for step."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=12, eos_id=VOCAB_SIZE - 1)
+    spec = SpecConfig(variant="spec")
+    prompts, mask, keys = _inputs(8, 10)
+    ids = list(range(8))
+    sp = shard_params(mesh22, cfg, params)
+
+    def steps(p, mesh):
+        cache = RolloutCache()
+        out = []
+        for step in range(3):
+            k = jax.vmap(lambda kk: jax.random.fold_in(kk, step))(keys)
+            out.append(rollout(p, cfg, gen, spec, prompts, mask, ids, cache,
+                               k, step, mesh=mesh))
+        return out
+
+    for step, (a, b) in enumerate(zip(steps(params, None), steps(sp, mesh22))):
+        assert a.metrics["one_pass"] == b.metrics["one_pass"]
+        if step > 0:
+            assert b.metrics["one_pass"] == 1.0     # resume path exercised
+            assert b.metrics["n_reused"] > 0
+        assert_rb_equal(a, b)
+
+
+# ------------------------------------------------------- slot-server backfill
+
+
+def test_slot_backfill_identity(mesh22):
+    """rollout(spec.backfill='slots') on the mesh — one scheduler per data
+    shard, spec-prefix admission — matches the fixed-batch rollout."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=12, eos_id=VOCAB_SIZE - 1)
+    prompts, mask, keys = _inputs(8, 10)
+    ids = list(range(8))
+    sp = shard_params(mesh22, cfg, params)
+    fixed = SpecConfig(variant="spec")
+    slots = SpecConfig(variant="spec", backfill="slots")
+
+    cache_a, cache_b = RolloutCache(), RolloutCache()
+    for step in range(3):
+        k = jax.vmap(lambda kk: jax.random.fold_in(kk, step))(keys)
+        a = rollout(params, cfg, gen, fixed, prompts, mask, ids, cache_a,
+                    k, step)
+        b = rollout(sp, cfg, gen, slots, prompts, mask, ids, cache_b,
+                    k, step, mesh=mesh22)
+        assert_rb_equal(a, b)
+    assert b.metrics["backfill_slots"] >= 2          # split over data shards
+
+
+def test_data_submeshes(mesh22):
+    subs = data_submeshes(mesh22)
+    assert len(subs) == 2
+    devs = [d for sm in subs for d in sm.devices.flat]
+    assert len(set(devs)) == 4                       # disjoint devices
+    for sm in subs:
+        assert sm.axis_names == ("model",)
+
+
+# ------------------------------------------------------------ trainer step
+
+
+def test_trainer_step_identity(mesh22):
+    """One GRPO step on the mesh: same rollout tokens, same loss, same
+    updated params (up to cross-device reduction reordering) as the
+    single-device trainer from the same seed."""
+    from repro.data.dataset import PromptDataset
+    from repro.rewards.mathgen import MathTaskConfig, generate_problems
+    from repro.rl.trainer import RLConfig, Trainer
+
+    cfg = _cfg()
+    rl = RLConfig(algo="grpo", group_size=2, prompts_per_batch=4,
+                  max_new_tokens=8)
+    spec = SpecConfig(variant="spec")
+
+    def make(mesh):
+        ds = PromptDataset(generate_problems(
+            MathTaskConfig(num_problems=8, max_operand=9)),
+            max_prompt_len=10)
+        return Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh)
+
+    tr_ref = make(None)
+    tr_mesh = make(MeshConfig(data=2, model=2))
+    assert tr_mesh.mesh is not None
+    m_ref = [tr_ref.train_step() for _ in range(2)]
+    m_mesh = [tr_mesh.train_step() for _ in range(2)]
+    for a, b in zip(m_ref, m_mesh):
+        assert a["n_generated"] == b["n_generated"], (a, b)
+        assert a["n_reused"] == b["n_reused"]
+        np.testing.assert_allclose(a["loss"], b["loss"], atol=1e-4)
+        np.testing.assert_allclose(a["reward_mean"], b["reward_mean"],
+                                   atol=1e-6)
+    for x, y in zip(jax.tree.leaves(tr_ref.params),
+                    jax.tree.leaves(tr_mesh.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-4)
+
+
+# --------------------------------------------------- shard_map kernel bound
+
+
+def test_sharded_decode_attention_matches_op(mesh22):
+    """The §8 shard_map boundary returns exactly what the unwrapped op
+    does, for divisible and non-divisible (fallback) head counts."""
+    from repro.kernels.decode_attention.ops import decode_attention
+    B, S, D = 8, 32, 16
+    for Hq, Hkv in ((4, 2), (6, 3)):
+        q = jax.random.normal(jax.random.PRNGKey(0), (B, Hq, 1, D))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D))
+        q_pos = jnp.full((B,), 9, jnp.int32)
+        k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        k_pos = jnp.where(k_pos <= 9, k_pos, -1)
+        lengths = jnp.full((B,), 10, jnp.int32)
+        starts = jnp.zeros((B,), jnp.int32)
+        ref = decode_attention(q, k, v, q_pos, k_pos, lengths, starts)
+        out = sharded_decode_attention(mesh22, q, k, v, q_pos, k_pos,
+                                       lengths, starts)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)
