@@ -1,17 +1,76 @@
-"""Rollout diagnostics and diversity metrics from the paper.
+"""Rollout diagnostics and diversity metrics from the paper, plus the
+draft-engine telemetry accumulator.
 
 - ROUGE-1 token overlap between consecutive-epoch rollouts (Fig. 2)
 - Distinct-1 (Li et al. 2016) and Self-BLEU (Zhu et al. 2018) (Fig. 6)
 - policy entropy / KL / clip-fraction summaries (Fig. 5) are computed in the
   RL trainer and aggregated here.
+- ``DraftStats`` (DESIGN.md §9): acceptance / draft-length / tokens-per-
+  forward counters shared by the drafted decode loops, the serving slot
+  engine and the trainer step logs.
 """
 from __future__ import annotations
 
 import math
 from collections import Counter
+from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
 import numpy as np
+
+
+@dataclass
+class DraftStats:
+    """Draft-and-verify telemetry (DESIGN.md §9).
+
+    Counters accumulate over decode forwards; the derived ratios are the
+    three numbers that characterise a drafted decode run:
+
+    * ``accept_rate``       — accepted / proposed draft tokens (the
+      rejection-sampling yield; the DraftController's steering signal);
+    * ``mean_draft_len``    — proposed draft tokens per drafting forward
+      (how deep the controller is speculating);
+    * ``tokens_per_forward``— emitted tokens per model forward, the
+      end-to-end speedup lever (1.0 = vanilla decode; up to draft_k + 1).
+    """
+    forwards: int = 0          # decode forwards (drafted or not)
+    draft_forwards: int = 0    # forwards that verified >= 1 draft token
+    proposed: int = 0          # draft tokens verified
+    accepted: int = 0          # draft tokens accepted by rejection sampling
+    emitted: int = 0           # tokens actually kept (stored) by decode
+
+    def add_step(self, forwards: int, proposed: int, accepted: int,
+                 emitted: int, draft_forwards: int = 0) -> None:
+        self.forwards += int(forwards)
+        self.draft_forwards += int(draft_forwards)
+        self.proposed += int(proposed)
+        self.accepted += int(accepted)
+        self.emitted += int(emitted)
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def mean_draft_len(self) -> float:
+        return self.proposed / self.draft_forwards if self.draft_forwards \
+            else 0.0
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.emitted / self.forwards if self.forwards else 0.0
+
+    def as_dict(self, prefix: str = "") -> Dict[str, float]:
+        return {
+            f"{prefix}accept_rate": self.accept_rate,
+            f"{prefix}mean_draft_len": self.mean_draft_len,
+            f"{prefix}tokens_per_forward": self.tokens_per_forward,
+            f"{prefix}draft_proposed": float(self.proposed),
+            f"{prefix}draft_accepted": float(self.accepted),
+            f"{prefix}decode_forwards": float(self.forwards),
+            f"{prefix}decode_emitted": float(self.emitted),
+            f"{prefix}draft_forwards": float(self.draft_forwards),
+        }
 
 
 def rouge1_overlap(a: Sequence[int], b: Sequence[int]) -> float:

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.drafting.controller import DraftConfig
 from repro.engine.generate import (GenerateConfig, generate,
                                    resume_from_cache)
 from repro.engine.sampling import split_key
@@ -68,6 +69,10 @@ class SpecConfig:
     backfill_slots: int = 0             # decode-batch size for 'slots'
                                         # (0 -> half the prompt batch)
     cache_max_prompts: Optional[int] = None  # RolloutCache LRU bound
+    draft: DraftConfig = DraftConfig()  # §9 continuation draft engine:
+                                        # n-gram/sibling drafts + multi-token
+                                        # verify inside the decode loop
+                                        # (kind='off' = vanilla decoding)
 
     @property
     def cache_lag(self) -> int:
@@ -146,6 +151,31 @@ def _vanilla(params, cfg, gen, prompts, prompt_mask, key, model_kwargs,
     return out
 
 
+def use_drafting(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
+    """Whether the §9 drafted decode loop replaces the vanilla while_loop.
+
+    Needs rewindable per-slot KV state (attention-only trunk, no modality
+    extras — model.supports_drafting); recurrent trunks and the random/full
+    ablations (whose continuations ride the legacy two-pass path) decode
+    vanilla."""
+    return spec.draft.enabled and M.supports_drafting(cfg, model_kwargs)
+
+
+def _draft_metrics(stats=None) -> Dict[str, float]:
+    """Rollout-metric view of a DraftStats (zeros when drafting is off).
+
+    ``accept_rate`` is already taken by SPEC-RL prefix verification, so the
+    draft-engine ratios ride a ``draft_`` prefix; ``tokens_per_forward`` is
+    the headline decode-efficiency number (1.0 = vanilla)."""
+    from repro.core.metrics import DraftStats
+    st = stats or DraftStats()
+    return {"draft_accept_rate": st.accept_rate,
+            "draft_mean_len": st.mean_draft_len,
+            "tokens_per_forward": st.tokens_per_forward if st.forwards
+            else 1.0,
+            "decode_forwards": float(st.forwards)}
+
+
 def use_one_pass(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
     """Whether the fused verify→compact→resume path applies.
 
@@ -204,10 +234,20 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     drafts = cache.batch_get(prompt_ids, N, spec.cache_lag) if use_cache else None
     have_drafts = use_cache and int(drafts["draft_len"].sum()) > 0
 
+    drafting = use_drafting(cfg, spec, model_kwargs)
+
     if not have_drafts:
         key, sub = split_key(key)
-        out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub,
-                       model_kwargs, mesh=mesh)
+        if drafting:
+            from repro.drafting import drafted_generate
+            corpus = cache.batch_siblings(prompt_ids, spec.cache_lag) \
+                if use_cache else None
+            out = drafted_generate(params, cfg, gen, prompts, prompt_mask,
+                                   sub, spec.draft, corpus=corpus,
+                                   verify_impl=spec.verify_impl, mesh=mesh)
+        else:
+            out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub,
+                           model_kwargs, mesh=mesh)
         resp, lp, length = out["tokens"], out["logprobs"], out["length"]
         resp_mask = jnp.arange(N)[None, :] < length[:, None]
         rollout_time = time.perf_counter() - t0
@@ -217,7 +257,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             accept_rate=0.0, draft_coverage=0.0,
             verify_time=0.0, rollout_time=rollout_time,
             assembly_time=0.0, compact_time=0.0, decode_time=rollout_time,
-            one_pass=0.0, prefill_passes=1.0)
+            one_pass=0.0, prefill_passes=1.0,
+            **_draft_metrics(out.get("stats")))
         _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
         return RolloutBatch(
             prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
@@ -265,9 +306,30 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         full_reuse = (n == draft_len) & draft_eos
         td0 = time.perf_counter()
         key, sub = split_key(key)
-        cont = resume_from_cache(params, cfg, gen, caches, ver["seed_logits"],
-                                 p_len + n, W, sub, initial_done=full_reuse,
-                                 row_budget=N - n, mesh=mesh, **model_kwargs)
+        if drafting:
+            # §9: draft the continuation too — the n-gram index is seeded
+            # with prompt ⊕ accepted prefix and the sibling corpus, so the
+            # decode loop keeps speculating past the verified prefix
+            from repro.drafting import drafted_resume
+            n_np = np.asarray(n)
+            mask_np = np.asarray(prompt_mask)
+            prompts_np = np.asarray(prompts)
+            dt_np = np.asarray(draft_tokens)
+            contexts = [np.concatenate([prompts_np[b][mask_np[b]],
+                                        dt_np[b, :int(n_np[b])]])
+                        for b in range(B)]
+            corpus = cache.batch_siblings(prompt_ids, spec.cache_lag)
+            cont = drafted_resume(params, cfg, gen, caches,
+                                  ver["seed_logits"], p_len + n, W, sub,
+                                  spec.draft, contexts, corpus=corpus,
+                                  initial_done=full_reuse, row_budget=N - n,
+                                  verify_impl=spec.verify_impl, mesh=mesh)
+        else:
+            cont = resume_from_cache(params, cfg, gen, caches,
+                                     ver["seed_logits"], p_len + n, W, sub,
+                                     initial_done=full_reuse,
+                                     row_budget=N - n, mesh=mesh,
+                                     **model_kwargs)
         jax.block_until_ready(cont["tokens"])
         decode_time = time.perf_counter() - td0
         rollout_time = compact_time + decode_time
@@ -346,7 +408,9 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         verify_time=verify_time, rollout_time=rollout_time,
         assembly_time=assembly_time, compact_time=compact_time,
         decode_time=decode_time, one_pass=float(one_pass),
-        prefill_passes=prefill_passes)
+        prefill_passes=prefill_passes,
+        **_draft_metrics(cont.get("stats") if isinstance(cont, dict)
+                         else None))
     return RolloutBatch(
         prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
         response=np.asarray(resp), response_mask=np.asarray(resp_mask),

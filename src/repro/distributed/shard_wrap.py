@@ -78,7 +78,8 @@ def sharded_decode_attention(mesh: Optional[Mesh], q, k, v, q_pos, k_pos,
                              impl: str = "auto", block_k: int = 128):
     """Mesh-partitioned flash-decode attention.
 
-    q: (B, Hq, 1, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv); q_pos: (B,);
+    q: (B, Hq, T, Dk) (T == 1 classic decode, k+1 draft-verify block);
+    k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv); q_pos: (B,) or (B, T);
     k_pos: (B, S); lengths/starts: (B,) int32 (must be materialised — no
     None — so the shard_map arg tree is static).  Batch shards over the
     data axes, heads over ``model`` when both Hq and Hkv divide it.
@@ -99,9 +100,10 @@ def sharded_decode_attention(mesh: Optional[Mesh], q, k, v, q_pos, k_pos,
 
     head4 = P(d_ax, h_ax, None, None)
     rows = P(d_ax)
+    qp_spec = rows if q_pos.ndim == 1 else P(d_ax, None)
     return shard_map_call(
         mesh, inner,
-        (head4, head4, head4, rows, P(d_ax, None), rows, rows),
+        (head4, head4, head4, qp_spec, P(d_ax, None), rows, rows),
         head4, q, k, v, q_pos, k_pos, lengths, starts)
 
 

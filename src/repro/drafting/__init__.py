@@ -1,0 +1,38 @@
+"""Draft engine: speculative continuation beyond the SPEC-RL prefix.
+
+SPEC-RL only speculates on the *reused prefix* — once the verified prefix
+diverges, every continuation token costs a full decode step.  This package
+extends draft-and-verify into the continuation itself (DESIGN.md §9):
+
+* ``NGramDraftSource``  — k-token proposals from a suffix hash map over
+  the row's own prompt ⊕ generated stream plus its GRPO sibling
+  trajectories (``RolloutCache.siblings``);
+* ``DraftController``   — per-row adaptive draft length from a running
+  acceptance-rate EMA (the ``core/lenience.py`` controller pattern);
+* ``draft_step``        — the jit'd (k+1)-token verify forward with
+  rejection-sampling acceptance (``kernels/spec_verify``) over the
+  multi-token flash-decode path (``kernels/decode_attention``);
+* ``drafted_generate`` / ``drafted_resume`` — host-driven decode loops
+  mirroring ``engine/generate.generate`` / ``resume_from_cache``.
+
+Greedy decoding is bit-exact against the vanilla loops; temperature /
+top-p sampling is distribution-correct per token (tested both ways).
+"""
+from .controller import DraftConfig, DraftController
+from .ngram import NGramDraftSource
+
+__all__ = ["DraftConfig", "DraftController", "NGramDraftSource",
+           "draft_step", "drafted_generate", "drafted_resume"]
+
+_LAZY = {"draft_step": "step", "drafted_generate": "engine",
+         "drafted_resume": "engine"}
+
+
+def __getattr__(name):
+    # engine/step pull in the model stack; loading them lazily lets
+    # core.spec_rollout import DraftConfig without an import cycle
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(f".{_LAZY[name]}", __name__),
+                       name)
+    raise AttributeError(name)

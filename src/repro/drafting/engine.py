@@ -1,0 +1,234 @@
+"""Host-driven drafted decode loops: the §9 counterparts of
+``engine/generate.generate`` and ``resume_from_cache``.
+
+The vanilla decode loop is one jit'd ``lax.while_loop``; drafting needs the
+host in the loop (the n-gram proposal is a hash-map lookup), so these
+functions run the same stages as their vanilla twins but step through the
+jit'd ``drafting.step.draft_step`` macro-step, proposing between steps:
+
+    prefill (jit)  ->  [propose (host) -> draft_step (jit)]*  ->  pack
+
+Contracts mirrored from the vanilla loops:
+
+* same output dict (``tokens``/``logprobs``/``length``/``n_generated``),
+  plus a ``stats`` DraftStats;
+* same greedy token stream: under temperature <= 0 acceptance is exactly
+  "draft == argmax" and correction is argmax, so the emitted stream is the
+  vanilla greedy stream whatever the proposals were (asserted in
+  tests/drafting/);
+* same per-token *marginal* distribution under temperature / top-p — the
+  rejection-sampling guarantee (chi-squared-tested), though the PRNG
+  draws divide differently so sampled streams are not bit-equal;
+* caches end byte-equivalent over the live region (rejected slots are
+  invalidated and overwritten), so SPEC-RL's next-epoch verification sees
+  the same layout either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import DraftStats
+from repro.engine.generate import GenerateConfig, positions_from_mask
+from repro.engine.sampling import sample, split_key
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+from .controller import DraftConfig, DraftController
+from .ngram import NGramDraftSource
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "extra", "mesh"))
+def _prefill_seed(params, cfg: ModelConfig, gen: GenerateConfig, prompt,
+                  prompt_mask, key, *, extra: int, mesh=None):
+    """``generate``'s prefill stage with ``extra`` spare cache slots, plus
+    the seed sample — the same key-split order as ``_decode_loop``."""
+    B, P = prompt.shape
+    positions = positions_from_mask(prompt_mask)
+    caches = M.init_cache(cfg, B, P + gen.max_new_tokens + extra)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh)
+    logits, caches = M.prefill(params, cfg, prompt, positions, caches)
+    key, sub = split_key(key)
+    tok0, lp0 = sample(sub, logits[:, -1], gen.temperature, gen.top_p)
+    next_pos = prompt_mask.sum(axis=1).astype(jnp.int32)
+    return {"caches": caches, "tok0": tok0, "lp0": lp0,
+            "next_pos": next_pos, "key": key}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gen", "extra", "mesh"))
+def _pad_seed(params, cfg: ModelConfig, gen: GenerateConfig, caches,
+              seed_logits, key, *, extra: int, mesh=None):
+    """``resume_from_cache``'s entry: pad the compacted caches with draft
+    headroom and seed-sample with the vanilla key-split order."""
+    caches = M.pad_cache(cfg, caches, extra)
+    if mesh is not None:
+        from repro.distributed.mesh import constrain_caches
+        caches = constrain_caches(cfg, caches, mesh)
+    key, sub = split_key(key)
+    tok0, lp0 = sample(sub, seed_logits, gen.temperature, gen.top_p)
+    return {"caches": caches, "tok0": tok0, "lp0": lp0, "key": key}
+
+
+class _DraftLoop:
+    """Shared host loop: state vectors + propose/step/harvest plumbing."""
+
+    def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig,
+                 draft: DraftConfig, caches, tok0, lp0, next_pos, key,
+                 write_idx, initial_done, row_budget, contexts,
+                 corpus, verify_impl: str, mesh):
+        from .step import draft_step
+        self._step = draft_step
+        B = int(np.asarray(next_pos).shape[0])
+        N = gen.max_new_tokens
+        self.params, self.cfg, self.gen, self.mesh = params, cfg, gen, mesh
+        self.K = draft.draft_k
+        self.verify_impl = verify_impl
+        self.caches = caches
+        self.cur_tok = tok0
+        self.cur_lp = lp0
+        self.key = key
+        self.next_pos = jnp.asarray(next_pos, jnp.int32)
+        self.write_idx = jnp.asarray(write_idx, jnp.int32)
+        budget = jnp.full((B,), N, jnp.int32) if row_budget is None else \
+            jnp.asarray(row_budget, jnp.int32)
+        done0 = jnp.zeros((B,), bool) if initial_done is None else \
+            jnp.asarray(initial_done)
+        self.done = done0 | (budget <= 0)
+        self.budget = budget
+        self.count = jnp.zeros((B,), jnp.int32)
+        self.source = NGramDraftSource(draft, B)
+        self.controller = DraftController(draft, B)
+        for b in range(B):
+            self.source.reset(b, contexts[b],
+                              corpus[b] if corpus is not None else None)
+        self.acc_tok: List[List[np.ndarray]] = [[] for _ in range(B)]
+        self.acc_lp: List[List[np.ndarray]] = [[] for _ in range(B)]
+        self.stats = DraftStats()
+        self.B, self.N = B, N
+
+    def run(self) -> Dict[str, jnp.ndarray]:
+        while True:
+            done_np = np.asarray(self.done)
+            if done_np.all():
+                break
+            cur_np = np.asarray(self.cur_tok)
+            dt = np.zeros((self.B, self.K), np.int32)
+            dl = np.zeros((self.B,), np.int32)
+            for b in range(self.B):
+                if done_np[b]:
+                    continue
+                k_b = self.controller.draft_len(b)
+                d = self.source.propose(b, k_b, pending=int(cur_np[b]))
+                dt[b, :len(d)] = d
+                dl[b] = len(d)
+            # compile the block at the power-of-two cover of the widest
+            # live proposal — adaptive draft lengths narrow the forward
+            # (drafting/step.py:block_width); acceptance draws stay at
+            # u_width = draft_k so streams are bucket-invariant
+            from .step import block_width
+            K_step = block_width(int(dl.max()), self.K)
+            out = self._step(
+                self.params, self.cfg, self.gen, self.caches, self.cur_tok,
+                self.cur_lp, self.done, self.count, self.budget,
+                self.next_pos, self.write_idx, self.key,
+                jnp.asarray(dt[:, :K_step]), jnp.asarray(dl), K=K_step,
+                u_width=self.K, verify_impl=self.verify_impl,
+                mesh=self.mesh)
+            self.caches = out["caches"]
+            for name in ("cur_tok", "cur_lp", "done", "count", "next_pos",
+                         "write_idx"):
+                setattr(self, name, out[name])
+            self.key = out["keys"]
+            toks = np.asarray(out["tokens"])
+            lps = np.asarray(out["logprobs"])
+            emitted = np.asarray(out["emitted"])
+            accepted = np.asarray(out["accepted"])
+            proposed = np.asarray(out["proposed"])
+            for b in range(self.B):
+                mb = int(emitted[b])
+                if mb:
+                    self.acc_tok[b].append(toks[b, :mb])
+                    self.acc_lp[b].append(lps[b, :mb])
+                    self.source.extend(b, toks[b, :mb])
+                self.controller.update(b, int(proposed[b]), int(accepted[b]))
+            # per-ROW forward counting: one batched forward serves `live`
+            # rows, so tokens_per_forward is a per-row quantity with 1.0 as
+            # the vanilla baseline (a live vanilla row emits exactly one
+            # token per forward it participates in)
+            self.stats.add_step(forwards=int((~done_np).sum()),
+                                proposed=int(proposed.sum()),
+                                accepted=int(accepted.sum()),
+                                emitted=int(emitted.sum()),
+                                draft_forwards=int((dl > 0).sum()))
+        return self._pack()
+
+    def _pack(self) -> Dict[str, jnp.ndarray]:
+        tokens = np.full((self.B, self.N), self.gen.pad_id, np.int32)
+        lps = np.zeros((self.B, self.N), np.float32)
+        length = np.zeros((self.B,), np.int32)
+        for b in range(self.B):
+            row = np.concatenate(self.acc_tok[b]) if self.acc_tok[b] else \
+                np.zeros(0, np.int32)
+            lp_row = np.concatenate(self.acc_lp[b]) if self.acc_lp[b] else \
+                np.zeros(0, np.float32)
+            L = min(len(row), self.N)
+            tokens[b, :L] = row[:L]
+            lps[b, :L] = lp_row[:L]
+            length[b] = L
+        return {"tokens": jnp.asarray(tokens), "logprobs": jnp.asarray(lps),
+                "length": jnp.asarray(length),
+                "n_generated": jnp.asarray(length.sum()),
+                "stats": self.stats}
+
+
+def drafted_generate(params, cfg: ModelConfig, gen: GenerateConfig, prompt,
+                     prompt_mask, key, draft: DraftConfig, *,
+                     corpus: Optional[Sequence[Sequence[np.ndarray]]] = None,
+                     initial_done=None, row_budget=None,
+                     verify_impl: str = "auto", mesh=None
+                     ) -> Dict[str, jnp.ndarray]:
+    """``generate`` with the drafted decode loop (same output contract,
+    plus ``stats``).  ``corpus[b]`` optionally holds row b's sibling /
+    previous-rollout trajectories for the n-gram index."""
+    assert M.supports_drafting(cfg), "drafting needs an attention-only trunk"
+    B, P = prompt.shape
+    pre = _prefill_seed(params, cfg, gen, jnp.asarray(prompt),
+                        jnp.asarray(prompt_mask), key, extra=draft.draft_k,
+                        mesh=mesh)
+    mask_np = np.asarray(prompt_mask)
+    prompt_np = np.asarray(prompt)
+    contexts = [prompt_np[b][mask_np[b]] for b in range(B)]
+    loop = _DraftLoop(params, cfg, gen, draft, pre["caches"], pre["tok0"],
+                      pre["lp0"], pre["next_pos"], pre["key"],
+                      np.full((B,), P, np.int32), initial_done, row_budget,
+                      contexts, corpus, verify_impl, mesh)
+    return loop.run()
+
+
+def drafted_resume(params, cfg: ModelConfig, gen: GenerateConfig, caches,
+                   seed_logits, next_pos, write_offset: int, key,
+                   draft: DraftConfig, contexts: Sequence[Sequence[int]], *,
+                   corpus: Optional[Sequence[Sequence[np.ndarray]]] = None,
+                   initial_done=None, row_budget=None,
+                   verify_impl: str = "auto", mesh=None
+                   ) -> Dict[str, jnp.ndarray]:
+    """``resume_from_cache`` with the drafted decode loop — the one-pass
+    SPEC-RL continuation drafts past the verified prefix (DESIGN.md §9).
+
+    ``contexts[b]`` must hold row b's prompt ⊕ accepted-prefix tokens (the
+    n-gram index needs the token values; the caches only hold K/V)."""
+    assert M.supports_drafting(cfg), "drafting needs an attention-only trunk"
+    B = seed_logits.shape[0]
+    pre = _pad_seed(params, cfg, gen, caches, seed_logits, key,
+                    extra=draft.draft_k, mesh=mesh)
+    loop = _DraftLoop(params, cfg, gen, draft, pre["caches"], pre["tok0"],
+                      pre["lp0"], next_pos, pre["key"],
+                      np.full((B,), write_offset, np.int32), initial_done,
+                      row_budget, contexts, corpus, verify_impl, mesh)
+    return loop.run()

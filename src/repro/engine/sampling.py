@@ -81,6 +81,44 @@ def sample(key, logits, temperature: float = 1.0, top_p: float = 1.0):
     return tok, lp
 
 
+def residual_sample(key, logits, banned_tok, banned_mask,
+                    temperature: float = 1.0, top_p: float = 1.0):
+    """Sample from the adjusted distribution with one token excluded.
+
+    The rejection-sampling correction step of draft-verify decoding
+    (DESIGN.md §9): an n-gram draft is a *point mass* q = δ(g), so the
+    residual distribution norm(max(p - q, 0)) is exactly p with g masked
+    out and renormalised.  Where ``banned_mask`` is False (full-accept
+    bonus token) this is plain ``sample``.
+
+    logits: (B, V); banned_tok: (B,) int32; banned_mask: (B,) bool.
+    Returns (token (B,) int32, logprob (B,) float32) — the log-prob is
+    taken under the UNMASKED adjusted distribution, because the emitted
+    token's marginal probability (accept-path ⊕ reject-path combined) is
+    exactly p(token), which is what behaviour log-probs must record.
+
+    temperature <= 0 is greedy: argmax of the raw logits, identical to
+    ``sample`` (a greedy rejection implies draft != argmax, so the ban
+    never intersects the argmax).
+    """
+    logp = adjust_logits(logits.astype(jnp.float32), temperature, top_p)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, jnp.zeros(tok.shape, jnp.float32)
+    V = logits.shape[-1]
+    ban = banned_mask[:, None] & (jnp.arange(V, dtype=jnp.int32)[None, :]
+                                  == banned_tok[:, None])
+    masked = jax.nn.log_softmax(jnp.where(ban, NEG_INF, logp), axis=-1)
+    if jnp.ndim(key) == 2:
+        tok = jax.vmap(
+            lambda k, lp: jax.random.categorical(k, lp))(key, masked)
+        tok = tok.astype(jnp.int32)
+    else:
+        tok = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    lp = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
+    return tok, lp
+
+
 def logprobs_of(logits, tokens, temperature: float = 1.0, top_p: float = 1.0):
     """Log-prob of given tokens under the adjusted distribution.
 

@@ -1,15 +1,17 @@
-"""Pallas-TPU flash-decode: split-K single-token GQA/MQA attention with
-per-row cache-length early exit (DESIGN.md §7).
+"""Pallas-TPU flash-decode: split-K short-query GQA/MQA attention with
+per-row cache-length early exit (DESIGN.md §7, §9).
 
 The prefill-shaped flash kernel is degenerate at decode time: a T=1 query
 gives ``block_q = 1`` — a single-row MXU tile — and every token pays
 attention over the full allocated cache width S even when most slots are
 empty.  This kernel is specialised for the decode shape instead:
 
-* **Head packing.**  The ``G = Hq / Hkv`` query heads that share one KV head
-  are packed into the MXU *sublane* dimension, so each KV tile is consumed
-  by one ``(G, Dk) × (Dk, block_k)`` matmul rather than G single-row tiles,
-  and each KV block is fetched exactly once per group.
+* **Head×query packing.**  The ``G = Hq / Hkv`` query heads that share one
+  KV head, times the T block queries (T == 1 for classic decode, k + 1 for
+  a draft-verify block), are packed into the MXU *sublane* dimension, so
+  each KV tile is consumed by one ``(G·T, Dk) × (Dk, block_k)`` matmul
+  rather than G·T single-row tiles, and each KV block is fetched exactly
+  once per group.
 
 * **Split-K.**  The grid is ``(B, Hkv, S / block_k)`` — cache slots are
   *split* across programs.  Each program emits an online-softmax partial
@@ -17,10 +19,10 @@ empty.  This kernel is specialised for the decode shape instead:
   slot range; a cheap second-stage jnp combine (`_combine`) merges the
   partials with the standard logsumexp rescaling.  Splits are independent,
   so there is no sequential scratch carry and the (tiny-T) grid parallelism
-  lost to ``block_q = 1`` is recovered across the split axis.
+  lost to small ``block_q`` is recovered across the split axis.
 
 * **Per-row early exit.**  Per-row live bounds arrive via scalar prefetch:
-  ``lengths`` (the write offset + 1 — essential for the serving slot
+  ``lengths`` (write offset + block width — essential for the serving slot
   engine, whose rows sit at different decode depths) and ``starts`` (the
   first live slot — the §3 compacted layout right-aligns context at the
   verify width, so a short accepted prefix has a dead left-pad region in
@@ -28,6 +30,15 @@ empty.  This kernel is specialised for the decode shape instead:
   [starts[b], lengths[b]) redirects its K/V/k_pos block DMAs to block 0
   (already resident — no HBM traffic) and skips the matmul entirely,
   writing the softmax-neutral partial (m=-inf, l=0, acc=0).
+
+* **Query-block contract.**  Query positions arrive as two scalars per
+  row — ``q_pos0[b]`` (position of query 0) and ``q_len[b]`` (number of
+  valid queries) — so query t sits at position ``q_pos0 + t`` when
+  ``t < q_len`` and is fully masked (exact-zero output) otherwise.  This
+  matches the decode layouts that reach the kernel: a done row has
+  ``q_len == 0``; a draft block proposes a valid prefix of its T columns.
+  The ops wrapper derives both from the (B, T) position array; arbitrary
+  non-contiguous query positions belong on the ref/blocked paths.
 """
 from __future__ import annotations
 
@@ -41,9 +52,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, start_ref, qpos_ref, kpos_ref, q_ref, k_ref,
-                   v_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                   window: int, block_k: int):
+def _decode_kernel(len_ref, start_ref, qpos0_ref, qlen_ref, kpos_ref, q_ref,
+                   k_ref, v_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                   window: int, block_k: int, T: int):
     b = pl.program_id(0)
     s_i = pl.program_id(2)
     start = s_i * block_k
@@ -58,50 +69,54 @@ def _decode_kernel(len_ref, start_ref, qpos_ref, kpos_ref, q_ref, k_ref,
 
     @pl.when(live)
     def _live():
-        q = q_ref[0, 0].astype(jnp.float32)              # (G, Dk)
+        q = q_ref[0, 0].astype(jnp.float32)              # (G*T, Dk)
         k = k_ref[0, 0].astype(jnp.float32)              # (bk, Dk)
         v = v_ref[0, 0].astype(jnp.float32)              # (bk, Dv)
+        GT = q.shape[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         kpos = kpos_ref[0].astype(jnp.int32)[None, :]    # (1, bk)
-        qpos = qpos_ref[b]
-        mask = (kpos >= 0) & (kpos <= qpos)
+        # sublane row r = g*T + t: query t of group g, at position qpos0 + t
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (GT, block_k), 0) % T
+        qpos = qpos0_ref[b] + t_idx
+        mask = (kpos >= 0) & (kpos <= qpos) & (t_idx < qlen_ref[b])
         if window > 0:
             mask &= (qpos - kpos) < window
-        j = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        j = start + jax.lax.broadcasted_iota(jnp.int32, (GT, block_k), 1)
         mask &= (j < len_ref[b]) & (j >= start_ref[b])
         s = jnp.where(mask, s, NEG_INF)
-        m = jnp.max(s, axis=1, keepdims=True)            # (G, 1)
+        m = jnp.max(s, axis=1, keepdims=True)            # (G*T, 1)
         p = jnp.where(mask, jnp.exp(s - m), 0.0)
         m_ref[0, 0, 0] = m[:, 0]
         l_ref[0, 0, 0] = jnp.sum(p, axis=1)
         acc_ref[0, 0, 0] = jax.lax.dot(
-            p, v, preferred_element_type=jnp.float32)    # (G, Dv)
+            p, v, preferred_element_type=jnp.float32)    # (G*T, Dv)
 
 
 def _combine(m, l, acc):
     """Second-stage split-K merge over axis 2 (the split axis).
 
-    m, l: (B, Hkv, nsplit, G); acc: (B, Hkv, nsplit, G, Dv).
+    m, l: (B, Hkv, nsplit, G*T); acc: (B, Hkv, nsplit, G*T, Dv).
     Standard logsumexp rescale; fully-masked rows (every split neutral)
     come out exactly zero."""
-    m_glob = jnp.max(m, axis=2)                          # (B, Hkv, G)
+    m_glob = jnp.max(m, axis=2)                          # (B, Hkv, G*T)
     coef = jnp.exp(m - m_glob[:, :, None, :])
-    l_tot = jnp.sum(coef * l, axis=2)                    # (B, Hkv, G)
-    acc_tot = jnp.sum(coef[..., None] * acc, axis=2)     # (B, Hkv, G, Dv)
+    l_tot = jnp.sum(coef * l, axis=2)                    # (B, Hkv, G*T)
+    acc_tot = jnp.sum(coef[..., None] * acc, axis=2)     # (B, Hkv, G*T, Dv)
     return acc_tot / jnp.where(l_tot > 0, l_tot, 1.0)[..., None]
 
 
-def decode_attention_pallas(q, k, v, q_pos, k_pos, lengths, starts, *,
+def decode_attention_pallas(q, k, v, q_pos0, q_len, k_pos, lengths, starts, *,
                             window: int = 0, block_k: int = 128,
                             interpret: bool = False):
-    """q: (B, Hq, 1, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv);
-    q_pos: (B,) int32; k_pos: (B, S) int32; lengths/starts: (B,) int32 live
-    bounds (slot j live iff starts[b] <= j < lengths[b]).
+    """q: (B, Hq, T, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv);
+    q_pos0/q_len: (B,) int32 query-block descriptors (query t lives at
+    position q_pos0 + t iff t < q_len); k_pos: (B, S) int32;
+    lengths/starts: (B,) int32 live bounds (slot j live iff
+    starts[b] <= j < lengths[b]).
 
-    Returns (B, Hq, 1, Dv) float32.  Dk and Dv may differ (MLA)."""
+    Returns (B, Hq, T, Dv) float32.  Dk and Dv may differ (MLA)."""
     B, Hq, T, Dk = q.shape
-    assert T == 1, f"flash-decode is single-token; got T={T}"
     Hkv, S = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
     G = Hq // Hkv
@@ -113,47 +128,49 @@ def decode_attention_pallas(q, k, v, q_pos, k_pos, lengths, starts, *,
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_s)), constant_values=-1)
     Sp = k.shape[2]
     nsplit = Sp // block_k
-    qg = q.reshape(B, Hkv, G, Dk)
+    # pack (G, T) into the sublane dim: row g*T + t
+    qg = q.reshape(B, Hkv, G, T, Dk).reshape(B, Hkv, G * T, Dk)
     scale = 1.0 / (Dk ** 0.5)
 
     def _live_split(s, len_ref, start_ref, b):
         return (s * block_k < len_ref[b]) & ((s + 1) * block_k > start_ref[b])
 
-    def _kv_block(b, h, s, len_ref, start_ref, qpos_ref):
+    def _kv_block(b, h, s, len_ref, start_ref, *_):
         # early exit: dead splits re-fetch block 0 instead of streaming the
         # dead left-pad / empty tail (same-block DMA is elided)
         return (b, h, jnp.where(_live_split(s, len_ref, start_ref, b), s, 0),
                 0)
 
-    def _kpos_block(b, h, s, len_ref, start_ref, qpos_ref):
+    def _kpos_block(b, h, s, len_ref, start_ref, *_):
         return (b, jnp.where(_live_split(s, len_ref, start_ref, b), s, 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(B, Hkv, nsplit),
         in_specs=[
             pl.BlockSpec((1, block_k), _kpos_block),
-            pl.BlockSpec((1, 1, G, Dk), lambda b, h, s, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G * T, Dk), lambda b, h, s, *_: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, Dk), _kv_block),
             pl.BlockSpec((1, 1, block_k, Dv), _kv_block),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, 1, G), lambda b, h, s, *_: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, 1, G), lambda b, h, s, *_: (b, h, s, 0)),
-            pl.BlockSpec((1, 1, 1, G, Dv), lambda b, h, s, *_: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G * T), lambda b, h, s, *_: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, G * T), lambda b, h, s, *_: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, G * T, Dv),
+                         lambda b, h, s, *_: (b, h, s, 0, 0)),
         ],
     )
     m, l, acc = pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, window=window,
-                          block_k=block_k),
+                          block_k=block_k, T=T),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, Hkv, nsplit, G), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, nsplit, G), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, nsplit, G, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nsplit, G * T), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nsplit, G * T), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nsplit, G * T, Dv), jnp.float32),
         ],
         interpret=interpret,
     )(lengths.astype(jnp.int32), starts.astype(jnp.int32),
-      q_pos.astype(jnp.int32), k_pos, qg, k, v)
-    out = _combine(m, l, acc)                            # (B, Hkv, G, Dv)
-    return out.reshape(B, Hq, 1, Dv)
+      q_pos0.astype(jnp.int32), q_len.astype(jnp.int32), k_pos, qg, k, v)
+    out = _combine(m, l, acc)                            # (B, Hkv, G*T, Dv)
+    return out.reshape(B, Hkv, G, T, Dv).reshape(B, Hq, T, Dv)

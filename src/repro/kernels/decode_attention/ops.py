@@ -1,12 +1,21 @@
 """Jit'd public wrapper for flash-decode attention.
 
-``decode_attention`` is the T==1 decode dual of
+``decode_attention`` is the short-query decode dual of
 ``kernels/flash_attention``: every decode step in ``generate``,
 ``resume_from_cache`` and the serving slot engine routes here (see
-models/attention.py).  ``lengths`` carries each row's live cache extent
-(write offset + 1) and ``starts`` its first live slot (dead left-padding
-in front of a compacted / left-padded context), letting the blocked path
-iterate only live chunks and the Pallas kernel early-exit per row.
+models/attention.py), as does the k+1-token draft-verify block of the
+drafting engine (DESIGN.md §9).  ``lengths`` carries each row's live cache
+extent (write offset + block width) and ``starts`` its first live slot
+(dead left-padding in front of a compacted / left-padded context), letting
+the blocked path iterate only live chunks and the Pallas kernel early-exit
+per row.
+
+``q_pos`` may be (B,) / (B, 1) (classic single-token decode) or (B, T) for
+a T-token block.  The Pallas path additionally requires the block layout
+every decode caller produces: per row, a valid prefix of queries at
+consecutive positions (q_pos[b, t] == q_pos[b, 0] + t for t < q_len, -1
+after) — the wrapper derives the (q_pos0, q_len) scalars the kernel
+prefetches.  The ref/blocked oracles accept arbitrary per-query positions.
 """
 from __future__ import annotations
 
@@ -27,12 +36,13 @@ NAIVE_MAX_S = 128
 def decode_attention(q, k, v, q_pos, k_pos, lengths=None, starts=None, *,
                      window: int = 0, impl: str = "auto",
                      block_k: int = 128):
-    """Single-token decode attention over a dense cache.
+    """Short-query decode attention over a dense cache.
 
-    q: (B, Hq, 1, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv) (Dk may differ
-    from Dv — MLA); q_pos: (B,) or (B, 1); k_pos: (B, S); lengths/starts:
+    q: (B, Hq, T, Dk) with small T (1 = classic decode, k+1 = draft-verify
+    block); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv) (Dk may differ from Dv —
+    MLA); q_pos: (B,), (B, 1) or (B, T); k_pos: (B, S); lengths/starts:
     optional (B,) int32 live bounds — slot j of row b is attended only when
-    starts[b] <= j < lengths[b] (None = [0, S)).  Returns (B, Hq, 1, Dv)
+    starts[b] <= j < lengths[b] (None = [0, S)).  Returns (B, Hq, T, Dv)
     float32.
 
     impl: 'auto' (pallas on TPU; elsewhere naive for S <= NAIVE_MAX_S,
@@ -53,7 +63,7 @@ def decode_attention(q, k, v, q_pos, k_pos, lengths=None, starts=None, *,
         return decode_attention_blocked(q, k, v, q_pos, k_pos, lengths,
                                         starts, window=window,
                                         block_k=block_k)
-    B = q.shape[0]
+    B, _, T = q.shape[:3]
     S = k.shape[2]
     if lengths is None:
         lengths = jnp.full((B,), S, jnp.int32)
@@ -61,7 +71,16 @@ def decode_attention(q, k, v, q_pos, k_pos, lengths=None, starts=None, *,
     if starts is None:
         starts = jnp.zeros((B,), jnp.int32)
     starts = jnp.clip(starts.reshape(B).astype(jnp.int32), 0, S)
-    return decode_attention_pallas(q, k, v, q_pos.reshape(B), k_pos,
+    q_pos = q_pos.reshape(B, -1).astype(jnp.int32)
+    if q_pos.shape != (B, T):
+        # same rejection as ref._norm_inputs: a (B,)/(B, 1) position for a
+        # T > 1 block would silently mean different things per impl
+        raise ValueError(f"q_pos {q_pos.shape} must be (B, T)={B, T} for "
+                         f"T > 1 query blocks")
+    # valid-prefix query-block contract (see module docstring)
+    q_pos0 = q_pos[:, 0]
+    q_len = jnp.sum((q_pos >= 0).astype(jnp.int32), axis=1)
+    return decode_attention_pallas(q, k, v, q_pos0, q_len, k_pos,
                                    lengths, starts, window=window,
                                    block_k=block_k,
                                    interpret=(impl == "interpret"))

@@ -114,6 +114,11 @@ def main(argv=None):
     p.add_argument("--spec-prefix", action="store_true",
                    help="serve every request twice: the first pass's output "
                         "becomes the second pass's speculative prefix")
+    p.add_argument("--draft", type=int, default=0, metavar="K",
+                   help="continuation draft engine (§9): draft up to K "
+                        "tokens per decode forward from n-gram matches over "
+                        "each request's own stream (and, with --spec-prefix, "
+                        "its first-pass trajectory as corpus); 0 = off")
     p.add_argument("--mesh-data", type=int, default=1,
                    help="data shards — one slot scheduler per shard (§8)")
     p.add_argument("--mesh-model", type=int, default=1,
@@ -139,11 +144,17 @@ def main(argv=None):
         # its caches from the same mesh
         params = shard_params(mesh, cfg, params)
 
+    draft = None
+    if args.draft > 0:
+        from repro.drafting import DraftConfig
+        draft = DraftConfig(kind="ngram", draft_k=args.draft)
+
     def make_engine(spec_prefix: bool):
         return make_slot_engine(params, cfg, gen, mesh=mesh,
                                 num_slots=args.slots,
                                 prompt_width=args.prompt_len,
-                                spec_prefix=spec_prefix, log_lenience=0.0)
+                                spec_prefix=spec_prefix, log_lenience=0.0,
+                                draft=draft)
 
     rng = random.Random(args.seed)
     problems = generate_problems(MathTaskConfig(num_problems=n_requests))
@@ -157,10 +168,11 @@ def main(argv=None):
     if engine_kind == "slots" and not M.supports_slot_serving(cfg):
         raise SystemExit(f"--engine slots unsupported for arch {cfg.name} "
                          "(recurrent trunk or modality extras)")
-    if engine_kind == "fixed" and (args.spec_prefix or args.arrival_every):
+    if engine_kind == "fixed" and (args.spec_prefix or args.arrival_every
+                                   or args.draft):
         raise SystemExit(
-            f"--spec-prefix/--arrival-every need the slot engine, but "
-            f"engine resolved to 'fixed' for arch {cfg.name}; drop the "
+            f"--spec-prefix/--arrival-every/--draft need the slot engine, "
+            f"but engine resolved to 'fixed' for arch {cfg.name}; drop the "
             "flags or pick a slot-capable --arch")
 
     t0 = time.time()
@@ -196,6 +208,9 @@ def main(argv=None):
             r.verify_key = vkeys[i]
             r.draft_tokens, r.draft_logprobs = e.tokens, e.logprobs
             r.draft_eos = e.ends_with_eos
+            if draft is not None:
+                # first-pass trajectory doubles as the §9 n-gram corpus
+                r.ngram_corpus = [e.tokens]
         t0 = time.time()
 
     engine = make_engine(spec_prefix=args.spec_prefix)
@@ -219,6 +234,11 @@ def main(argv=None):
           f"admissions={int(s['admitted'])} "
           f"mean_queue_wait={s['mean_queue_wait'] * 1e3:.1f}ms "
           f"mean_serve={s['mean_serve_time'] * 1e3:.1f}ms")
+    if draft is not None:
+        print(f"  draft: tok/fwd={s['tokens_per_forward']:.2f} "
+              f"accept={s['accept_rate']:.2f} "
+              f"mean_len={s['mean_draft_len']:.2f} "
+              f"forwards={int(s['decode_forwards'])}")
     for i in range(min(n_requests, 4)):
         r = resps[i]
         full = np.concatenate([

@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config
 from repro.core import SpecConfig
 from repro.data.dataset import PromptDataset
+from repro.drafting import DraftConfig
 from repro.data.tokenizer import VOCAB_SIZE
 from repro.distributed.mesh import MeshConfig
 from repro.optim.adamw import AdamWConfig
@@ -53,6 +54,13 @@ def main(argv=None):
     p.add_argument("--require-mesh", action="store_true",
                    help="fail instead of falling back when the host has "
                         "fewer devices than the mesh needs")
+    p.add_argument("--draft", type=int, default=0, metavar="K",
+                   help="continuation draft engine (§9): draft up to K "
+                        "tokens per decode forward from n-gram/sibling "
+                        "matches (0 = off)")
+    p.add_argument("--draft-fixed", action="store_true",
+                   help="disable the adaptive per-row draft length "
+                        "controller (always draft K)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -68,8 +76,11 @@ def main(argv=None):
                   prompts_per_batch=args.prompts_per_batch,
                   max_new_tokens=args.max_new_tokens,
                   optim=AdamWConfig(lr=args.lr))
+    draft = DraftConfig(kind="ngram", draft_k=args.draft,
+                        adaptive=not args.draft_fixed) if args.draft > 0 \
+        else DraftConfig()
     spec = SpecConfig(variant=args.variant, lenience=args.lenience,
-                      verify_impl="auto")
+                      verify_impl="auto", draft=draft)
     mesh_cfg = MeshConfig(data=args.mesh_data, model=args.mesh_model,
                           require=args.require_mesh)
     tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg)
@@ -79,9 +90,14 @@ def main(argv=None):
           f"params={sum(x.size for x in jax.tree.leaves(tr.params)) / 1e6:.1f}M")
     for _ in range(args.steps):
         m = tr.train_step()
-        print(f"step {m['step']:3.0f} reward={m['reward_mean']:.3f} "
-              f"gen_tok={m.get('n_generated', 0):6.0f} "
-              f"reused={m.get('n_reused', 0):6.0f}", flush=True)
+        line = (f"step {m['step']:3.0f} reward={m['reward_mean']:.3f} "
+                f"gen_tok={m.get('n_generated', 0):6.0f} "
+                f"reused={m.get('n_reused', 0):6.0f}")
+        if args.draft > 0:
+            line += (f" tok/fwd={m.get('tokens_per_forward', 1.0):.2f} "
+                     f"draft_acc={m.get('draft_accept_rate', 0.0):.2f} "
+                     f"draft_len={m.get('draft_mean_len', 0.0):.2f}")
+        print(line, flush=True)
     return 0
 
 

@@ -125,27 +125,41 @@ def _blocked_attention(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
     return out.reshape(B, Hq, T, Dv)
 
 
+# largest query block the decode-shaped path accepts (k + 1 for draft
+# blocks); bigger cached-T calls take the prefill-style full-S paths
+DECODE_BLOCK_MAX_T = 64
+
+
+def _decode_shaped(cache, kv_x, causal, T: int, kv_length) -> bool:
+    """Whether a cached call routes to the flash-decode op: single-token
+    decode always; a short multi-token block (the §9 draft-verify forward)
+    only when the caller threads its per-row live bounds explicitly."""
+    if cache is None or kv_x is not None or not causal:
+        return False
+    return T == 1 or (kv_length is not None and T <= DECODE_BLOCK_MAX_T)
+
+
 def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
                       window: int, cache_start, kv_length, kv_start,
                       use_pallas: bool, mesh=None) -> jnp.ndarray:
-    """Route a decode-shaped (T == 1, cached) call to the flash-decode op.
+    """Route a decode-shaped (short-T, cached) call to the flash-decode op.
 
     ``kv_length`` is the per-row live cache extent.  When the caller does
-    not thread it explicitly it is derived from ``cache_start``: the decode
-    token was just written at slot ``cache_start``, so every slot at or
-    beyond ``cache_start + 1`` is empty (pos == -1) and can be skipped.
-    ``kv_start`` is the per-row first live slot (the dead left-padding in
-    front of a left-padded / compacted context); only callers that know
-    their layout is contiguous from that slot may thread it — None means
-    start at 0, which is always safe.
+    not thread it explicitly it is derived from ``cache_start``: the T
+    decode tokens were just written at slots [cache_start, cache_start+T),
+    so every slot at or beyond ``cache_start + T`` is empty (pos == -1) and
+    can be skipped.  ``kv_start`` is the per-row first live slot (the dead
+    left-padding in front of a left-padded / compacted context); only
+    callers that know their layout is contiguous from that slot may thread
+    it — None means start at 0, which is always safe.
 
     ``mesh`` routes the call through the shard_map boundary (DESIGN.md §8):
     each device runs the kernel on its local (batch, head) block with a
     static per-shard shape instead of leaving a Pallas black box to GSPMD.
     """
-    B = q.shape[0]
+    B, _, T = q.shape[:3]
     if kv_length is None:
-        kv_length = jnp.asarray(cache_start, jnp.int32) + 1
+        kv_length = jnp.asarray(cache_start, jnp.int32) + T
     lengths = jnp.broadcast_to(
         jnp.asarray(kv_length, jnp.int32).reshape(-1), (B,))
     starts = None if kv_start is None else jnp.broadcast_to(
@@ -153,8 +167,9 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
     if window > 0 and starts is not None:
         # contiguous layout (the kv_start contract): slot j holds position
         # j - start, so keys at or below start + q_pos - window are outside
-        # the sliding window — tighten the start bound to skip their blocks
-        # entirely (they were already window-masked; this changes no output)
+        # the sliding window of the EARLIEST query (t=0) — tighten the start
+        # bound to skip their blocks entirely (they were already
+        # window-masked; this changes no output)
         qp = q_pos[:, 0].astype(jnp.int32)
         starts = jnp.maximum(starts, starts + qp - window + 1)
     impl = cfg.decode_impl
@@ -167,11 +182,11 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
         if starts is None:
             starts = jnp.zeros((B,), jnp.int32)
         return sharded_decode_attention(
-            mesh, q, k.astype(q.dtype), v.astype(q.dtype), q_pos[:, 0],
+            mesh, q, k.astype(q.dtype), v.astype(q.dtype), q_pos,
             kv_pos, lengths, starts, window=window, impl=impl)
     from repro.kernels.decode_attention.ops import decode_attention
     return decode_attention(q, k.astype(q.dtype), v.astype(q.dtype),
-                            q_pos[:, 0], kv_pos, lengths, starts,
+                            q_pos, kv_pos, lengths, starts,
                             window=window, impl=impl)
 
 
@@ -270,9 +285,10 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
         new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
         k, v, kv_pos = k_all, v_all, pos_all
 
-    if cache is not None and kv_x is None and T == 1 and causal:
-        # single-token decode: flash-decode kernel with split-K and per-row
-        # cache-length early exit (or the length-bounded blocked fallback)
+    if _decode_shaped(cache, kv_x, causal, T, kv_length):
+        # short-query decode (single token, or a k+1 draft-verify block):
+        # flash-decode kernel with split-K and per-row cache-length early
+        # exit (or the length-bounded blocked fallback)
         out = _decode_attention(cfg, q, k, v, positions, kv_pos,
                                 window=cfg.sliding_window,
                                 cache_start=cache_start, kv_length=kv_length,
@@ -369,10 +385,11 @@ def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
                                                   (B, H, S, rd))], axis=-1)
     qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    if cache is not None and T == 1 and causal:
+    if _decode_shaped(cache, None, causal, T, kv_length):
         # MLA decode: after latent decompression this is MHA (G = 1) with
         # distinct Dk/Dv head dims — shapes the flash-decode kernel and its
-        # length-bounded blocked fallback both support.
+        # length-bounded blocked fallback both support (T > 1 packs the
+        # draft block into the sublane dim, §9).
         out = _decode_attention(cfg, qfull, k, v, positions, kv_pos,
                                 window=0, cache_start=cache_start,
                                 kv_length=kv_length, kv_start=kv_start,

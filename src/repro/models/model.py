@@ -244,6 +244,46 @@ def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
     return new_caches
 
 
+def supports_drafting(cfg: ModelConfig, model_kwargs=None) -> bool:
+    """Whether the §9 draft-verify decode loop applies.
+
+    A rejected draft token must leave no trace: attention trunks discard it
+    by invalidating its cache slot (pos = -1) and overwriting on the next
+    block, but recurrent blocks (mamba / rwkv) fold every forwarded token
+    into a running state that cannot be rewound.  Modality extras are not
+    threaded through the drafted host loop, so the gate matches slot
+    serving's."""
+    return supports_slot_serving(cfg, model_kwargs)
+
+
+def pad_cache(cfg: ModelConfig, caches, extra: int):
+    """Append ``extra`` empty slots to every cache buffer's sequence axis.
+
+    The drafted decode loop writes a static (k + 1)-token block at the
+    per-row write offset each macro-step, so its last step can touch up to
+    ``draft_k`` slots beyond the final kept token; without headroom the
+    dynamic_update_slice would clamp backwards onto live slots.  New slots
+    carry pos == -1 (empty) and zero K/V — exactly what ``init_cache``
+    would have allocated at the larger width.
+    """
+    if extra <= 0:
+        return caches
+    assert supports_cache_realign(cfg), "pad_cache needs attention trunks"
+    new_caches = []
+    for run in caches:
+        sc = run["self"]
+        new_sc = {"pos": jnp.pad(sc["pos"], ((0, 0), (0, 0), (0, extra)),
+                                 constant_values=-1)}
+        for name in ("k", "v", "ckv", "krope"):
+            if name in sc:
+                buf = sc[name]
+                pad = [(0, 0)] * buf.ndim
+                pad[-2] = (0, extra)
+                new_sc[name] = jnp.pad(buf, pad)
+        new_caches.append({"self": new_sc})
+    return new_caches
+
+
 def supports_slot_serving(cfg: ModelConfig, model_kwargs=None) -> bool:
     """Whether the continuous-batching slot engine (DESIGN.md §6) applies.
 
@@ -347,14 +387,20 @@ def decode_step(params, cfg: ModelConfig, token, position, caches, cache_start, 
                 encoder_out=None, encoder_positions=None,
                 use_pallas: bool = False, kv_length=None, kv_start=None,
                 mesh=None):
-    """One decode step.
+    """One decode step over a short token block.
 
-    token: (B, 1); position: (B, 1); cache_start: slot to write — scalar
-    int32 (lockstep decode) or (B,) int32 per-row slots (serving slot
-    scheduler, where each slot sits at its own decode depth).
+    token: (B, T) with small T — 1 for classic decode, k + 1 for a §9
+    draft-verify block; position: (B, T) (-1 marks done rows / draft
+    padding); cache_start: first slot to write — scalar int32 (lockstep
+    decode) or (B,) int32 per-row slots (serving slot scheduler / drafted
+    loops, where each row sits at its own decode depth).  The T tokens are
+    written at slots [cache_start, cache_start + T) before attending, so
+    within-block causality is ordinary position masking.
     kv_length: optional per-row live cache extent (scalar or (B,) int32);
     attention beyond it is skipped by the flash-decode kernel.  Defaults to
-    ``cache_start + 1`` — the just-written slot is the deepest live one.
+    ``cache_start + T`` — the just-written block ends the live range.
+    Multi-token blocks MUST thread it (the decode dispatch requires it,
+    models/attention._decode_shaped).
     kv_start: optional per-row first live slot; pass only when the context
     is contiguous from that slot (left-padded prompt / compacted layout,
     no vision prefix) so the kernel can also skip the dead left padding.

@@ -182,8 +182,12 @@ class Trainer:
                 adamw.init(self.critic_params))
         else:
             self.critic_params = None
+        # group_size makes the cache sibling-aware: the dataset keys slot g
+        # of prompt p as p*G + g, so the §9 draft engine can index a row's
+        # GRPO siblings as its n-gram corpus (cache.siblings)
         self.cache = RolloutCache(history=spec.cache_history,
-                                  max_prompts=spec.cache_max_prompts)
+                                  max_prompts=spec.cache_max_prompts,
+                                  group_size=rl.group_size)
         self.gen = GenerateConfig(max_new_tokens=rl.max_new_tokens,
                                   temperature=rl.temperature, top_p=rl.top_p,
                                   eos_id=EOS_ID, pad_id=PAD_ID)

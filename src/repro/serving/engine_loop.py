@@ -101,9 +101,14 @@ def _admit_spec(params, cfg: ModelConfig, gen: GenerateConfig, prompts, mask,
             "next_pos": p_len + n, "keys": keys}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "impl", "mesh"))
+@functools.partial(jax.jit, static_argnames=("cfg", "impl", "pad_src",
+                                             "mesh"))
 def _write_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
-                 impl: str = "auto", mesh=None):
+                 impl: str = "auto", pad_src: int = 0, mesh=None):
+    # drafted engines keep draft_k spare slots per row (§9 block headroom);
+    # admission caches are padded to the persistent width before the scatter
+    if pad_src:
+        src_caches = M.pad_cache(cfg, src_caches, pad_src)
     return M.write_cache_slots(cfg, dst_caches, src_caches, slots, impl=impl,
                                mesh=mesh)
 
@@ -158,7 +163,7 @@ class SlotEngine:
                  num_slots: int, prompt_width: int, spec_prefix: bool = False,
                  log_lenience: float = 0.0, chunk_steps: int = 8,
                  verify_impl: str = "auto", compact_impl: str = "auto",
-                 slot_write_impl: str = "auto", mesh=None):
+                 slot_write_impl: str = "auto", draft=None, mesh=None):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
             "extras — use fixed-batch generate otherwise"
@@ -170,6 +175,10 @@ class SlotEngine:
         self.chunk_steps = max(1, int(chunk_steps))
         self.verify_impl, self.compact_impl = verify_impl, compact_impl
         self.slot_write_impl = slot_write_impl
+        # §9 continuation draft engine: a DraftConfig switches _run_chunk
+        # from `chunk_steps` single-token scans to one draft-verify block
+        # per chunk, with per-slot n-gram sources / length controllers
+        self.draft = draft if (draft is not None and draft.enabled) else None
         # One engine serves ONE data shard: its decode batch stays whole and
         # only the KV head axis (and the params the caller pre-sharded)
         # spread over the mesh's ``model`` axis.  Data parallelism lives one
@@ -177,11 +186,19 @@ class SlotEngine:
         # (DESIGN.md §8).
         self.mesh = mesh
         # context ends at write_base; decode token t lands at write_base + t
-        # (vanilla: prefill layout [0, P); spec: compacted layout [0, P+N))
+        # (vanilla: prefill layout [0, P); spec: compacted layout [0, P+N));
+        # drafted engines add draft_k headroom for the block write (§9)
         self.write_base = self.P + (self.N if spec_prefix else 0)
-        self.cache_len = self.write_base + self.N
+        self.cache_len = self.write_base + self.N + \
+            (self.draft.draft_k if self.draft else 0)
 
         B = int(num_slots)
+        if self.draft:
+            from repro.core.metrics import DraftStats
+            from repro.drafting import DraftController, NGramDraftSource
+            self._draft_source = NGramDraftSource(self.draft, B)
+            self._draft_ctrl = DraftController(self.draft, B)
+            self.draft_stats = DraftStats()
         self.caches = M.init_cache(cfg, B, self.cache_len)
         if mesh is not None:
             from repro.distributed.mesh import shard_caches
@@ -247,6 +264,7 @@ class SlotEngine:
         return self.responses
 
     def stats(self) -> Dict[str, float]:
+        from repro.core.metrics import DraftStats
         out = self.scheduler.stats()
         out.update(engine_steps=float(self.steps),
                    generated_tokens=float(sum(r.length
@@ -257,6 +275,10 @@ class SlotEngine:
                    slot_write_time=self.time_slot_write,
                    decode_time=self.time_decode,
                    wall_time=self._now())
+        # §9 draft telemetry (zeros for undrafted engines, so the stats
+        # schema is uniform across engine modes and mesh shards)
+        out.update((self.draft_stats if self.draft else DraftStats())
+                   .as_dict())
         return out
 
     # ------------------------------------------------------------ admission
@@ -322,6 +344,8 @@ class SlotEngine:
             self.caches = _write_slots(self.cfg, self.caches, out["caches"],
                                        jnp.asarray(slot_ids),
                                        impl=self.slot_write_impl,
+                                       pad_src=self.draft.draft_k
+                                       if self.draft else 0,
                                        mesh=self.mesh)
             jax.block_until_ready(jax.tree.leaves(self.caches)[0])
             self.time_slot_write += time.perf_counter() - t1
@@ -354,6 +378,15 @@ class SlotEngine:
                 self._slot_full_reuse[slot] = bool(fr[j])
                 self._slot_prefix_lp[slot] = lp_curr[j] if lp_curr is not None \
                     else None
+                if self.draft:
+                    # n-gram index over prompt ⊕ accepted prefix, shadowing
+                    # the request's sibling corpus (DESIGN.md §9)
+                    ctx = list(np.asarray(req.prompt, np.int32))
+                    if self.spec_prefix and req.has_draft:
+                        ctx.extend(np.asarray(req.draft_tokens[:nj],
+                                              np.int32))
+                    self._draft_source.reset(slot, ctx, req.ngram_corpus)
+                    self._draft_ctrl.reset(slot)
                 self.scheduler.activate(slot)
             # full-reuse / zero-budget admissions finish without decoding;
             # harvesting them here lets the loop keep back-filling
@@ -362,6 +395,8 @@ class SlotEngine:
     # ---------------------------------------------------------- decode loop
 
     def _run_chunk(self, steps: Optional[int] = None) -> None:
+        if self.draft:
+            return self._run_draft_chunk()
         steps = steps or self.chunk_steps
         busy = sum(1 for s in self.scheduler.active if not self.done[s])
         t0 = time.perf_counter()
@@ -386,6 +421,68 @@ class SlotEngine:
             self._acc_lp[slot].append(lps[slot])
         self.steps += steps
         self.scheduler.tick(busy, steps)
+
+    def _run_draft_chunk(self) -> None:
+        """One §9 draft-verify macro-step over all slots.
+
+        The device program is the SAME jit'd ``drafting.step.draft_step``
+        the fixed-batch drafted loops run — per-row write offsets / budgets
+        / PRNG streams are the machinery this engine already carries, so a
+        slot absorbs a variable-length accept exactly like a fixed-batch
+        row (and greedy output stays token-identical, tested)."""
+        from repro.drafting.step import block_width, draft_step
+        K = self.draft.draft_k
+        B = self.scheduler.num_slots
+        busy = sum(1 for s in self.scheduler.active if not self.done[s])
+        dt = np.zeros((B, K), np.int32)
+        dl = np.zeros((B,), np.int32)
+        for slot in self.scheduler.active:
+            if self.done[slot]:
+                continue
+            k_s = self._draft_ctrl.draft_len(slot)
+            d = self._draft_source.propose(slot, k_s,
+                                           pending=int(self.cur_tok[slot]))
+            dt[slot, :len(d)] = d
+            dl[slot] = len(d)
+        # bucketed block width (drafting/step.py:block_width): the forward
+        # narrows with the controller's draft lengths; u_width = draft_k
+        # keeps per-request streams independent of co-batched buckets
+        K_step = block_width(int(dl.max()), K)
+        t0 = time.perf_counter()
+        out = draft_step(
+            self.params, self.cfg, self.gen, self.caches,
+            jnp.asarray(self.cur_tok), jnp.asarray(self.cur_lp),
+            jnp.asarray(self.done), jnp.asarray(self.count),
+            jnp.asarray(self.budget), jnp.asarray(self.next_pos),
+            jnp.asarray(self.write_idx), jnp.asarray(self.keys),
+            jnp.asarray(dt[:, :K_step]), jnp.asarray(dl), K=K_step,
+            u_width=K, verify_impl=self.verify_impl, mesh=self.mesh)
+        self.caches = out["caches"]
+        toks = np.asarray(out["tokens"])            # (B, K+1)
+        lps = np.asarray(out["logprobs"])
+        emitted = np.asarray(out["emitted"])
+        self.time_decode += time.perf_counter() - t0
+        for name in ("cur_tok", "cur_lp", "done", "count", "next_pos",
+                     "write_idx"):
+            setattr(self, name, np.array(out[name]))
+        self.keys = np.array(out["keys"])
+        accepted = np.asarray(out["accepted"])
+        proposed = np.asarray(out["proposed"])
+        for slot in self.scheduler.active:
+            m = int(emitted[slot])
+            if m:
+                self._acc_tok[slot].append(toks[slot, :m])
+                self._acc_lp[slot].append(lps[slot, :m])
+                self._draft_source.extend(slot, toks[slot, :m])
+            self._draft_ctrl.update(slot, int(proposed[slot]),
+                                    int(accepted[slot]))
+        self.draft_stats.add_step(forwards=busy,
+                                  proposed=int(proposed.sum()),
+                                  accepted=int(accepted.sum()),
+                                  emitted=int(emitted.sum()),
+                                  draft_forwards=int((dl > 0).sum()))
+        self.steps += 1                     # one forward = one engine step
+        self.scheduler.tick(busy, 1)
 
     # -------------------------------------------------------------- harvest
 

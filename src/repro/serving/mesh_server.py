@@ -38,7 +38,7 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
                      spec_prefix: bool = False, log_lenience: float = 0.0,
                      chunk_steps: int = 8, verify_impl: str = "auto",
                      compact_impl: str = "auto",
-                     slot_write_impl: str = "auto"):
+                     slot_write_impl: str = "auto", draft=None):
     """One factory for both mesh regimes (the single dispatch point shared
     by serving/rl_adapter.py and launch/serve.py).
 
@@ -52,7 +52,8 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
     kw = dict(num_slots=num_slots, prompt_width=prompt_width,
               spec_prefix=spec_prefix, log_lenience=log_lenience,
               chunk_steps=chunk_steps, verify_impl=verify_impl,
-              compact_impl=compact_impl, slot_write_impl=slot_write_impl)
+              compact_impl=compact_impl, slot_write_impl=slot_write_impl,
+              draft=draft)
     if mesh is not None and data_size(mesh) > 1:
         D = data_size(mesh)
         kw["num_slots"] = max(D, num_slots - num_slots % D)
@@ -73,7 +74,8 @@ class MeshSlotServer:
                  mesh, num_slots: int, prompt_width: int,
                  spec_prefix: bool = False, log_lenience: float = 0.0,
                  chunk_steps: int = 8, verify_impl: str = "auto",
-                 compact_impl: str = "auto", slot_write_impl: str = "auto"):
+                 compact_impl: str = "auto", slot_write_impl: str = "auto",
+                 draft=None):
         self.submeshes = data_submeshes(mesh)
         D = len(self.submeshes)
         assert num_slots % D == 0 and num_slots >= D, \
@@ -85,7 +87,7 @@ class MeshSlotServer:
                        spec_prefix=spec_prefix, log_lenience=log_lenience,
                        chunk_steps=chunk_steps, verify_impl=verify_impl,
                        compact_impl=compact_impl,
-                       slot_write_impl=slot_write_impl, mesh=sm)
+                       slot_write_impl=slot_write_impl, draft=draft, mesh=sm)
             for sm in self.submeshes]
         self._rr = 0                       # round-robin submission cursor
 
@@ -177,5 +179,17 @@ class MeshSlotServer:
                                    for p, c in zip(per, completed))
             / total_done,
         }
+        # §9 draft telemetry: sum the raw counters across shards and
+        # re-derive the ratios from the totals (a per-shard mean would
+        # weight idle shards equally with busy ones)
+        from repro.core.metrics import DraftStats
+        agg = DraftStats()
+        for p in per:
+            agg.add_step(forwards=p["decode_forwards"],
+                         proposed=p["draft_proposed"],
+                         accepted=p["draft_accepted"],
+                         emitted=p["decode_emitted"],
+                         draft_forwards=p["draft_forwards"])
+        out.update(agg.as_dict())
         out["per_shard"] = per
         return out

@@ -50,6 +50,10 @@ class Request:
     draft_tokens: Optional[np.ndarray] = None   # (L,) int32, unpadded
     draft_logprobs: Optional[np.ndarray] = None  # (L,) float32
     draft_eos: bool = False
+    # n-gram corpus for the §9 continuation draft engine: sibling / prior
+    # trajectories indexed alongside the request's own stream (ignored by
+    # engines built without a DraftConfig)
+    ngram_corpus: Optional[list] = None
     arrival_time: float = 0.0
     state: str = QUEUED
     # lifecycle timestamps (engine-relative seconds), filled by the scheduler

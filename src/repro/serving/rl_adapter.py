@@ -95,14 +95,18 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
         verify_keys = None
     decode_keys = np.asarray(decode_keys)
 
+    drafting = spec.draft.enabled and M.supports_drafting(cfg, model_kwargs)
     from .mesh_server import make_slot_engine
     engine = make_slot_engine(params, cfg, gen, mesh=mesh,
                               num_slots=num_slots, prompt_width=P,
                               spec_prefix=have_drafts,
                               log_lenience=spec.log_lenience,
                               verify_impl=spec.verify_impl,
-                              compact_impl=spec.compact_impl)
+                              compact_impl=spec.compact_impl,
+                              draft=spec.draft if drafting else None)
     num_slots = int(engine.stats()["num_slots"])    # post-rounding, for metrics
+    corpora = cache.batch_siblings(prompt_ids, spec.cache_lag) \
+        if (drafting and use_cache) else None
     for i in range(B):
         p_len = int(mask_np[i].sum())
         row = prompts_np[i, P - p_len:] if p_len else prompts_np[i, :0]
@@ -114,6 +118,8 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
             req.draft_tokens = drafts["draft_tokens"][i, :L]
             req.draft_logprobs = drafts["draft_logprobs"][i, :L]
             req.draft_eos = bool(drafts["draft_eos"][i])
+        if corpora is not None:
+            req.ngram_corpus = corpora[i]
         engine.submit(req)
     responses = engine.run()        # merged snapshot (MeshSlotServer's
     # .responses property re-merges per access — don't hit it per row)
@@ -175,7 +181,12 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
         backfill_slots=float(num_slots),
         engine_steps=sched["engine_steps"],
         slot_occupancy=sched["occupancy"],
-        admissions=sched["admitted"])
+        admissions=sched["admitted"],
+        # §9 draft telemetry, gathered from the engine's DraftStats
+        draft_accept_rate=sched["accept_rate"],
+        draft_mean_len=sched["mean_draft_len"],
+        tokens_per_forward=sched["tokens_per_forward"] if drafting else 1.0,
+        decode_forwards=sched["decode_forwards"])
     return RolloutBatch(
         prompt=prompts_np, prompt_mask=mask_np, response=resp,
         response_mask=np.asarray(resp_mask), behaviour_logprobs=lp,

@@ -100,3 +100,72 @@ def test_unbounded_by_default():
         c.put(pid, np.array([1], np.int32), np.zeros(1, np.float32), 1, 0)
     assert len(c) == 100
     assert c.stats()["evictions"] == 0
+
+
+# ---------------------------------------------------- sibling groups (§9)
+
+
+def _put(c, pid, toks, step=0):
+    t = np.asarray(toks, np.int32)
+    c.put(pid, t, np.zeros(len(t), np.float32), len(t), step)
+
+
+def test_siblings_lookup():
+    c = RolloutCache(group_size=3)
+    for pid in (0, 1, 2, 3):                # group 0: {0,1,2}; group 1: {3}
+        _put(c, pid, [10 + pid, 20 + pid])
+    sibs = c.siblings(1)
+    assert sorted(e.tokens[0] for e in sibs) == [10, 12]
+    assert c.siblings(3) == []              # no cached group members
+    assert c.stats()["groups"] == 2
+
+
+def test_siblings_do_not_touch_lru_or_hit_counters():
+    c = RolloutCache(group_size=2, max_prompts=2)
+    _put(c, 0, [1])
+    _put(c, 1, [2])
+    h, m = c.hits, c.misses
+    c.siblings(0)
+    assert (c.hits, c.misses) == (h, m)
+    _put(c, 2, [3])                         # evicts pid 0 (LRU, untouched)
+    assert c.get(0) is None
+
+
+def test_lru_eviction_keeps_groups_consistent():
+    """No dangling group members after eviction: siblings() is always
+    backed by the store, and empty groups disappear."""
+    G = 2
+    c = RolloutCache(group_size=G, max_prompts=3)
+    for pid in range(6):                    # groups {0,1} {2,3} {4,5}
+        _put(c, pid, [pid])
+    assert len(c) == 3 and c.evictions == 3
+    # store now holds {3, 4, 5}; every sibling lookup must be consistent
+    for pid in range(6):
+        for e in c.siblings(pid):
+            assert e is not None
+    assert [e.tokens[0] for e in c.siblings(2)] == [3]
+    assert c.siblings(0) == []              # group {0,1} fully evicted...
+    assert 0 not in c._groups               # ...and unregistered
+    stats = c.stats()
+    assert stats["groups"] == 2             # {2,3} (partial) and {4,5}
+
+
+def test_group_reregistration_moves_membership():
+    c = RolloutCache(group_size=0)          # explicit groups only
+    _put_g = lambda pid, g: c.put(pid, np.asarray([pid], np.int32),
+                                  np.zeros(1, np.float32), 1, 0, group=g)
+    _put_g(0, 7)
+    _put_g(1, 7)
+    assert [e.tokens[0] for e in c.siblings(0)] == [1]
+    _put_g(1, 8)                            # pid 1 changes group
+    assert c.siblings(0) == []
+    assert c.stats()["groups"] == 2
+
+
+def test_batch_siblings_includes_own_rollout():
+    c = RolloutCache(group_size=2)
+    _put(c, 0, [5, 6])
+    _put(c, 1, [7, 8])
+    corpora = c.batch_siblings([0, 2])
+    assert [t[0] for t in corpora[0]] == [5, 7]   # own first, then sibling
+    assert corpora[1] == []

@@ -229,3 +229,77 @@ def test_sharded_decode_attention_matches_op(mesh22):
                                        lengths, starts)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-6)
+
+
+# ------------------------------------------------------------ draft engine
+
+
+def test_drafted_rollout_identity(mesh22):
+    """§9 drafted rollout on the 2×2 mesh == single-device drafted rollout,
+    bit-for-bit at sampling temperature (host-side n-gram proposals are
+    deterministic and per-row PRNG streams are layout-independent), across
+    cold-start generate AND the one-pass resume step."""
+    from repro.drafting import DraftConfig
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=12, eos_id=VOCAB_SIZE - 1)
+    params_b = M.init_lm(jax.random.PRNGKey(42), cfg)
+    spec = SpecConfig(variant="spec",
+                      draft=DraftConfig(kind="ngram", draft_k=4))
+    prompts, mask, keys = _inputs(8, 10)
+    ids = list(range(8))
+    sp = shard_params(mesh22, cfg, params)
+    sp_b = shard_params(mesh22, cfg, params_b)
+
+    def steps(p0, p1, mesh):
+        # step 0: cold start (drafted generate) with policy A; step 1:
+        # policy B verifies A's cached rollouts -> partial rejections ->
+        # drafted one-pass resume over a real continuation
+        cache = RolloutCache(group_size=2)
+        out = []
+        for step, p in enumerate((p0, p1)):
+            k = jax.vmap(lambda kk: jax.random.fold_in(kk, step))(keys)
+            out.append(rollout(p, cfg, gen, spec, prompts, mask, ids, cache,
+                               k, step, mesh=mesh))
+        return out
+
+    ref = steps(params, params_b, None)
+    for step, (a, b) in enumerate(zip(ref, steps(sp, sp_b, mesh22))):
+        assert_rb_equal(a, b)
+        assert b.metrics["decode_forwards"] > 0      # drafting exercised
+        assert a.metrics["decode_forwards"] == b.metrics["decode_forwards"]
+    assert b.metrics["one_pass"] == 1.0              # resume path drafted
+    assert 0 < b.metrics["n_reused"] < b.metrics["n_reused"] + \
+        b.metrics["n_generated"]                     # partial reuse, real cont
+
+    # ...and through the slot-server backfill (one drafted engine per data
+    # shard), still identical to the single-device fixed-batch reference
+    slot_spec = SpecConfig(variant="spec", backfill="slots",
+                           draft=DraftConfig(kind="ngram", draft_k=4))
+    cache = RolloutCache(group_size=2)
+    for step, (p, a) in enumerate(zip((sp, sp_b), ref)):
+        k = jax.vmap(lambda kk: jax.random.fold_in(kk, step))(keys)
+        s = rollout(p, cfg, gen, slot_spec, prompts, mask, ids, cache,
+                    k, step, mesh=mesh22)
+        assert_rb_equal(a, s)
+    assert s.metrics["tokens_per_forward"] > 1.0
+
+
+def test_drafted_greedy_identity_on_mesh(mesh22):
+    """Greedy drafting-on == drafting-off, on the mesh (the §9 contract
+    composed with the §8 one)."""
+    from repro.drafting import DraftConfig
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=12, temperature=0.0,
+                         eos_id=VOCAB_SIZE - 1)
+    prompts, mask, keys = _inputs(8, 10)
+    ids = list(range(8))
+    sp = shard_params(mesh22, cfg, params)
+    off = rollout(sp, cfg, gen, SpecConfig(variant="off"), prompts, mask,
+                  ids, None, keys, 0, mesh=mesh22)
+    on = rollout(sp, cfg, gen,
+                 SpecConfig(variant="off",
+                            draft=DraftConfig(kind="ngram", draft_k=4)),
+                 prompts, mask, ids, None, keys, 0, mesh=mesh22)
+    assert_rb_equal(off, on)

@@ -1,0 +1,100 @@
+"""NGramDraftSource proposal semantics and DraftController adaptation."""
+import numpy as np
+import pytest
+
+from repro.drafting import DraftConfig, DraftController, NGramDraftSource
+
+
+def _src(rows=1, **kw):
+    kw.setdefault("kind", "ngram")
+    return NGramDraftSource(DraftConfig(**kw), rows)
+
+
+def test_own_history_match():
+    """The most recent previous occurrence of the suffix is continued."""
+    s = _src(max_ngram=2)
+    s.reset(0, [1, 2, 3, 4, 1, 2, 5, 6])
+    # suffix (5, 6) never seen; suffix (6,) never seen; no proposal
+    assert len(s.propose(0, 4)) == 0
+    # pending 1 -> suffix (6, 1) unseen, (1,) seen: latest occurrence of
+    # gram (1,) is at index 4, continuation starts with 2, 5, 6
+    np.testing.assert_array_equal(s.propose(0, 3, pending=1), [2, 5, 6])
+    # two-gram beats one-gram: suffix (1, 2) continues 3 at its first site?
+    # no — LATEST registration wins: (1, 2) at index 4..6 continues 5, 6
+    s.extend(0, [1, 2])
+    np.testing.assert_array_equal(s.propose(0, 2), [5, 6])
+
+
+def test_longest_gram_preferred():
+    s = _src(min_ngram=1, max_ngram=3)
+    s.reset(0, [7, 8, 9, 1, 2, 8, 9, 3, 4])
+    # suffix ...8, 9 matches the 2-gram (8, 9) -> 3, 4 (latest), while the
+    # 1-gram (9,) alone would also say 3; longest match governs
+    s.extend(0, [8, 9])
+    np.testing.assert_array_equal(s.propose(0, 2), [3, 4])
+
+
+def test_sibling_corpus_and_self_shadowing():
+    s = _src(max_ngram=2)
+    sib = np.array([10, 11, 12, 13, 14], np.int32)
+    s.reset(0, [1, 10, 11], corpus=[sib])
+    # suffix (10, 11) only occurs in the sibling -> continue 12, 13, 14
+    np.testing.assert_array_equal(s.propose(0, 3), [12, 13, 14])
+    # once the row's own stream contains the gram, it shadows the sibling
+    s.extend(0, [10, 11, 99])
+    np.testing.assert_array_equal(s.propose(0, 3, pending=11), [99])
+
+
+def test_use_siblings_off_ignores_corpus():
+    s = _src(max_ngram=2, use_siblings=False)
+    s.reset(0, [1, 10, 11], corpus=[np.array([10, 11, 12], np.int32)])
+    assert len(s.propose(0, 3)) == 0
+
+
+def test_rows_are_independent():
+    s = _src(rows=2, max_ngram=1)
+    s.reset(0, [1, 2, 1])
+    s.reset(1, [3, 4, 3])
+    np.testing.assert_array_equal(s.propose(0, 1, pending=1), [2])
+    np.testing.assert_array_equal(s.propose(1, 1, pending=3), [4])
+    assert len(s.propose(1, 1, pending=1)) == 0
+
+
+def test_proposals_are_deterministic():
+    """The §9 acceptance math needs q to be a point mass: same context ==
+    same proposal, always."""
+    s1, s2 = _src(max_ngram=3), _src(max_ngram=3)
+    ctx = list(np.random.RandomState(0).randint(0, 8, 64))
+    s1.reset(0, ctx)
+    s2.reset(0, ctx)
+    for pend in range(8):
+        np.testing.assert_array_equal(s1.propose(0, 5, pending=pend),
+                                      s2.propose(0, 5, pending=pend))
+
+
+def test_controller_adapts_both_ways():
+    cfg = DraftConfig(kind="ngram", draft_k=8, accept_init=0.5, k_min=0)
+    c = DraftController(cfg, rows=2)
+    k0 = c.draft_len(0)
+    for _ in range(30):                      # row 0: everything accepted
+        c.update(0, proposed=c.draft_len(0), accepted=c.draft_len(0))
+    for _ in range(30):                      # row 1: everything rejected
+        c.update(1, proposed=c.draft_len(1) or 1, accepted=0)
+    assert c.draft_len(0) == cfg.draft_k > k0
+    assert c.draft_len(1) <= 1
+    c.reset(1)
+    assert c.draft_len(1) == k0              # slot reuse forgets history
+
+
+def test_controller_fixed_mode():
+    c = DraftController(DraftConfig(kind="ngram", draft_k=5, adaptive=False),
+                        rows=1)
+    c.update(0, proposed=5, accepted=0)
+    assert c.draft_len(0) == 5
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        DraftConfig(kind="ngram", min_ngram=3, max_ngram=2).validate()
+    with pytest.raises(AssertionError):
+        DraftConfig(kind="tree").validate()

@@ -178,3 +178,101 @@ def test_row_budget_independence():
         b = decode_attention(q, k2, v2, q_pos, kpos, lengths, starts,
                              impl=impl, block_k=16)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------- multi-token blocks (§9)
+
+
+def _block_case(B, Hq, Hkv, S, D, T, Dv=None, seed=0):
+    """Draft-verify-shaped inputs: per row, a contiguous live context of
+    ctx_b tokens followed by a written block of qlen_b <= T query tokens at
+    consecutive positions; block columns t >= qlen_b carry q_pos = -1 and
+    their cache slots pos = -1 (draft padding)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, Hq, T, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D if Dv is None else Dv))
+    rng = np.random.RandomState(seed)
+    lengths = np.zeros(B, np.int32)
+    starts = np.zeros(B, np.int32)
+    q_pos = np.full((B, T), -1, np.int32)
+    kpos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        ctx = int(rng.randint(1, S - T))
+        pad = int(rng.randint(0, ctx))
+        if b == 0:
+            qlen = 0                      # done row: no live queries
+        elif b == 1:
+            qlen = T                      # full draft block
+        else:
+            qlen = int(rng.randint(1, T + 1))
+        kpos[b, pad:ctx] = np.arange(ctx - pad)
+        kpos[b, ctx:ctx + qlen] = np.arange(ctx - pad, ctx - pad + qlen)
+        q_pos[b, :qlen] = np.arange(ctx - pad, ctx - pad + qlen)
+        lengths[b] = ctx + T              # block bound incl. padded slots
+        starts[b] = pad
+    return (q, k, v, jnp.asarray(q_pos), jnp.asarray(kpos),
+            jnp.asarray(lengths), jnp.asarray(starts))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,T", [
+    (4, 4, 2, 64, 16, 5),       # GQA 2x, draft_k = 4
+    (3, 8, 1, 48, 8, 3),        # MQA
+    (3, 4, 4, 40, 16, 2),       # MHA
+])
+@pytest.mark.parametrize("window", [0, 16])
+def test_block_query_matches_ref(B, Hq, Hkv, S, D, T, window):
+    """T-token blocks: interpret-mode kernel == naive oracle == blocked."""
+    q, k, v, q_pos, kpos, lengths, starts = _block_case(B, Hq, Hkv, S, D, T,
+                                                        seed=S + D + T)
+    want = decode_attention_ref(q, k, v, q_pos, kpos, lengths, starts,
+                                window=window)
+    for impl in ("blocked", "interpret"):
+        got = decode_attention(q, k, v, q_pos, kpos, lengths, starts,
+                               window=window, impl=impl, block_k=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_block_query_causal_within_block():
+    """Query t must not see block tokens written after it: perturbing slot
+    t+1's K/V leaves query t's output bit-unchanged on every impl."""
+    B, Hq, Hkv, S, D, T = 2, 4, 2, 48, 16, 4
+    q, k, v, q_pos, kpos, lengths, starts = _block_case(
+        B, Hq, Hkv, S, D, T, seed=3)
+    # poke the LAST block slot of row 1 (qlen == T there by construction)
+    last = int(np.asarray(lengths)[1]) - 1
+    k2 = k.at[1, :, last].set(123.0)
+    v2 = v.at[1, :, last].set(-123.0)
+    for impl in ("naive", "blocked", "interpret"):
+        a = decode_attention(q, k, v, q_pos, kpos, lengths, starts,
+                             impl=impl, block_k=16)
+        b2 = decode_attention(q, k2, v2, q_pos, kpos, lengths, starts,
+                              impl=impl, block_k=16)
+        np.testing.assert_array_equal(np.asarray(a[:, :, :T - 1]),
+                                      np.asarray(b2[:, :, :T - 1]))
+        assert not np.allclose(np.asarray(a[1, :, T - 1]),
+                               np.asarray(b2[1, :, T - 1]))
+
+
+def test_block_query_mla_shapes():
+    """Dk != Dv with a multi-token block (MLA drafting)."""
+    q, k, v, q_pos, kpos, lengths, starts = _block_case(
+        3, 4, 4, 40, 24, 3, Dv=16, seed=11)
+    want = decode_attention_ref(q, k, v, q_pos, kpos, lengths, starts)
+    for impl in ("blocked", "interpret"):
+        got = decode_attention(q, k, v, q_pos, kpos, lengths, starts,
+                               impl=impl, block_k=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_block_query_t1_matches_legacy_shapes():
+    """A (B, T=1) position array is the same call as the legacy (B,) one."""
+    q, k, v, q_pos, kpos, lengths, starts = _case(4, 4, 2, 64, 16, seed=29)
+    for impl in ("naive", "blocked", "interpret"):
+        a = decode_attention(q, k, v, q_pos, kpos, lengths, starts,
+                             impl=impl, block_k=16)
+        b = decode_attention(q, k, v, q_pos[:, None], kpos, lengths, starts,
+                             impl=impl, block_k=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
