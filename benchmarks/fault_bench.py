@@ -1,0 +1,185 @@
+"""Fault-recovery benchmark: price the §10 hardening against a clean run.
+
+Serves the same request set through the slot engine twice — fault-free, then
+under a seeded FaultPlan (nan quarantines + a stalled row tripping its
+deadline) — and records the recovery overhead as
+``recovery_efficiency_speedup`` = clean_time / faulted_time (≤ 1 by
+construction: recovery costs retry admissions, never helps).  A third leg
+measures exact kill-and-resume: the engine is killed mid-batch, snapshotted
+through checkpoint/io, restored into a fresh engine and drained — the bench
+asserts the resumed output is token-identical to the clean run and records
+the snapshot/restore cost.  Writes BENCH_faults.json.
+
+    PYTHONPATH=src python -m benchmarks.fault_bench [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_server_state, save_server_state
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import (EngineKilled, FaultEvent, FaultPlan, Request,
+                           SlotEngine, seeded_plan)
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_faults.json")
+SLOTS = 4
+PROMPT_LEN = 16
+
+
+def _setup(N, seed=0):
+    cfg = ModelConfig(name="bench", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                      max_seq_len=max(256, PROMPT_LEN + 2 * N))
+    params = M.init_lm(jax.random.PRNGKey(seed), cfg)
+    gen = GenerateConfig(max_new_tokens=N, eos_id=VOCAB_SIZE - 1)
+    return cfg, params, gen
+
+
+def _requests(n_requests, N, seed=0):
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (n_requests, PROMPT_LEN), 3,
+        VOCAB_SIZE - 1))
+    keys = np.asarray(jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.PRNGKey(seed + 2), i))(
+        jnp.arange(n_requests)))
+    return [Request(request_id=i, prompt=prompts[i].astype(np.int32),
+                    key=keys[i], max_new_tokens=N, max_retries=3)
+            for i in range(n_requests)]
+
+
+def _engine(cfg, params, gen, **kw):
+    return SlotEngine(params, cfg, gen, num_slots=SLOTS,
+                      prompt_width=PROMPT_LEN, **kw)
+
+
+def _serve(cfg, params, gen, reqs, **kw):
+    eng = _engine(cfg, params, gen, **kw)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    resps = eng.run()
+    return resps, time.perf_counter() - t0, eng.stats()
+
+
+def run(smoke: bool = False, out_path: str = OUT_PATH) -> dict:
+    N = 32 if smoke else 48
+    n_requests = 12 if smoke else 24
+    cfg, params, gen = _setup(N)
+
+    _serve(cfg, params, gen, _requests(SLOTS, N, seed=7))   # compile warmup
+
+    clean_out, t_clean, clean_st = _serve(cfg, params, gen,
+                                          _requests(n_requests, N))
+
+    # seeded chaos: nan quarantines + one stalled row; deadline generous
+    # enough that only the stall trips it
+    plan = seeded_plan(0, request_ids=range(n_requests), max_step=N,
+                       n_nan=2, n_stall=1)
+    targeted = plan.targeted_requests()
+    fault_out, t_fault, fault_st = _serve(cfg, params, gen,
+                                          _requests(n_requests, N),
+                                          faults=plan, deadline_steps=8 * N)
+    for i in range(n_requests):              # recovery is complete and exact
+        assert fault_out[i].finish_reason in ("eos", "budget"), \
+            (i, fault_out[i].finish_reason)
+        if i not in targeted:
+            np.testing.assert_array_equal(fault_out[i].tokens,
+                                          clean_out[i].tokens)
+
+    # exact kill-and-resume: die mid-batch, snapshot, restore, drain
+    killed = _engine(cfg, params, gen,
+                     faults=FaultPlan([FaultEvent("kill", at_step=N)]))
+    for r in _requests(n_requests, N):
+        killed.submit(r)
+    t0 = time.perf_counter()
+    try:
+        killed.run()
+        raise AssertionError("kill fault never fired")
+    except EngineKilled:
+        pass
+    t_partial = time.perf_counter() - t0
+    snap = out_path + ".resume_snap"
+    t0 = time.perf_counter()
+    save_server_state(snap, killed)
+    t_save = time.perf_counter() - t0
+    resumed = _engine(cfg, params, gen)
+    t0 = time.perf_counter()
+    load_server_state(snap, resumed)
+    t_load = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    resumed_out = resumed.run()
+    t_resume = time.perf_counter() - t0
+    for i in range(n_requests):              # §10 token-identity contract
+        np.testing.assert_array_equal(resumed_out[i].tokens,
+                                      clean_out[i].tokens)
+    for ext in (".npz", ".json"):
+        os.remove(snap + ext)
+
+    tokens = int(clean_st["generated_tokens"])
+    record = {
+        "backend": jax.default_backend(),
+        "slots": SLOTS, "requests": n_requests, "prompt_len": PROMPT_LEN,
+        "max_new_tokens": N,
+        "clean": {"time_s": t_clean, "tokens": tokens,
+                  "tok_per_s": tokens / max(t_clean, 1e-9)},
+        "faulted": {
+            "time_s": t_fault,
+            "tokens": int(fault_st["generated_tokens"]),
+            "injected": int(fault_st["fault_injected"]),
+            "nan_events": int(fault_st["fault_nan_events"]),
+            "quarantines": int(fault_st["fault_quarantines"]),
+            "timeouts": int(fault_st["timeouts"]),
+            "retries": int(fault_st["retried_requests"]),
+        },
+        "kill_resume": {
+            "killed_at_step": N,
+            "partial_time_s": t_partial,
+            "save_ms": t_save * 1e3,
+            "load_ms": t_load * 1e3,
+            "resume_time_s": t_resume,
+            "token_identical": True,         # asserted above
+        },
+        # ≤ 1 by construction: the guard is that recovery stays CHEAP —
+        # a collapse here means retries/quarantines went runaway
+        "recovery_efficiency_speedup": t_clean / max(t_fault, 1e-9),
+    }
+    record["resume_efficiency_speedup"] = t_clean / max(
+        t_partial + t_save + t_load + t_resume, 1e-9)
+    emit("faults/clean", t_clean * 1e6, f"tok={tokens}")
+    emit("faults/faulted", t_fault * 1e6,
+         f"retries={record['faulted']['retries']};"
+         f"quar={record['faulted']['quarantines']};"
+         f"timeouts={record['faulted']['timeouts']}")
+    emit("faults/kill_resume", (t_save + t_load) * 1e6,
+         f"save_ms={record['kill_resume']['save_ms']:.1f};"
+         f"load_ms={record['kill_resume']['load_ms']:.1f}")
+    emit("faults/speedup", 0.0,
+         f"recovery={record['recovery_efficiency_speedup']:.2f}x;"
+         f"resume={record['resume_efficiency_speedup']:.2f}x")
+    assert record["faulted"]["retries"] > 0, "the plan injected nothing"
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("faults/json", 0.0, out_path)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests, smaller budgets")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -1,13 +1,22 @@
 """Pytree checkpointing: npz arrays + json tree structure (no orbax here).
 
 Saves/restores arbitrary nested dict/list pytrees of jnp/np arrays — policy
-params, optimizer state, critic, and the SPEC-RL rollout cache (so resumed
-training keeps its reuse warm instead of paying a fresh cold-start epoch).
+params, optimizer state, critic, the SPEC-RL rollout cache (so resumed
+training keeps its reuse warm instead of paying a fresh cold-start epoch)
+and the slot server's exact serving state (DESIGN.md §10 kill-and-resume).
+
+Crash safety (§10): every file is written to a temp name in the same
+directory and moved into place with ``os.replace`` — a reader never sees a
+half-written checkpoint.  A checkpoint directory additionally keeps a
+``latest`` pointer file, updated *last* (write_latest), so a crash between
+"new checkpoint fully on disk" and "pointer moved" leaves the previous
+checkpoint live — the pointer flip is the commit point.
 """
 from __future__ import annotations
 
 import json
 import os
+from collections import deque
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -15,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import CacheEntry, RolloutCache
+
+LATEST = "latest"                    # pointer file name inside a ckpt dir
 
 
 def _flatten(tree, prefix="", out=None):
@@ -52,12 +63,60 @@ def _rebuild(struct, flat, prefix=""):
     return jnp.asarray(flat[prefix])
 
 
+# ------------------------------------------------------------ atomic writes
+
+def _atomic_write_npz(path: str, blob: Dict[str, np.ndarray]) -> None:
+    """np.savez to ``path`` via temp-file + os.replace (same filesystem)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def write_latest(ckpt_dir: str, name: str) -> None:
+    """Flip the ``latest`` pointer to checkpoint ``name`` — the commit
+    point of a checkpoint: call it only after every file of ``name`` is
+    fully on disk.  Atomic, so a crash leaves either pointer intact."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    _atomic_write_text(os.path.join(ckpt_dir, LATEST), name + "\n")
+
+
+def read_latest(ckpt_dir: str) -> Optional[str]:
+    """Name of the last committed checkpoint in ``ckpt_dir`` (None if no
+    checkpoint was ever committed)."""
+    p = os.path.join(ckpt_dir, LATEST)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    return name or None
+
+
+# ---------------------------------------------------------------- pytrees
+
 def save_pytree(path: str, tree, metadata: Optional[Dict[str, Any]] = None) -> None:
+    """Write ``path``.npz + ``path``.json, each atomically.
+
+    The json (structure + metadata) is written LAST — loaders open it
+    first, so a crash mid-save leaves either the complete previous pair or
+    a dangling .npz that no json references yet.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path + ".npz", **{k: v for k, v in flat.items()})
-    with open(path + ".json", "w") as f:
-        json.dump({"structure": _structure(tree), "metadata": metadata or {}}, f)
+    _atomic_write_npz(path + ".npz", flat)
+    _atomic_write_text(path + ".json", json.dumps(
+        {"structure": _structure(tree), "metadata": metadata or {}}))
 
 
 def load_pytree(path: str) -> Tuple[Any, Dict[str, Any]]:
@@ -68,32 +127,84 @@ def load_pytree(path: str) -> Tuple[Any, Dict[str, Any]]:
     return _rebuild(meta["structure"], flat), meta["metadata"]
 
 
+# ----------------------------------------------------------- rollout cache
+
 def save_rollout_cache(path: str, cache: RolloutCache) -> None:
+    """Persist a RolloutCache *losslessly*: entries, LRU recency order,
+    sibling-group registration, eviction bound and hit/miss counters all
+    round-trip — a restored trainer sees the same reuse behaviour AND the
+    same eviction pressure it would have seen uninterrupted."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     blob = {}
     index = {}
-    for pid, q in cache._store.items():
+    for pid, q in cache._store.items():          # iteration order = LRU order
         index[str(pid)] = len(q)
         for j, e in enumerate(q):
             blob[f"t/{pid}/{j}"] = e.tokens
             blob[f"l/{pid}/{j}"] = e.logprobs
             blob[f"m/{pid}/{j}"] = np.array([e.step, int(e.ends_with_eos)])
-    np.savez(path + ".cache.npz", **blob)
-    with open(path + ".cache.json", "w") as f:
-        json.dump({"index": index, "history": cache.history}, f)
+    meta = {
+        "index": index,
+        "order": [int(pid) for pid in cache._store],   # LRU, oldest first
+        "history": cache.history,
+        "max_prompts": cache.max_prompts,
+        "group_size": cache.group_size,
+        "group_of": {str(pid): int(gid)
+                     for pid, gid in cache._group_of.items()},
+        "counters": {"puts": cache.puts, "hits": cache.hits,
+                     "misses": cache.misses, "evictions": cache.evictions},
+    }
+    _atomic_write_npz(path + ".cache.npz", blob)
+    _atomic_write_text(path + ".cache.json", json.dumps(meta))
 
 
 def load_rollout_cache(path: str) -> RolloutCache:
     with open(path + ".cache.json") as f:
         meta = json.load(f)
-    cache = RolloutCache(history=meta["history"])
+    cache = RolloutCache(history=meta["history"],
+                         max_prompts=meta.get("max_prompts"),
+                         group_size=meta.get("group_size", 0))
     with np.load(path + ".cache.npz") as z:
-        for pid_s, n in meta["index"].items():
-            pid = int(pid_s)
+        # rebuild the store directly (not via put(): that would bump the
+        # puts counter, re-derive groups and re-run eviction) in saved LRU
+        # order — insertion order of the OrderedDict IS its recency order
+        order = meta.get("order") or [int(p) for p in meta["index"]]
+        for pid in order:
+            n = meta["index"][str(pid)]
+            q = deque(maxlen=cache.history)
             for j in range(n):
                 step, eos = z[f"m/{pid}/{j}"]
-                toks = z[f"t/{pid}/{j}"]
-                q = cache._store.setdefault(pid, __import__("collections").deque(
-                    maxlen=cache.history))
-                q.append(CacheEntry(toks, z[f"l/{pid}/{j}"], int(step), bool(eos)))
+                q.append(CacheEntry(z[f"t/{pid}/{j}"], z[f"l/{pid}/{j}"],
+                                    int(step), bool(eos)))
+            cache._store[pid] = q
+    for pid_s, gid in meta.get("group_of", {}).items():
+        pid = int(pid_s)
+        cache._group_of[pid] = int(gid)
+        cache._groups.setdefault(int(gid), set()).add(pid)
+    for k, v in meta.get("counters", {}).items():
+        setattr(cache, k, int(v))
     return cache
+
+
+# ---------------------------------------------- §10 serving state snapshots
+
+def save_server_state(path: str, server,
+                      metadata: Optional[Dict[str, Any]] = None) -> None:
+    """Snapshot a SlotEngine / MeshSlotServer for exact kill-and-resume.
+
+    ``server.state_dict()`` is an all-array pytree by construction, so the
+    generic atomic pytree writer carries it; restore into a freshly
+    constructed (same shapes / same params) server via
+    ``load_server_state``.  Tokens produced after the restore are identical
+    to an uninterrupted run (tests/serving/test_kill_resume.py).
+    """
+    save_pytree(path, server.state_dict(),
+                metadata={**(metadata or {}), "kind": "server_state"})
+
+
+def load_server_state(path: str, server) -> Dict[str, Any]:
+    """Restore ``server`` in place from a ``save_server_state`` snapshot;
+    returns the snapshot's metadata."""
+    tree, meta = load_pytree(path)
+    server.load_state_dict(tree)
+    return meta

@@ -8,6 +8,9 @@ draft-engine telemetry accumulator.
 - ``DraftStats`` (DESIGN.md §9): acceptance / draft-length / tokens-per-
   forward counters shared by the drafted decode loops, the serving slot
   engine and the trainer step logs.
+- ``FaultStats`` (DESIGN.md §10): recovery-event counters — timeouts,
+  retries, sheds, quarantines, degradations — shared by the slot engine,
+  the mesh server's gathered view and the trainer watchdog logs.
 """
 from __future__ import annotations
 
@@ -71,6 +74,50 @@ class DraftStats:
             f"{prefix}decode_emitted": float(self.emitted),
             f"{prefix}draft_forwards": float(self.draft_forwards),
         }
+
+
+@dataclass
+class FaultStats:
+    """Failure / recovery telemetry (DESIGN.md §10).
+
+    Every recovery action the serving layer can take is a counter here, so
+    "did the degradation ladder fire?" is always answerable from ``stats()``
+    instead of from log archaeology.  The schema is uniform across engines
+    (zeros when a path never fired), which lets ``MeshSlotServer.stats()``
+    sum shards field-by-field and the trainer log the same keys.
+    """
+    injected: int = 0          # fault-plan events actually applied
+    timeouts: int = 0          # deadline expiries -> slot reclamation
+    retries: int = 0           # reclaimed requests re-admitted
+    sheds: int = 0             # requests dropped by queue backpressure
+    rejected: int = 0          # new submissions refused (reject-new policy)
+    nan_events: int = 0        # non-finite logit rows caught by the guard
+    quarantines: int = 0       # rows pulled out of the decode batch
+    draft_errors: int = 0      # draft-source exceptions caught
+    draft_disabled: int = 0    # rows whose drafting was switched off
+    impl_fallbacks: int = 0    # decode_impl ladder steps (pallas->...->naive)
+    failed: int = 0            # requests finished with a failure reason
+
+    FIELDS = ("injected", "timeouts", "retries", "sheds", "rejected",
+              "nan_events", "quarantines", "draft_errors", "draft_disabled",
+              "impl_fallbacks", "failed")
+
+    def add(self, **counts: int) -> None:
+        for k, v in counts.items():
+            assert k in self.FIELDS, k
+            setattr(self, k, getattr(self, k) + int(v))
+
+    def merge(self, other: "FaultStats") -> None:
+        for k in self.FIELDS:
+            setattr(self, k, getattr(self, k) + getattr(other, k))
+
+    def as_dict(self, prefix: str = "fault_") -> Dict[str, float]:
+        return {f"{prefix}{k}": float(getattr(self, k)) for k in self.FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float], prefix: str = "fault_"
+                  ) -> "FaultStats":
+        return cls(**{k: int(d.get(f"{prefix}{k}", 0)) for k in cls.FIELDS})
 
 
 def rouge1_overlap(a: Sequence[int], b: Sequence[int]) -> float:

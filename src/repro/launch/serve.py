@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import random
+import signal
 import time
 
 import jax
@@ -126,6 +127,18 @@ def main(argv=None):
     p.add_argument("--require-mesh", action="store_true",
                    help="fail instead of silently serving single-device "
                         "when the host has fewer devices than the mesh")
+    p.add_argument("--deadline-steps", type=int, default=0,
+                   help="§10 per-request decode-step deadline (0 = none): "
+                        "expired requests are reclaimed and retried once")
+    p.add_argument("--max-queue", type=int, default=0,
+                   help="§10 bounded admission queue (0 = unbounded)")
+    p.add_argument("--overflow", choices=["reject", "shed-oldest"],
+                   default="reject",
+                   help="backpressure policy when the queue is full")
+    p.add_argument("--state-path", default="",
+                   help="on SIGTERM/Ctrl-C, snapshot the exact server state "
+                        "here (checkpoint/io.save_server_state) for "
+                        "kill-and-resume; empty = drain without snapshot")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -154,7 +167,10 @@ def main(argv=None):
                                 num_slots=args.slots,
                                 prompt_width=args.prompt_len,
                                 spec_prefix=spec_prefix, log_lenience=0.0,
-                                draft=draft)
+                                draft=draft,
+                                deadline_steps=args.deadline_steps or None,
+                                max_queue=args.max_queue or None,
+                                overflow=args.overflow)
 
     rng = random.Random(args.seed)
     problems = generate_problems(MathTaskConfig(num_problems=n_requests))
@@ -214,33 +230,67 @@ def main(argv=None):
         t0 = time.time()
 
     engine = make_engine(spec_prefix=args.spec_prefix)
-    if args.arrival_every > 0:
-        arrivals = [(i * args.arrival_every, r) for i, r in enumerate(reqs)]
-        resps = engine.run(arrivals=arrivals)
-    else:
-        for r in reqs:
-            engine.submit(r)
-        resps = engine.run()
+
+    # §10 graceful shutdown: SIGTERM folds into KeyboardInterrupt, and an
+    # interrupted serve stops at a chunk boundary (run() only yields control
+    # between chunks, where host state is consistent), snapshots the exact
+    # server state for kill-and-resume, and still prints final stats
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    interrupted = False
+    try:
+        if args.arrival_every > 0:
+            arrivals = [(i * args.arrival_every, r)
+                        for i, r in enumerate(reqs)]
+            resps = engine.run(arrivals=arrivals)
+        else:
+            for r in reqs:
+                engine.submit(r)
+            resps = engine.run()
+    except KeyboardInterrupt:
+        interrupted = True
+        resps = engine.responses
+        if args.state_path:
+            from repro.checkpoint.io import save_server_state
+            save_server_state(args.state_path, engine,
+                              metadata={"arch": cfg.name,
+                                        "requests": n_requests})
+            print(f"\ninterrupted: server state -> {args.state_path} "
+                  "(resume via checkpoint/io.load_server_state)")
+        else:
+            print("\ninterrupted: draining without snapshot "
+                  "(--state-path to keep serving state)")
     dt = time.time() - t0
     s = engine.stats()
     n_gen = int(s["generated_tokens"])
     shards = int(s.get("num_shards", 1))
+    served = len(resps)
     print(f"arch={cfg.name} engine=slots(spec={args.spec_prefix}, "
-          f"shards={shards}): served "
-          f"{n_requests} requests, {n_gen} generated "
+          f"shards={shards}){' [interrupted]' if interrupted else ''}: served "
+          f"{served}/{n_requests} requests, {n_gen} generated "
           f"(+{int(s['reused_tokens'])} reused) tokens in {dt:.2f}s "
           f"({(n_gen + int(s['reused_tokens'])) / max(dt, 1e-9):.0f} tok/s)")
     print(f"  occupancy={s['occupancy']:.2f} engine_steps={int(s['engine_steps'])} "
           f"admissions={int(s['admitted'])} "
           f"mean_queue_wait={s['mean_queue_wait'] * 1e3:.1f}ms "
           f"mean_serve={s['mean_serve_time'] * 1e3:.1f}ms")
+    recov = {k: int(s[k]) for k in ("timeouts", "retried_requests",
+                                    "shed_requests", "fault_quarantines",
+                                    "fault_impl_fallbacks") if s.get(k)}
+    if recov:
+        print(f"  recovery: {recov}")
     if draft is not None:
         print(f"  draft: tok/fwd={s['tokens_per_forward']:.2f} "
               f"accept={s['accept_rate']:.2f} "
               f"mean_len={s['mean_draft_len']:.2f} "
               f"forwards={int(s['decode_forwards'])}")
     for i in range(min(n_requests, 4)):
-        r = resps[i]
+        r = resps.get(i)
+        if r is None:
+            print(f"  req{i} [in-flight at interrupt]")
+            continue
         full = np.concatenate([
             np.asarray(reqs[i].draft_tokens[:r.n_accepted], np.int32)
             if r.n_accepted else np.zeros(0, np.int32), r.tokens])

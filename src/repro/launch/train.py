@@ -61,6 +61,15 @@ def main(argv=None):
     p.add_argument("--draft-fixed", action="store_true",
                    help="disable the adaptive per-row draft length "
                         "controller (always draft K)")
+    p.add_argument("--watchdog-dir", default="",
+                   help="enable the §10 trainer watchdog: snapshot to this "
+                        "directory on healthy steps, restore-last-good and "
+                        "skip the batch on non-finite loss / stalled rollout")
+    p.add_argument("--watchdog-every", type=int, default=10,
+                   help="healthy-step snapshot cadence (steps)")
+    p.add_argument("--watchdog-max-collect-time", type=float,
+                   default=float("inf"),
+                   help="rollout stall threshold in seconds")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -83,7 +92,15 @@ def main(argv=None):
                       verify_impl="auto", draft=draft)
     mesh_cfg = MeshConfig(data=args.mesh_data, model=args.mesh_model,
                           require=args.require_mesh)
-    tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg)
+    watchdog = None
+    if args.watchdog_dir:
+        from repro.rl.watchdog import TrainWatchdog, WatchdogConfig
+        watchdog = TrainWatchdog(WatchdogConfig(
+            checkpoint_dir=args.watchdog_dir,
+            snapshot_every=args.watchdog_every,
+            max_collect_time=args.watchdog_max_collect_time))
+    tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg,
+                 watchdog=watchdog)
     mesh_desc = (f"{args.mesh_data}x{args.mesh_model}" if tr.mesh is not None
                  else "off")
     print(f"arch={cfg.name} devices={jax.device_count()} mesh={mesh_desc} "

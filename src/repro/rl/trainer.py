@@ -147,7 +147,7 @@ class Trainer:
     def __init__(self, model_cfg: ModelConfig, rl: RLConfig, spec: SpecConfig,
                  dataset: PromptDataset, key,
                  critic_cfg: Optional[ModelConfig] = None,
-                 lenience_schedule=None, mesh=None):
+                 lenience_schedule=None, mesh=None, watchdog=None):
         self.cfg = model_cfg
         self.rl = rl
         self.spec = spec
@@ -196,6 +196,10 @@ class Trainer:
         self.total_generated_tokens = 0
         self.history: List[Dict[str, float]] = []
         self._py_rng = random.Random(1234)
+        # §10 watchdog (rl/watchdog.py): snapshots on healthy steps,
+        # restore-last-good + skip-the-batch on non-finite loss or a
+        # stalled rollout stage.  None = no monitoring (the default).
+        self.watchdog = watchdog
 
     # -------------------------------------------------------------- rollout
     def _rollout_once(self, batch: PromptBatch) -> RolloutBatch:
@@ -334,6 +338,12 @@ class Trainer:
             **{k: float(v) for k, v in cinfo.items()},
             **{k: float(v) for k, v in times.items() if isinstance(v, (int, float))},
         }
+        if self.watchdog is not None:
+            # may restore params/opt_state/cache to the last snapshot (the
+            # poisoned update is undone; step_idx still advances below, so
+            # the bad batch is skipped, not replayed) — and always folds
+            # its counters into the step metrics
+            self.watchdog.after_step(self, metrics)
         self.history.append(metrics)
         self.step_idx += 1
         return metrics

@@ -1,0 +1,157 @@
+"""Trainer watchdog: restore-last-good on poisoned steps (DESIGN.md §10).
+
+The serving layer degrades gracefully (quarantine / retry / shed), but the
+*trainer* has its own failure modes the engine cannot see: a non-finite
+loss (one poisoned batch can NaN the params through the update), or a
+rollout stage that stalls far past its normal duration.  The watchdog
+wraps ``train_step`` output:
+
+* on a healthy step, it snapshots trainer state (params, optimizer
+  moments, PRNG key, critic, rollout cache, step counters) on a fixed
+  cadence through ``checkpoint/io`` — atomic files, ``latest`` pointer
+  flipped last, so a crash mid-snapshot keeps the previous one live;
+* on a poisoned step (non-finite loss/reward, or ``collect_time`` above
+  the stall threshold), it restores the last snapshot and deliberately
+  does NOT roll the step counter back — the dataset's epoch-keyed
+  sampling moves on, so the poisoned batch is skipped rather than
+  replayed into the same failure.
+
+Counters (snapshots / restores / skips) ride the step metrics dict, next
+to the serving layer's fault_ counters — recovery is observable from the
+training log, not from log archaeology.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import (load_pytree, load_rollout_cache, read_latest,
+                                 save_pytree, save_rollout_cache,
+                                 write_latest)
+
+
+@dataclass(frozen=True)
+class WatchdogConfig:
+    checkpoint_dir: str                      # where snapshots live
+    snapshot_every: int = 10                 # healthy-step snapshot cadence
+    max_collect_time: float = float("inf")   # rollout-stall threshold (s)
+    max_restores: int = 3                    # give up (raise) past this
+
+
+class TrainWatchdog:
+    """Attachable step monitor for ``rl.trainer.Trainer``."""
+
+    def __init__(self, cfg: WatchdogConfig):
+        assert cfg.checkpoint_dir, "watchdog needs a checkpoint_dir"
+        self.cfg = cfg
+        self.snapshots = 0
+        self.restores = 0
+        self.nonfinite_steps = 0
+        self.stalled_steps = 0
+        self.skipped_no_snapshot = 0
+
+    # ------------------------------------------------------------- plumbing
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.cfg.checkpoint_dir, name)
+
+    def snapshot(self, trainer) -> str:
+        """Persist everything a restore needs; commit via the pointer."""
+        state = {
+            "params": trainer.params,
+            "opt_state": trainer.opt_state,
+            "key": trainer.key,
+            "scalars": {
+                "step_idx": np.int64(trainer.step_idx),
+                "gen_steps": np.int64(trainer.gen_steps),
+                "total_generated_tokens":
+                    np.int64(trainer.total_generated_tokens),
+            },
+        }
+        if trainer.critic_params is not None:
+            state["critic_params"] = trainer.critic_params
+            state["critic_opt_state"] = trainer.critic_opt_state
+        name = f"watchdog_{trainer.step_idx:06d}"
+        save_pytree(self._path(name), state,
+                    metadata={"step": trainer.step_idx})
+        save_rollout_cache(self._path(name), trainer.cache)
+        write_latest(self.cfg.checkpoint_dir, name)   # the commit point
+        self.snapshots += 1
+        return name
+
+    def restore(self, trainer) -> bool:
+        """Reset trainer state to the last committed snapshot (params,
+        moments, key, cache, counters) — step_idx deliberately NOT rolled
+        back, so the poisoned batch is skipped.  False if no snapshot."""
+        name = read_latest(self.cfg.checkpoint_dir)
+        if name is None:
+            return False
+        from repro.distributed.mesh import shard_opt_state, shard_params
+        tree, _ = load_pytree(self._path(name))
+        trainer.params = shard_params(trainer.mesh, trainer.cfg,
+                                      tree["params"])
+        trainer.opt_state = shard_opt_state(trainer.mesh, trainer.cfg,
+                                            trainer.params,
+                                            tree["opt_state"])
+        trainer.key = jnp.asarray(tree["key"])
+        if "critic_params" in tree and trainer.critic_params is not None:
+            trainer.critic_params = shard_params(
+                trainer.mesh, trainer.critic_cfg, tree["critic_params"])
+            trainer.critic_opt_state = shard_opt_state(
+                trainer.mesh, trainer.critic_cfg, trainer.critic_params,
+                tree["critic_opt_state"])
+        trainer.cache = load_rollout_cache(self._path(name))
+        trainer.gen_steps = int(tree["scalars"]["gen_steps"])
+        trainer.total_generated_tokens = \
+            int(tree["scalars"]["total_generated_tokens"])
+        self.restores += 1
+        return True
+
+    # ------------------------------------------------------------ step hook
+
+    def _poisoned(self, metrics: Dict[str, float]) -> Optional[str]:
+        for k in ("loss", "reward_mean", "critic_loss"):
+            v = metrics.get(k)
+            if v is not None and not math.isfinite(float(v)):
+                return "nonfinite"
+        if metrics.get("collect_time", 0.0) > self.cfg.max_collect_time:
+            return "stall"
+        return None
+
+    def after_step(self, trainer, metrics: Dict[str, float]) -> None:
+        """Call once per train_step with the step's metrics dict (mutated
+        in place with watchdog counters and the recovery verdict)."""
+        why = self._poisoned(metrics)
+        if why is None:
+            if self.snapshots == 0 or \
+                    trainer.step_idx % max(1, self.cfg.snapshot_every) == 0:
+                self.snapshot(trainer)
+        else:
+            if why == "nonfinite":
+                self.nonfinite_steps += 1
+            else:
+                self.stalled_steps += 1
+            if self.restores >= self.cfg.max_restores:
+                raise RuntimeError(
+                    f"watchdog: {why} step and restore budget "
+                    f"({self.cfg.max_restores}) exhausted")
+            if self.restore(trainer):
+                metrics["watchdog_restored"] = 1.0
+            else:
+                # nothing to restore yet — record the skip; the poisoned
+                # update stands but the batch still advances past
+                self.skipped_no_snapshot += 1
+        metrics.update(self.as_dict())
+
+    def as_dict(self, prefix: str = "watchdog_") -> Dict[str, float]:
+        return {f"{prefix}snapshots": float(self.snapshots),
+                f"{prefix}restores": float(self.restores),
+                f"{prefix}nonfinite_steps": float(self.nonfinite_steps),
+                f"{prefix}stalled_steps": float(self.stalled_steps),
+                f"{prefix}skipped_no_snapshot":
+                    float(self.skipped_no_snapshot)}

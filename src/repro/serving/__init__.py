@@ -12,8 +12,13 @@ A slot-based serving layer between the engine and its two consumers:
                ``rollout(..., spec.backfill='slots')`` straggler backfill
 - mesh_server: one scheduler per data shard over model-only submeshes with
                shard-local admission and a gathered metrics view (§8)
+- faults:      deterministic fault injection (§10) — seeded FaultPlans the
+               engine consults at chunk boundaries; with the hardening in
+               request/scheduler/engine_loop (deadlines, bounded retry,
+               backpressure, quarantine, exact kill-and-resume)
 """
 from .engine_loop import SlotEngine
+from .faults import EngineKilled, FaultEvent, FaultPlan, seeded_plan
 from .mesh_server import MeshSlotServer, make_slot_engine
 from .request import Request, Response
 from .scheduler import SlotScheduler

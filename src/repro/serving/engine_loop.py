@@ -24,6 +24,19 @@ Three jit'd device programs, all statically shaped:
 Host side: numpy state vectors + the SlotScheduler; admission groups are
 padded to ``num_slots`` rows by duplicating a real admitted row (duplicate
 slot writes carry identical bytes), so every jit sees one shape.
+
+Fault tolerance (DESIGN.md §10): the engine never lets one bad row take the
+batch down.  A non-finite-logit guard inside ``_decode_chunk`` quarantines
+the offending row in-chunk (its garbage token is never stored; every other
+row decodes on); per-request deadlines bound how long a straggler may hold
+a slot; a reclaimed request retries through speculative-prefix admission —
+its already-generated tokens become the retry's draft and are *verified*,
+not regenerated; draft-source exceptions disable drafting for the row,
+never crash the server; repeated quarantines walk the decode-impl ladder
+(pallas → blocked → naive).  All of it is counted in ``stats()``, injected
+deterministically by a ``FaultPlan`` (serving/faults.py), and the whole
+engine state round-trips through ``state_dict``/``load_state_dict`` for
+exact kill-and-resume (checkpoint/io.save_server_state).
 """
 from __future__ import annotations
 
@@ -35,15 +48,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.metrics import FaultStats
 from repro.core.verify import verify_and_prefill
 from repro.engine.generate import GenerateConfig, positions_from_mask
 from repro.engine.sampling import sample, split_key
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
-from .request import (FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE, Request,
-                      Response)
+from .faults import EngineKilled, FaultPlan
+from .request import (FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE,
+                      FINISH_QUARANTINE, FINISH_SHED, FINISH_TIMEOUT,
+                      Request, Response)
 from .scheduler import SlotScheduler
+
+# §10 graceful-degradation ladder for the decode-attention implementation:
+# a row that keeps producing non-finite logits steps the engine down one
+# rung (recompile on fault — the clean path never pays for it)
+_IMPL_LADDER = {"pallas": "blocked", "interpret": "blocked",
+                "auto": "blocked", "blocked": "naive", "naive": None}
+_IMPL_NAMES = ("auto", "naive", "blocked", "pallas", "interpret")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "gen", "mesh"))
@@ -116,7 +139,7 @@ def _write_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
 @functools.partial(jax.jit, static_argnames=("cfg", "gen", "steps", "mesh"))
 def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
                   cur_tok, cur_lp, done, count, budget, next_pos, write_idx,
-                  keys, *, steps: int, mesh=None):
+                  keys, nan_inject, *, steps: int, mesh=None):
     """``steps`` decode steps over all slots; per-row write offsets/streams.
 
     Term-for-term the body of ``engine/generate._decode_loop`` (store →
@@ -125,9 +148,19 @@ def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
     and the loop never stops early — idle/done rows keep stepping with
     position −1 (position-masked attention ignores those writes, and the
     slot is fully rewritten at its next admission).
+
+    §10 non-finite guard: a row whose logits go NaN/inf is *quarantined*
+    in-chunk — its garbage sample is forced onto safe (uniform) logits and
+    never stored, because quarantine sets ``done`` before the next store.
+    Every other row decodes on undisturbed.  ``nan_inject`` (B,) is the
+    fault-injection hook: the step index within this chunk at which a row's
+    logits are deliberately corrupted, −1 (the clean-path constant) never.
+    Both the injection and the guard are ``where``-selects over the same
+    traced program, so a clean run is bit-identical to the pre-guard loop.
     """
-    def body(carry, _):
-        caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys = carry
+    def body(carry, step_i):
+        caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys, \
+            quar = carry
         tok_store = jnp.where(done, gen.pad_id, cur_tok)
         lp_store = jnp.where(done, 0.0, cur_lp)
         count = count + (~done).astype(jnp.int32)
@@ -141,18 +174,27 @@ def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
             jnp.where(done[:, None], -1, next_pos[:, None]),
             caches, write_idx, kv_length=write_idx + 1,
             kv_start=write_idx - next_pos, mesh=mesh)
-        keys, sub = split_key(keys)
-        nxt, nlp = sample(sub, logits[:, 0], gen.temperature, gen.top_p)
+        lg = logits[:, 0]
+        lg = jnp.where((nan_inject == step_i)[:, None], jnp.nan, lg)
+        bad = ~jnp.all(jnp.isfinite(lg), axis=-1)
+        newly = bad & ~done_next        # rows finishing anyway aren't pulled
+        quar = quar | newly
+        done_next = done_next | newly
+        lg = jnp.where(bad[:, None], 0.0, lg)   # sample something finite;
+        keys, sub = split_key(keys)             # done_next gates its store
+        nxt, nlp = sample(sub, lg, gen.temperature, gen.top_p)
         carry = (caches, nxt, nlp, done_next, count, next_pos + 1,
-                 write_idx + 1, keys)
+                 write_idx + 1, keys, quar)
         return carry, (tok_store, lp_store)
 
-    init = (caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys)
-    carry, (toks, lps) = jax.lax.scan(body, init, None, length=steps)
-    caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys = carry
+    init = (caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys,
+            jnp.zeros_like(done))
+    carry, (toks, lps) = jax.lax.scan(body, init, jnp.arange(steps))
+    caches, cur_tok, cur_lp, done, count, next_pos, write_idx, keys, \
+        quar = carry
     return {"caches": caches, "cur_tok": cur_tok, "cur_lp": cur_lp,
             "done": done, "count": count, "next_pos": next_pos,
-            "write_idx": write_idx, "keys": keys,
+            "write_idx": write_idx, "keys": keys, "quarantined": quar,
             "tokens": toks.T, "logprobs": lps.T}      # (B, steps)
 
 
@@ -163,7 +205,10 @@ class SlotEngine:
                  num_slots: int, prompt_width: int, spec_prefix: bool = False,
                  log_lenience: float = 0.0, chunk_steps: int = 8,
                  verify_impl: str = "auto", compact_impl: str = "auto",
-                 slot_write_impl: str = "auto", draft=None, mesh=None):
+                 slot_write_impl: str = "auto", draft=None, mesh=None,
+                 faults: Optional[FaultPlan] = None,
+                 deadline_steps: Optional[int] = None,
+                 max_queue: Optional[int] = None, overflow: str = "reject"):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
             "extras — use fixed-batch generate otherwise"
@@ -203,7 +248,18 @@ class SlotEngine:
         if mesh is not None:
             from repro.distributed.mesh import shard_caches
             self.caches = shard_caches(cfg, self.caches, mesh, batch=False)
-        self.scheduler = SlotScheduler(B)
+        self.scheduler = SlotScheduler(B, max_queue=max_queue,
+                                       overflow=overflow)
+        # §10 hardening state: engine-default deadline (a request's own
+        # deadline_steps wins), the injected fault schedule, and the
+        # pending targeted faults held until their request is in a slot
+        self.deadline_steps = deadline_steps
+        self.faults = faults
+        self.fault_stats = FaultStats()
+        self.slot_age = np.zeros(B, np.int64)   # engine steps spent DECODING
+        self._nan_due: set = set()              # request_ids awaiting nan
+        self._stall_due: Dict[int, int] = {}    # request_id -> phantom steps
+        self._draft_exc_due: set = set()        # request_ids awaiting exc
         self.cur_tok = np.zeros(B, np.int32)
         self.cur_lp = np.zeros(B, np.float32)
         self.done = np.ones(B, bool)
@@ -233,7 +289,16 @@ class SlotEngine:
     def submit(self, req: Request) -> None:
         assert len(req.prompt) <= self.P, (len(req.prompt), self.P)
         assert 0 <= req.max_new_tokens <= self.N, req.max_new_tokens
-        self.scheduler.submit(req, now=self._now())
+        shed = self.scheduler.submit(req, now=self._now())
+        if shed is not None:
+            # backpressure acted: the shed request resolves immediately with
+            # an empty, explicitly-marked response (§10) — callers waiting
+            # on it see a terminal state instead of a hang
+            self.fault_stats.add(failed=1)
+            self.responses[shed.request_id] = Response(
+                request_id=shed.request_id, tokens=np.zeros(0, np.int32),
+                logprobs=np.zeros(0, np.float32), length=0,
+                finish_reason=FINISH_SHED, slot=-1, retries=shed.retries)
 
     def run(self, arrivals: Optional[Iterable[Tuple[int, Request]]] = None,
             max_chunks: Optional[int] = None) -> Dict[int, Response]:
@@ -247,6 +312,7 @@ class SlotEngine:
         nxt = next(it, None) if it is not None else None
         chunks = 0
         while True:
+            self._apply_faults()       # may raise EngineKilled (kind 'kill')
             while nxt is not None and nxt[0] <= self.steps:
                 self.submit(nxt[1])
                 nxt = next(it, None)
@@ -258,6 +324,7 @@ class SlotEngine:
                 continue
             self._run_chunk()
             self._harvest()
+            self._enforce_deadlines()
             chunks += 1
             if max_chunks is not None and chunks >= max_chunks:
                 break
@@ -279,6 +346,17 @@ class SlotEngine:
         # schema is uniform across engine modes and mesh shards)
         out.update((self.draft_stats if self.draft else DraftStats())
                    .as_dict())
+        # §10 recovery telemetry under the uniform fault_ schema: the
+        # engine-owned counters plus a mirror of the scheduler's lifecycle
+        # counters, so one prefix carries the whole failure story and mesh
+        # shards sum field-by-field
+        fs = FaultStats(**{k: getattr(self.fault_stats, k)
+                           for k in FaultStats.FIELDS})
+        fs.timeouts = self.scheduler.timeouts
+        fs.retries = self.scheduler.retries
+        fs.sheds = self.scheduler.sheds
+        fs.rejected = self.scheduler.rejected
+        out.update(fs.as_dict())
         return out
 
     # ------------------------------------------------------------ admission
@@ -369,6 +447,7 @@ class SlotEngine:
                 self.next_pos[slot] = npos[j]
                 self.write_idx[slot] = self.write_base
                 self.keys[slot] = nkeys[j]
+                self.slot_age[slot] = 0     # deadline clock is per-occupancy
                 self.done[slot] = bool(fr[j]) or budget <= 0
                 self._acc_tok[slot] = []
                 self._acc_lp[slot] = []
@@ -399,14 +478,21 @@ class SlotEngine:
             return self._run_draft_chunk()
         steps = steps or self.chunk_steps
         busy = sum(1 for s in self.scheduler.active if not self.done[s])
+        # §10 fault hook: corrupt the logits of pending nan targets on the
+        # first step of this chunk (−1 = never; the clean-path constant)
+        inject = np.full(self.scheduler.num_slots, -1, np.int32)
+        for slot, req in self.scheduler.active.items():
+            if req.request_id in self._nan_due and not self.done[slot]:
+                self._nan_due.discard(req.request_id)
+                inject[slot] = 0
         t0 = time.perf_counter()
         out = _decode_chunk(
             self.params, self.cfg, self.gen, self.caches,
             jnp.asarray(self.cur_tok), jnp.asarray(self.cur_lp),
             jnp.asarray(self.done), jnp.asarray(self.count),
             jnp.asarray(self.budget), jnp.asarray(self.next_pos),
-            jnp.asarray(self.write_idx), jnp.asarray(self.keys), steps=steps,
-            mesh=self.mesh)
+            jnp.asarray(self.write_idx), jnp.asarray(self.keys),
+            jnp.asarray(inject), steps=steps, mesh=self.mesh)
         self.caches = out["caches"]
         toks = np.asarray(out["tokens"])            # (B, steps)
         lps = np.asarray(out["logprobs"])
@@ -419,8 +505,16 @@ class SlotEngine:
         for slot in self.scheduler.active:
             self._acc_tok[slot].append(toks[slot])
             self._acc_lp[slot].append(lps[slot])
+            self.slot_age[slot] += steps
         self.steps += steps
         self.scheduler.tick(busy, steps)
+        # §10 quarantine: rows the in-chunk guard pulled out (their valid
+        # prefix is in _acc; the corrupted sample was never stored) leave
+        # the decode batch before harvest sees them as completions
+        quar = np.asarray(out["quarantined"])
+        for slot in [s for s in list(self.scheduler.active) if quar[s]]:
+            self.fault_stats.add(nan_events=1)
+            self._reclaim(slot, FINISH_QUARANTINE)
 
     def _run_draft_chunk(self) -> None:
         """One §9 draft-verify macro-step over all slots.
@@ -439,9 +533,23 @@ class SlotEngine:
         for slot in self.scheduler.active:
             if self.done[slot]:
                 continue
-            k_s = self._draft_ctrl.draft_len(slot)
-            d = self._draft_source.propose(slot, k_s,
-                                           pending=int(self.cur_tok[slot]))
+            req = self.scheduler.active[slot]
+            if req.draft_off:
+                continue                # degraded row: plain (B, 2) decode
+            try:
+                # §10 fault hook: a targeted draft-source exception, then
+                # the same guard any REAL proposal error falls into —
+                # drafting dies for this row, the request decodes on
+                if req.request_id in self._draft_exc_due:
+                    self._draft_exc_due.discard(req.request_id)
+                    raise RuntimeError("injected draft-source fault")
+                k_s = self._draft_ctrl.draft_len(slot)
+                d = self._draft_source.propose(slot, k_s,
+                                               pending=int(self.cur_tok[slot]))
+            except Exception:
+                self.fault_stats.add(draft_errors=1, draft_disabled=1)
+                req.draft_off = True
+                continue
             dt[slot, :len(d)] = d
             dl[slot] = len(d)
         # bucketed block width (drafting/step.py:block_width): the forward
@@ -468,14 +576,36 @@ class SlotEngine:
         self.keys = np.array(out["keys"])
         accepted = np.asarray(out["accepted"])
         proposed = np.asarray(out["proposed"])
+        quarantined: List[int] = []
         for slot in self.scheduler.active:
+            req = self.scheduler.active[slot]
             m = int(emitted[slot])
+            # §10 non-finite guard, host-side for drafted chunks: scan the
+            # block's logprobs; everything from the first bad index on is
+            # poisoned and rolled back (injected nan poisons the block at 0)
+            poison = m
+            if req.request_id in self._nan_due and m > 0:
+                self._nan_due.discard(req.request_id)
+                poison = 0
+            elif m > 0:
+                bad = ~np.isfinite(lps[slot, :m])
+                if bad.any():
+                    poison = int(np.argmax(bad))
+            if poison < m:
+                if poison:
+                    self._acc_tok[slot].append(toks[slot, :poison])
+                    self._acc_lp[slot].append(lps[slot, :poison])
+                self.count[slot] -= m - poison      # drop the poisoned tail
+                quarantined.append(slot)
+                continue
             if m:
                 self._acc_tok[slot].append(toks[slot, :m])
                 self._acc_lp[slot].append(lps[slot, :m])
                 self._draft_source.extend(slot, toks[slot, :m])
             self._draft_ctrl.update(slot, int(proposed[slot]),
                                     int(accepted[slot]))
+        for slot in self.scheduler.active:
+            self.slot_age[slot] += 1
         self.draft_stats.add_step(forwards=busy,
                                   proposed=int(proposed.sum()),
                                   accepted=int(accepted.sum()),
@@ -483,6 +613,149 @@ class SlotEngine:
                                   draft_forwards=int((dl > 0).sum()))
         self.steps += 1                     # one forward = one engine step
         self.scheduler.tick(busy, 1)
+        for slot in quarantined:
+            self.fault_stats.add(nan_events=1)
+            self._reclaim(slot, FINISH_QUARANTINE)
+
+    # ------------------------------------------------- §10 fault tolerance
+
+    def _apply_faults(self) -> None:
+        """Consume due FaultPlan events at a chunk boundary (the only points
+        where host state is consistent).  Targeted events (nan / stall /
+        draft_exc) are held pending until their request occupies a slot;
+        bursts submit through the normal bounded-queue front door; a kill
+        raises out of ``run`` — recovery is load_state_dict."""
+        if self.faults is None:
+            return
+        step = self.steps
+        for e in self.faults.due(step, "burst"):
+            self.fault_stats.add(injected=1)
+            for req in self.faults.next_burst_requests(e.count):
+                self.submit(req)
+        for e in self.faults.due(step, "nan"):
+            self.fault_stats.add(injected=1)
+            self._nan_due.add(e.request_id)
+        for e in self.faults.due(step, "stall"):
+            self.fault_stats.add(injected=1)
+            self._stall_due[e.request_id] = e.count
+        for e in self.faults.due(step, "draft_exc"):
+            self.fault_stats.add(injected=1)
+            self._draft_exc_due.add(e.request_id)
+        if self.faults.due(step, "kill"):
+            self.fault_stats.add(injected=1)
+            raise EngineKilled(f"injected kill at engine step {step}")
+
+    def _enforce_deadlines(self) -> None:
+        """Reclaim slots whose request outstayed its decode-step deadline."""
+        # pending stalls first: phantom aging lands the moment its target
+        # is in a slot, deterministically tripping the deadline below
+        for slot, req in self.scheduler.active.items():
+            if req.request_id in self._stall_due and not self.done[slot]:
+                self.slot_age[slot] += self._stall_due.pop(req.request_id)
+        for slot in list(self.scheduler.active):
+            req = self.scheduler.active[slot]
+            if self.done[slot]:
+                continue
+            ddl = req.deadline_steps if req.deadline_steps is not None \
+                else self.deadline_steps
+            if ddl is not None and self.slot_age[slot] >= ddl:
+                self._reclaim(slot, FINISH_TIMEOUT)
+
+    def _reclaim(self, slot: int, reason: str) -> None:
+        """Pull the request out of ``slot`` without finishing it (§10).
+
+        Its valid partial output is preserved: a retry re-enters through
+        the queue with that output grown onto its draft, so spec-prefix
+        admission re-VERIFIES the tokens instead of regenerating them
+        (one forward over [prompt | draft]).  Retries exhausted → a
+        failure Response carrying the best-effort partial output.
+        Quarantines also walk the degradation ladder: first strike turns
+        the request's drafting off, a repeat steps the engine's decode
+        impl down one rung.
+        """
+        req = self.scheduler.active[slot]
+        cnt = max(0, int(self.count[slot]))
+        toks = (np.concatenate(self._acc_tok[slot])[:cnt]
+                if self._acc_tok[slot] else
+                np.zeros(0, np.int32)).astype(np.int32)
+        lps = (np.concatenate(self._acc_lp[slot])[:cnt]
+               if self._acc_lp[slot] else
+               np.zeros(0, np.float32)).astype(np.float32)
+        n1 = int(self._slot_n[slot])
+        plp = self._slot_prefix_lp[slot]
+        if reason == FINISH_QUARANTINE:
+            req.nan_strikes += 1
+            self.fault_stats.add(quarantines=1)
+            if not req.draft_off:
+                req.draft_off = True        # ladder rung 1: stop speculating
+                if self.draft:
+                    self.fault_stats.add(draft_disabled=1)
+            if req.nan_strikes >= 2:
+                self._degrade_impl()        # rung 2: simpler decode kernel
+        now = self._now()
+        self.scheduler.reclaim(slot, now=now, reason=reason)
+        if req.retries < req.max_retries:
+            if self.spec_prefix:
+                # accepted prefix ⊕ partial output becomes the retry draft;
+                # lp_curr stands in for behaviour logprobs (both are this
+                # policy's own logprobs, so re-verification accepts them)
+                prev_t = (np.asarray(req.draft_tokens, np.int32)[:n1]
+                          if req.draft_tokens is not None
+                          else np.zeros(0, np.int32))
+                prev_l = (np.asarray(plp, np.float32)[:n1]
+                          if plp is not None else np.zeros(0, np.float32))
+                req.draft_tokens = np.concatenate([prev_t,
+                                                   toks]).astype(np.int32)
+                req.draft_logprobs = np.concatenate(
+                    [prev_l, lps]).astype(np.float32)
+                req.draft_eos = False
+            self.scheduler.resubmit(req, now=now)
+        else:
+            toks2, lps2, orig = self._stitch(req, n1, plp, toks, lps)
+            self.fault_stats.add(failed=1)
+            self.responses[req.request_id] = Response(
+                request_id=req.request_id, tokens=toks2, logprobs=lps2,
+                length=len(toks2), finish_reason=reason, n_accepted=orig,
+                prefix_logprobs=plp,
+                draft_len=int(self._slot_draft_len[slot]), slot=slot,
+                queue_time=req.admitted_at - req.queued_at,
+                serve_time=now - req.admitted_at, retries=req.retries)
+        self.done[slot] = True
+        self._acc_tok[slot] = []
+        self._acc_lp[slot] = []
+        self._slot_prefix_lp[slot] = None
+
+    def _stitch(self, req: Request, n1: int, plp, toks, lps):
+        """Split a serving session's output at the CALLER's draft boundary.
+
+        ``n1`` is the final admission's accepted-prefix length; past
+        ``base_draft_len`` it covers the request's own re-verified partial
+        output, which belongs in the *continuation* — the Response contract
+        (caller-draft prefix vs everything generated here) is retry-blind.
+        For never-retried requests n1 <= base and this is the identity.
+        """
+        base = max(0, int(req.base_draft_len))
+        orig = min(n1, base)
+        if n1 > orig:
+            toks = np.concatenate([np.asarray(req.draft_tokens,
+                                              np.int32)[orig:n1], toks])
+            lps = np.concatenate([np.asarray(plp,
+                                             np.float32)[orig:n1], lps])
+        return toks.astype(np.int32), lps.astype(np.float32), orig
+
+    def _degrade_impl(self) -> None:
+        """Step the decode-attention impl down one ladder rung (§10).
+
+        Engine-wide by necessity — the impl is a static jit field — so it
+        only fires on a *second* quarantine of the same request, after
+        per-row degradation (drafting off) was not enough.  Costs one
+        recompile of each device program; the clean path never pays it.
+        """
+        nxt = _IMPL_LADDER.get(self.cfg.decode_impl)
+        if nxt is None:
+            return
+        self.cfg = self.cfg.replace(decode_impl=nxt)
+        self.fault_stats.add(impl_fallbacks=1)
 
     # -------------------------------------------------------------- harvest
 
@@ -503,14 +776,20 @@ class SlotEngine:
             else:
                 reason = FINISH_BUDGET
             now = self._now()
+            # retry-blind response split (§10): re-verified partial output
+            # from earlier attempts moves from the accepted prefix back
+            # into the continuation (identity for never-retried requests)
+            toks, lps, orig = self._stitch(req, int(self._slot_n[slot]),
+                                           self._slot_prefix_lp[slot],
+                                           toks, lps)
             resp = Response(
-                request_id=req.request_id, tokens=toks.astype(np.int32),
-                logprobs=lps.astype(np.float32), length=cnt,
-                finish_reason=reason, n_accepted=int(self._slot_n[slot]),
+                request_id=req.request_id, tokens=toks, logprobs=lps,
+                length=len(toks),
+                finish_reason=reason, n_accepted=orig,
                 prefix_logprobs=self._slot_prefix_lp[slot],
                 draft_len=int(self._slot_draft_len[slot]), slot=slot,
                 queue_time=req.admitted_at - req.queued_at,
-                serve_time=now - req.admitted_at)
+                serve_time=now - req.admitted_at, retries=req.retries)
             self.responses[req.request_id] = resp
             self.scheduler.complete(slot, now=now)
             self._acc_tok[slot] = []
@@ -518,3 +797,124 @@ class SlotEngine:
             self._slot_prefix_lp[slot] = None
             finished.append(resp)
         return finished
+
+    # ----------------------------------------------- exact kill-and-resume
+
+    _VEC_FIELDS = ("cur_tok", "cur_lp", "done", "count", "budget",
+                   "next_pos", "write_idx", "keys", "slot_age", "_slot_n",
+                   "_slot_draft_len", "_slot_full_reuse")
+
+    def state_dict(self) -> Dict:
+        """Everything the decode loop's future depends on, as an all-array
+        pytree (checkpoint/io.save_pytree-compatible).
+
+        Covers the cache slabs, every per-slot state vector, the partial
+        token accumulators, the scheduler (queued + in-flight requests,
+        bit-exact), finished responses, the §9 draft state (controller
+        EMAs, n-gram streams/corpora — the index is rebuilt on load, which
+        is order-equivalent to the incremental indexing that built it) and
+        all counters.  NOT covered, by design: params/config (the caller
+        reconstructs the engine the same way it built it — asserted via
+        meta) and the FaultPlan (a restored engine resumes clean).
+        ``load_state_dict(state_dict())`` resumes token-identically
+        (tests/serving/test_kill_resume.py).
+        """
+        st: Dict = {
+            "meta": {
+                "num_slots": np.int64(self.scheduler.num_slots),
+                "prompt_width": np.int64(self.P),
+                "max_new_tokens": np.int64(self.N),
+                "spec_prefix": np.bool_(self.spec_prefix),
+                "decode_impl": np.int64(
+                    _IMPL_NAMES.index(self.cfg.decode_impl)),
+                "steps": np.int64(self.steps),
+                "elapsed": np.float64(self._now()),
+                "time_admit": np.float64(self.time_admit),
+                "time_slot_write": np.float64(self.time_slot_write),
+                "time_decode": np.float64(self.time_decode),
+            },
+            "caches": jax.tree.map(np.asarray, self.caches),
+            "vec": {k: np.asarray(getattr(self, k))
+                    for k in self._VEC_FIELDS},
+            "acc_tok": {str(s): np.concatenate(a).astype(np.int32)
+                        for s, a in enumerate(self._acc_tok) if a},
+            "acc_lp": {str(s): np.concatenate(a).astype(np.float32)
+                       for s, a in enumerate(self._acc_lp) if a},
+            "prefix_lp": {str(s): np.asarray(p, np.float32)
+                          for s, p in enumerate(self._slot_prefix_lp)
+                          if p is not None},
+            "scheduler": self.scheduler.state_dict(),
+            "responses": {str(rid): r.to_state()
+                          for rid, r in self.responses.items()},
+            "fault_stats": {k: np.int64(getattr(self.fault_stats, k))
+                            for k in FaultStats.FIELDS},
+        }
+        if self.draft:
+            st["draft"] = {
+                "rate": np.asarray(self._draft_ctrl.rate, np.float64),
+                "stream": {str(s): np.asarray(v, np.int64)
+                           for s, v in enumerate(self._draft_source._stream)},
+                "corpus": {str(s): {str(j): np.asarray(seq, np.int32)
+                                    for j, seq in enumerate(v)}
+                           for s, v in
+                           enumerate(self._draft_source._corpus)},
+                "stats": {k: np.int64(getattr(self.draft_stats, k))
+                          for k in ("forwards", "draft_forwards", "proposed",
+                                    "accepted", "emitted")},
+            }
+        return st
+
+    def load_state_dict(self, state: Dict) -> None:
+        meta = state["meta"]
+        assert int(meta["num_slots"]) == self.scheduler.num_slots and \
+            int(meta["prompt_width"]) == self.P and \
+            int(meta["max_new_tokens"]) == self.N and \
+            bool(meta["spec_prefix"]) == self.spec_prefix, \
+            "engine was constructed with a different shape than the snapshot"
+        impl = _IMPL_NAMES[int(meta["decode_impl"])]
+        if impl != self.cfg.decode_impl:   # resume mid-degradation-ladder
+            self.cfg = self.cfg.replace(decode_impl=impl)
+        caches = jax.tree.map(jnp.asarray, state["caches"])
+        if self.mesh is not None:
+            from repro.distributed.mesh import shard_caches
+            caches = shard_caches(self.cfg, caches, self.mesh, batch=False)
+        self.caches = caches
+        for k in self._VEC_FIELDS:
+            setattr(self, k, np.array(state["vec"][k]))
+        self._slot_full_reuse = self._slot_full_reuse.astype(bool)
+        self.done = self.done.astype(bool)
+        B = self.scheduler.num_slots
+        self._acc_tok = [[np.asarray(state["acc_tok"][str(s)], np.int32)]
+                         if str(s) in state["acc_tok"] else []
+                         for s in range(B)]
+        self._acc_lp = [[np.asarray(state["acc_lp"][str(s)], np.float32)]
+                        if str(s) in state["acc_lp"] else []
+                        for s in range(B)]
+        self._slot_prefix_lp = [
+            np.asarray(state["prefix_lp"][str(s)], np.float32)
+            if str(s) in state["prefix_lp"] else None for s in range(B)]
+        self.scheduler.load_state_dict(state["scheduler"])
+        self.responses = {int(rid): Response.from_state(rs)
+                          for rid, rs in state["responses"].items()}
+        for k in FaultStats.FIELDS:
+            setattr(self.fault_stats, k, int(state["fault_stats"][k]))
+        if self.draft and "draft" in state:
+            d = state["draft"]
+            self._draft_ctrl.rate = np.array(d["rate"], np.float64)
+            for s in range(B):
+                stream = [int(t) for t in np.asarray(d["stream"][str(s)])]
+                corp = d["corpus"].get(str(s), {})
+                corpus = [np.asarray(corp[str(j)], np.int32)
+                          for j in range(len(corp))]
+                # reset() re-registers corpus-then-stream in the same order
+                # incremental indexing did, so the rebuilt suffix map is
+                # identical and proposals resume bit-exactly
+                self._draft_source.reset(s, stream, corpus)
+            for k in ("forwards", "draft_forwards", "proposed", "accepted",
+                      "emitted"):
+                setattr(self.draft_stats, k, int(d["stats"][k]))
+        self.steps = int(meta["steps"])
+        self.time_admit = float(meta["time_admit"])
+        self.time_slot_write = float(meta["time_slot_write"])
+        self.time_decode = float(meta["time_decode"])
+        self._t0 = time.perf_counter() - float(meta["elapsed"])

@@ -38,7 +38,9 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
                      spec_prefix: bool = False, log_lenience: float = 0.0,
                      chunk_steps: int = 8, verify_impl: str = "auto",
                      compact_impl: str = "auto",
-                     slot_write_impl: str = "auto", draft=None):
+                     slot_write_impl: str = "auto", draft=None, faults=None,
+                     deadline_steps=None, max_queue=None,
+                     overflow: str = "reject"):
     """One factory for both mesh regimes (the single dispatch point shared
     by serving/rl_adapter.py and launch/serve.py).
 
@@ -47,13 +49,19 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
     shard) and params are placed per submesh inside.  Otherwise one
     ``SlotEngine`` (head-sharding its caches when a model-only mesh is
     given); that path expects params already placed by the caller.
+
+    §10 hardening knobs pass straight through: ``deadline_steps`` /
+    ``max_queue`` / ``overflow`` apply per engine (per shard on a mesh —
+    the bound is shard-local, like admission), ``faults`` is a FaultPlan
+    (given to shard 0 on a mesh) or a per-shard sequence of plans.
     """
     from repro.distributed.mesh import data_size
     kw = dict(num_slots=num_slots, prompt_width=prompt_width,
               spec_prefix=spec_prefix, log_lenience=log_lenience,
               chunk_steps=chunk_steps, verify_impl=verify_impl,
               compact_impl=compact_impl, slot_write_impl=slot_write_impl,
-              draft=draft)
+              draft=draft, faults=faults, deadline_steps=deadline_steps,
+              max_queue=max_queue, overflow=overflow)
     if mesh is not None and data_size(mesh) > 1:
         D = data_size(mesh)
         kw["num_slots"] = max(D, num_slots - num_slots % D)
@@ -75,20 +83,27 @@ class MeshSlotServer:
                  spec_prefix: bool = False, log_lenience: float = 0.0,
                  chunk_steps: int = 8, verify_impl: str = "auto",
                  compact_impl: str = "auto", slot_write_impl: str = "auto",
-                 draft=None):
+                 draft=None, faults=None, deadline_steps=None,
+                 max_queue=None, overflow: str = "reject"):
         self.submeshes = data_submeshes(mesh)
         D = len(self.submeshes)
         assert num_slots % D == 0 and num_slots >= D, \
             (f"num_slots={num_slots} must split evenly over {D} data shards")
         self.cfg, self.gen = cfg, gen
+        # a single FaultPlan lands on shard 0; a sequence maps per shard
+        plans = list(faults) if isinstance(faults, (list, tuple)) else \
+            [faults] + [None] * (D - 1)
+        assert len(plans) == D, (len(plans), D)
         self.engines: List[SlotEngine] = [
             SlotEngine(shard_params(sm, cfg, params), cfg, gen,
                        num_slots=num_slots // D, prompt_width=prompt_width,
                        spec_prefix=spec_prefix, log_lenience=log_lenience,
                        chunk_steps=chunk_steps, verify_impl=verify_impl,
                        compact_impl=compact_impl,
-                       slot_write_impl=slot_write_impl, draft=draft, mesh=sm)
-            for sm in self.submeshes]
+                       slot_write_impl=slot_write_impl, draft=draft, mesh=sm,
+                       faults=plan, deadline_steps=deadline_steps,
+                       max_queue=max_queue, overflow=overflow)
+            for sm, plan in zip(self.submeshes, plans)]
         self._rr = 0                       # round-robin submission cursor
 
     @property
@@ -129,6 +144,7 @@ class MeshSlotServer:
         while True:
             moved = False
             for i, e in enumerate(self.engines):
+                e._apply_faults()      # may raise EngineKilled (kind 'kill')
                 while due[i] is not None and due[i][0] <= e.steps:
                     e.submit(due[i][1])
                     due[i] = next(nxt[i], None)
@@ -136,6 +152,7 @@ class MeshSlotServer:
                 if not e.scheduler.idle:
                     e._run_chunk()
                     e._harvest()
+                    e._enforce_deadlines()
                     moved = True
                 elif due[i] is not None:
                     e.steps = max(e.steps, int(due[i][0]))  # idle fast-forward
@@ -182,7 +199,7 @@ class MeshSlotServer:
         # §9 draft telemetry: sum the raw counters across shards and
         # re-derive the ratios from the totals (a per-shard mean would
         # weight idle shards equally with busy ones)
-        from repro.core.metrics import DraftStats
+        from repro.core.metrics import DraftStats, FaultStats
         agg = DraftStats()
         for p in per:
             agg.add_step(forwards=p["decode_forwards"],
@@ -191,5 +208,31 @@ class MeshSlotServer:
                          emitted=p["decode_emitted"],
                          draft_forwards=p["draft_forwards"])
         out.update(agg.as_dict())
+        # §10 recovery telemetry: uniform schema, so shards sum field-by-
+        # field — both the scheduler lifecycle counters and the fault_ view
+        for k in ("timeouts", "quarantined_requests", "retried_requests",
+                  "shed_requests", "rejected_requests", "max_queue"):
+            out[k] = sum(p[k] for p in per)
+        fagg = FaultStats()
+        for p in per:
+            fagg.merge(FaultStats.from_dict(p))
+        out.update(fagg.as_dict())
         out["per_shard"] = per
         return out
+
+    # ----------------------------------------------- exact kill-and-resume
+
+    def state_dict(self) -> Dict:
+        """Per-shard engine snapshots plus the round-robin cursor — the
+        full server future (checkpoint/io.save_server_state persists it)."""
+        import numpy as np
+        return {"engines": {str(i): e.state_dict()
+                            for i, e in enumerate(self.engines)},
+                "rr": np.int64(self._rr)}
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert len(state["engines"]) == len(self.engines), \
+            (len(state["engines"]), len(self.engines))
+        for i, e in enumerate(self.engines):
+            e.load_state_dict(state["engines"][str(i)])
+        self._rr = int(state["rr"])

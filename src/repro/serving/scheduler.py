@@ -11,6 +11,15 @@ warmest candidate).  Per-slot budgets live in the engine's state vectors;
 the scheduler tracks the request lifecycle and aggregates metrics:
 queue-wait, slot occupancy (busy slot-steps / total slot-steps), admissions,
 completions.
+
+Hardening (DESIGN.md §10): the queue is optionally *bounded*
+(``max_queue``) with an explicit backpressure policy — ``reject`` refuses
+the new submission, ``shed-oldest`` drops the head of the queue to make
+room — and requests can leave a slot without finishing (``reclaim``: a
+deadline expiry or quarantine frees the slot; a bounded number of retries
+re-enter through the queue).  Every such event is a counter in ``stats()``.
+The whole scheduler state round-trips through ``state_dict`` /
+``load_state_dict`` for exact kill-and-resume.
 """
 from __future__ import annotations
 
@@ -19,11 +28,18 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from .request import DECODING, DONE, PREFILLING, QUEUED, Request
 
+OVERFLOW_POLICIES = ("reject", "shed-oldest")
+
 
 class SlotScheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, max_queue: Optional[int] = None,
+                 overflow: str = "reject"):
         assert num_slots > 0, num_slots
+        assert max_queue is None or max_queue > 0, max_queue
+        assert overflow in OVERFLOW_POLICIES, overflow
         self.num_slots = num_slots
+        self.max_queue = max_queue
+        self.overflow = overflow
         self.free: List[int] = list(range(num_slots - 1, -1, -1))
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}          # slot -> request
@@ -35,14 +51,53 @@ class SlotScheduler:
         self.total_slot_steps = 0
         self.queue_wait_total = 0.0
         self.serve_time_total = 0.0
+        # §10 recovery counters
+        self.timeouts = 0
+        self.quarantines = 0
+        self.retries = 0
+        self.sheds = 0
+        self.rejected = 0
 
     # ------------------------------------------------------------ lifecycle
 
-    def submit(self, req: Request, now: float = 0.0) -> None:
+    def submit(self, req: Request, now: float = 0.0) -> Optional[Request]:
+        """Queue a request; returns the request SHED by backpressure, if any.
+
+        With an unbounded queue (or room left) the return is None.  At
+        capacity, policy ``reject`` refuses and returns ``req`` itself;
+        ``shed-oldest`` drops the queue head to admit the newcomer and
+        returns the dropped request.  Either way the caller owns emitting
+        the shed response — the scheduler only counts it.
+        """
+        shed: Optional[Request] = None
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.overflow == "reject":
+                self.rejected += 1
+                self.sheds += 1
+                self.submitted += 1
+                return req
+            shed = self.queue.popleft()                # shed-oldest
+            self.sheds += 1
         req.state = QUEUED
         req.queued_at = now
+        if req.base_draft_len < 0:
+            # remember where the CALLER's draft ends before any retry grows
+            # it with the request's own partial output (§10 retry semantics)
+            req.base_draft_len = len(req.draft_tokens) \
+                if req.draft_tokens is not None else 0
         self.queue.append(req)
         self.submitted += 1
+        return shed
+
+    def resubmit(self, req: Request, now: float = 0.0) -> None:
+        """Re-queue a reclaimed request (bounded retry).  Bypasses the
+        backpressure bound — a retry holds no NEW work, shedding it would
+        turn one fault into a dropped request."""
+        req.state = QUEUED
+        req.queued_at = now
+        req.retries += 1
+        self.retries += 1
+        self.queue.append(req)
 
     @property
     def pending(self) -> int:
@@ -83,6 +138,22 @@ class SlotScheduler:
         self.completed += 1
         return req
 
+    def reclaim(self, slot: int, now: float = 0.0,
+                reason: str = "timeout") -> Request:
+        """Pull a request OUT of its slot without finishing it (§10).
+
+        The slot returns to the free pool immediately so admission can
+        back-fill it; the caller decides whether the request retries
+        (``resubmit``) or fails out.  Counted separately from completions.
+        """
+        req = self.active.pop(slot)
+        self.free.append(slot)
+        if reason == "quarantine":
+            self.quarantines += 1
+        else:
+            self.timeouts += 1
+        return req
+
     # -------------------------------------------------------------- metrics
 
     def tick(self, busy_slots: int, steps: int = 1) -> None:
@@ -103,4 +174,40 @@ class SlotScheduler:
                                 if self.completed else 0.0),
             "mean_serve_time": (self.serve_time_total / self.completed
                                 if self.completed else 0.0),
+            "timeouts": self.timeouts,
+            "quarantined_requests": self.quarantines,
+            "retried_requests": self.retries,
+            "shed_requests": self.sheds,
+            "rejected_requests": self.rejected,
+            "max_queue": self.max_queue or 0,
         }
+
+    # ----------------------------------------------------- exact state (§10)
+
+    _COUNTERS = ("submitted", "admitted", "completed", "busy_slot_steps",
+                 "total_slot_steps", "queue_wait_total", "serve_time_total",
+                 "timeouts", "quarantines", "retries", "sheds", "rejected")
+
+    def state_dict(self) -> Dict:
+        import numpy as np
+        return {
+            "free": np.asarray(self.free, np.int64),
+            "queue": {str(i): r.to_state()
+                      for i, r in enumerate(self.queue)},
+            "active": {str(slot): r.to_state()
+                       for slot, r in self.active.items()},
+            "counters": {k: np.float64(getattr(self, k))
+                         for k in self._COUNTERS},
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        import numpy as np
+        self.free = [int(s) for s in np.asarray(state["free"])]
+        q = state["queue"]
+        self.queue = deque(Request.from_state(q[str(i)])
+                           for i in range(len(q)))
+        self.active = {int(slot): Request.from_state(st)
+                       for slot, st in state["active"].items()}
+        for k in self._COUNTERS:
+            cast = float if k.endswith("_total") else int
+            setattr(self, k, cast(state["counters"][k]))

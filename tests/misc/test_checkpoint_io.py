@@ -1,0 +1,129 @@
+"""checkpoint/io: atomic pytree writes, the ``latest`` commit pointer, and
+the lossless RolloutCache round-trip (entries, LRU recency, sibling groups,
+eviction bound, counters) that §10 recovery builds on."""
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (load_pytree, load_rollout_cache, read_latest,
+                                 save_pytree, save_rollout_cache,
+                                 write_latest)
+from repro.core.cache import RolloutCache
+
+
+def _no_tmp_files(d):
+    return not glob.glob(os.path.join(str(d), "**", "*.tmp"), recursive=True)
+
+
+def test_pytree_roundtrip_and_atomicity(tmp_path):
+    tree = {
+        "a": np.arange(6, dtype=np.int32).reshape(2, 3),
+        "nested": {"b": np.float32(1.5),
+                   "seq": [np.ones(2), np.zeros(3)],
+                   "tup": (np.int64(7),)},
+    }
+    p = str(tmp_path / "ck")
+    save_pytree(p, tree, metadata={"step": 3})
+    out, meta = load_pytree(p)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+    np.testing.assert_array_equal(np.asarray(out["nested"]["seq"][1]),
+                                  np.zeros(3))
+    assert isinstance(out["nested"]["tup"], tuple)
+    # temp names never survive a completed save — a crash mid-write leaves
+    # either the old file or a .tmp that loaders never open
+    assert _no_tmp_files(tmp_path)
+
+
+def test_latest_pointer_is_the_commit_point(tmp_path):
+    d = str(tmp_path / "ckpts")
+    assert read_latest(d) is None
+    save_pytree(os.path.join(d, "step_1"), {"x": np.ones(2)})
+    assert read_latest(d) is None               # on disk but not committed
+    write_latest(d, "step_1")
+    assert read_latest(d) == "step_1"
+    write_latest(d, "step_2")                   # pointer flip is atomic
+    assert read_latest(d) == "step_2"
+    assert _no_tmp_files(tmp_path)
+
+
+def _seeded_cache():
+    rng = np.random.RandomState(0)
+    cache = RolloutCache(history=2, max_prompts=4, group_size=2)
+    for pid in range(6):                        # 6 puts into a 4-prompt bound
+        for step in range(2):
+            L = int(rng.randint(2, 8))
+            cache.put(pid, rng.randint(0, 32, L).astype(np.int32),
+                      rng.randn(L).astype(np.float32), L, step=step,
+                      eos_id=31)
+    cache.get(4)                                # LRU touch reorders recency
+    cache.get(99)                               # a miss, for the counter
+    return cache
+
+
+def test_rollout_cache_roundtrip_lossless(tmp_path):
+    cache = _seeded_cache()
+    p = str(tmp_path / "rc")
+    save_rollout_cache(p, cache)
+    out = load_rollout_cache(p)
+
+    # store: same pids, same LRU order, same entries bit-for-bit
+    assert list(out._store) == list(cache._store)
+    for pid in cache._store:
+        a, b = cache._store[pid], out._store[pid]
+        assert len(a) == len(b) and b.maxlen == cache.history
+        for ea, eb in zip(a, b):
+            np.testing.assert_array_equal(ea.tokens, eb.tokens)
+            np.testing.assert_array_equal(ea.logprobs, eb.logprobs)
+            assert ea.step == eb.step and ea.ends_with_eos == eb.ends_with_eos
+    # sibling groups (evicted members unregistered) and bounds
+    assert out._groups == cache._groups and out._group_of == cache._group_of
+    assert out.max_prompts == cache.max_prompts
+    assert out.group_size == cache.group_size
+    for pid in out._store:
+        got = [e.tokens.tolist() for e in out.siblings(pid)]
+        want = [e.tokens.tolist() for e in cache.siblings(pid)]
+        assert got == want
+    # counters: restoring must not re-count (loading is not putting)
+    for k in ("puts", "hits", "misses", "evictions"):
+        assert getattr(out, k) == getattr(cache, k), k
+    assert out.evictions == 2
+
+
+def test_restored_cache_evicts_like_the_original(tmp_path):
+    """Same LRU pressure after restore: the next eviction picks the same
+    victim in both the original and the round-tripped cache."""
+    cache = _seeded_cache()
+    p = str(tmp_path / "rc2")
+    save_rollout_cache(p, cache)
+    out = load_rollout_cache(p)
+    tok = np.arange(3, dtype=np.int32)
+    lp = np.zeros(3, np.float32)
+    cache.put(77, tok, lp, 3, step=9)
+    out.put(77, tok, lp, 3, step=9)
+    assert list(out._store) == list(cache._store)
+    assert out.evictions == cache.evictions == 3
+
+
+def test_empty_cache_roundtrip(tmp_path):
+    p = str(tmp_path / "rc3")
+    save_rollout_cache(p, RolloutCache(history=3))
+    out = load_rollout_cache(p)
+    assert len(out) == 0 and out.history == 3 and out.max_prompts is None
+    assert out.get(0) is None                   # miss, not crash
+
+
+@pytest.mark.parametrize("entries", [0, 5])
+def test_roundtrip_then_roundtrip_is_stable(tmp_path, entries):
+    """save(load(save(c))) == save(c): serialization is a fixed point."""
+    cache = RolloutCache(history=2, group_size=2)
+    for pid in range(entries):
+        cache.put(pid, np.arange(4, dtype=np.int32),
+                  np.zeros(4, np.float32), 4, step=1)
+    p1, p2 = str(tmp_path / "x"), str(tmp_path / "y")
+    save_rollout_cache(p1, cache)
+    save_rollout_cache(p2, load_rollout_cache(p1))
+    with open(p1 + ".cache.json") as f1, open(p2 + ".cache.json") as f2:
+        assert f1.read() == f2.read()

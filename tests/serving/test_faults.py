@@ -1,0 +1,342 @@
+"""Chaos tests for the fault-tolerant slot server (DESIGN.md §10).
+
+Every recovery arc is driven by *injected*, seeded faults (serving/faults.py)
+and asserted exactly: rows untouched by faults stay token-identical to a
+fault-free run (per-request PRNG keys make output slot/batch independent),
+targeted rows recover through quarantine -> bounded retry -> re-admission,
+backpressure sheds resolve to explicit terminal responses, and every event
+is visible as a counter in ``stats()``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import (EngineKilled, FaultEvent, FaultPlan, Request,
+                           SlotEngine, seeded_plan)
+from repro.serving.request import (FINISH_BUDGET, FINISH_EOS,
+                                   FINISH_FULL_REUSE, FINISH_SHED,
+                                   FINISH_TIMEOUT)
+
+P, N, V, R = 8, 12, 32, 6
+SUCCESS = {FINISH_EOS, FINISH_BUDGET, FINISH_FULL_REUSE}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=V)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(3, V, rng.randint(3, P + 1)).astype(np.int32)
+               for _ in range(R)]
+    keys = np.asarray(jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(5), i))(jnp.arange(R)))
+    return cfg, params, prompts, keys
+
+
+def _gen(temperature=1.0):
+    return GenerateConfig(max_new_tokens=N, eos_id=V - 1,
+                          temperature=temperature)
+
+
+def _reqs(prompts, keys, **kw):
+    return [Request(request_id=i, prompt=p, key=keys[i], max_new_tokens=N,
+                    **kw) for i, p in enumerate(prompts)]
+
+
+def _run(cfg, params, prompts, keys, *, gen=None, slots=2, req_kw=None,
+         draft=None, **ekw):
+    eng = SlotEngine(params, cfg, gen or _gen(), num_slots=slots,
+                     prompt_width=P, chunk_steps=4, draft=draft, **ekw)
+    for r in _reqs(prompts, keys, **(req_kw or {})):
+        eng.submit(r)
+    return eng, eng.run()
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    """Fault-free per-request tokens — the identity reference."""
+    cfg, params, prompts, keys = setup
+    _, resps = _run(cfg, params, prompts, keys, slots=3)
+    return {i: resps[i].tokens.copy() for i in resps}
+
+
+@pytest.fixture(scope="module")
+def baseline_greedy(setup):
+    cfg, params, prompts, keys = setup
+    _, resps = _run(cfg, params, prompts, keys, slots=3,
+                    gen=_gen(temperature=0.0))
+    return {i: resps[i].tokens.copy() for i in resps}
+
+
+def test_hardened_clean_run_identity(setup, baseline):
+    """The §10 machinery is free on the clean path: guards + deadlines +
+    bounded queue + an (empty) plan leave tokens bit-identical and every
+    fault counter at zero."""
+    cfg, params, prompts, keys = setup
+    eng, resps = _run(cfg, params, prompts, keys, faults=FaultPlan(),
+                      deadline_steps=10 ** 6, max_queue=64)
+    for i in range(R):
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+        assert resps[i].retries == 0
+    st = eng.stats()
+    for k, v in st.items():
+        if k.startswith("fault_"):
+            assert v == 0, (k, v)
+    assert st["timeouts"] == 0 and st["shed_requests"] == 0
+
+
+def test_nan_quarantine_retries_token_identical(setup, baseline):
+    """Injected non-finite logits quarantine the row in-chunk; the bounded
+    retry regenerates from the request's own PRNG key, so even targeted
+    rows end token-identical — and untargeted rows never notice."""
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("nan", at_step=0, request_id=0),
+                      FaultEvent("nan", at_step=6, request_id=3)])
+    eng, resps = _run(cfg, params, prompts, keys, faults=plan)
+    assert sorted(resps) == list(range(R))
+    for i in range(R):
+        assert resps[i].finish_reason in SUCCESS, (i, resps[i].finish_reason)
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    assert resps[0].retries == 1 and resps[3].retries == 1
+    st = eng.stats()
+    assert st["fault_injected"] == 2
+    assert st["fault_nan_events"] == 2
+    assert st["fault_quarantines"] == 2
+    assert st["quarantined_requests"] == 2
+    assert st["retried_requests"] == 2
+    assert plan.exhausted()
+
+
+def test_stall_trips_deadline_and_retries(setup, baseline):
+    """A stalled row (phantom slot aging) deterministically blows its
+    deadline, is reclaimed, and completes on retry; nobody else times out
+    because the deadline clock is per-occupancy."""
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("stall", at_step=0, request_id=0,
+                                 count=10 ** 6)])
+    eng, resps = _run(cfg, params, prompts, keys, faults=plan,
+                      deadline_steps=64)
+    for i in range(R):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    assert resps[0].retries == 1
+    st = eng.stats()
+    assert st["timeouts"] == 1 and st["fault_timeouts"] == 1
+    assert st["retried_requests"] == 1
+    assert st["fault_quarantines"] == 0
+
+
+def test_retries_exhausted_fails_with_clean_partial(setup, baseline):
+    """max_retries=0: the timed-out request fails out with an explicit
+    terminal response whose tokens are a clean prefix of the fault-free
+    output (best-effort partial, never garbage)."""
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("stall", at_step=0, request_id=0,
+                                 count=10 ** 6)])
+    eng, resps = _run(cfg, params, prompts, keys, faults=plan,
+                      deadline_steps=64, req_kw={"max_retries": 0})
+    r0 = resps[0]
+    assert r0.finish_reason == FINISH_TIMEOUT
+    assert 0 < r0.length < N
+    np.testing.assert_array_equal(r0.tokens, baseline[0][:r0.length])
+    for i in range(1, R):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    assert eng.stats()["fault_failed"] == 1
+
+
+def test_backpressure_reject(setup, baseline):
+    """Bounded queue, policy 'reject': newcomers beyond the bound resolve
+    immediately as shed; everyone admitted completes untouched."""
+    cfg, params, prompts, keys = setup
+    eng, resps = _run(cfg, params, prompts, keys, slots=1, max_queue=2,
+                      overflow="reject")
+    for i in (0, 1):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    for i in range(2, R):
+        assert resps[i].finish_reason == FINISH_SHED
+        assert resps[i].length == 0
+    st = eng.stats()
+    assert st["rejected_requests"] == 4 and st["shed_requests"] == 4
+    assert st["fault_sheds"] == 4 and st["fault_failed"] == 4
+    assert st["completed"] == 2
+
+
+def test_backpressure_shed_oldest(setup, baseline):
+    """Policy 'shed-oldest': the queue head is dropped to admit the
+    newcomer — the survivors are the most recent submissions."""
+    cfg, params, prompts, keys = setup
+    eng, resps = _run(cfg, params, prompts, keys, slots=1, max_queue=2,
+                      overflow="shed-oldest")
+    for i in (4, 5):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    for i in range(4):
+        assert resps[i].finish_reason == FINISH_SHED
+    st = eng.stats()
+    assert st["shed_requests"] == 4 and st["rejected_requests"] == 0
+
+
+def test_burst_overflows_bounded_queue(setup, baseline):
+    """An arrival burst through the fault plan's request_factory overflows
+    the bounded queue mid-run; backpressure sheds the excess and every
+    admitted request (base + surviving burst) still completes."""
+    cfg, params, prompts, keys = setup
+
+    def factory(i):
+        return Request(request_id=100 + i, prompt=prompts[i % R],
+                       key=np.asarray(jax.random.fold_in(
+                           jax.random.PRNGKey(99), i)),
+                       max_new_tokens=N)
+
+    plan = FaultPlan([FaultEvent("burst", at_step=0, count=5)],
+                     request_factory=factory)
+    gen = _gen()
+    eng = SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                     chunk_steps=4, faults=plan, max_queue=4,
+                     overflow="reject")
+    for r in _reqs(prompts[:2], keys):
+        eng.submit(r)
+    resps = eng.run()
+    for i in (0, 1):                       # base requests rode it out
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    burst_ids = [100 + i for i in range(5)]
+    shed = [i for i in burst_ids if resps[i].finish_reason == FINISH_SHED]
+    served = [i for i in burst_ids if resps[i].finish_reason in SUCCESS]
+    # the burst fires at the step-0 boundary, before first admission: the
+    # queue still holds both base requests, so 2 of 5 burst requests fit
+    assert len(shed) == 3 and len(served) == 2
+    st = eng.stats()
+    assert st["fault_injected"] == 1
+    assert st["shed_requests"] == len(shed)
+
+
+def test_draft_exception_disables_drafting_not_engine(setup, baseline_greedy):
+    """A draft source that raises loses its drafting privilege for that row;
+    the request decodes on plain and greedy tokens stay identical for every
+    row (drafting is an accelerator, never a semantic)."""
+    from repro.drafting import DraftConfig
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("draft_exc", at_step=0, request_id=0),
+                      FaultEvent("draft_exc", at_step=0, request_id=4)])
+    eng, resps = _run(cfg, params, prompts, keys, gen=_gen(temperature=0.0),
+                      draft=DraftConfig(kind="ngram", draft_k=4), faults=plan)
+    for i in range(R):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline_greedy[i])
+        assert resps[i].retries == 0
+    st = eng.stats()
+    assert st["fault_draft_errors"] == 2
+    assert st["fault_draft_disabled"] == 2
+    assert st["fault_quarantines"] == 0
+
+
+def test_nan_in_drafted_engine_quarantines_block(setup, baseline_greedy):
+    """The host-side non-finite guard on drafted chunks: the poisoned block
+    is rolled back, the row quarantined and retried — greedy tokens still
+    land identical."""
+    from repro.drafting import DraftConfig
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("nan", at_step=0, request_id=1)])
+    eng, resps = _run(cfg, params, prompts, keys, gen=_gen(temperature=0.0),
+                      draft=DraftConfig(kind="ngram", draft_k=4), faults=plan)
+    for i in range(R):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline_greedy[i])
+    assert resps[1].retries == 1
+    st = eng.stats()
+    assert st["fault_nan_events"] == 1
+    assert st["fault_quarantines"] == 1
+    assert st["fault_draft_disabled"] == 1     # ladder rung 1 for the row
+
+
+def test_second_strike_walks_impl_ladder(setup):
+    """Two quarantines of the same request step the decode impl down one
+    rung (auto -> blocked) — the engine-wide rung 2 after per-row
+    degradation was not enough — and the request still completes."""
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("nan", at_step=0, request_id=0),
+                      FaultEvent("nan", at_step=12, request_id=0)])
+    eng, resps = _run(cfg, params, prompts[:2], keys[:2], faults=plan,
+                      req_kw={"max_retries": 2})
+    assert resps[0].finish_reason in SUCCESS
+    assert resps[0].retries == 2
+    assert eng.cfg.decode_impl == "blocked"
+    st = eng.stats()
+    assert st["fault_impl_fallbacks"] == 1
+    assert st["fault_quarantines"] == 2
+
+
+def test_kill_raises_at_chunk_boundary(setup):
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("kill", at_step=8)])
+    gen = _gen()
+    eng = SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                     chunk_steps=4, faults=plan)
+    for r in _reqs(prompts, keys):
+        eng.submit(r)
+    with pytest.raises(EngineKilled):
+        eng.run()
+    assert eng.steps == 8                       # died at the boundary
+    assert eng.scheduler.num_active > 0         # mid-flight state to resume
+    assert eng.stats()["fault_injected"] == 1
+
+
+def test_seeded_chaos_plan(setup, baseline):
+    """The acceptance scenario: a seeded mixed plan (nan + stall + burst)
+    against a hardened engine.  Every non-shed request reaches a successful
+    terminal response, untargeted surviving rows are token-identical to the
+    fault-free run, and the whole story is visible in stats()."""
+    cfg, params, prompts, keys = setup
+
+    def factory(i):
+        return Request(request_id=100 + i, prompt=prompts[i % R],
+                       key=np.asarray(jax.random.fold_in(
+                           jax.random.PRNGKey(99), i)),
+                       max_new_tokens=N)
+
+    plan = seeded_plan(0, request_ids=range(R), max_step=12, n_nan=2,
+                       n_stall=1, n_burst=1, burst_size=3,
+                       request_factory=factory)
+    targeted = plan.targeted_requests()
+    assert targeted                             # the seed really targets
+
+    gen = _gen()
+    # queue bound sized so the 6 upfront submissions + the 3-burst fit:
+    # shed-oldest must not drop the fault targets before they reach a slot
+    # (backpressure-under-overflow has its own dedicated tests above)
+    eng = SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                     chunk_steps=4, faults=plan, deadline_steps=64,
+                     max_queue=9, overflow="shed-oldest")
+    for r in _reqs(prompts, keys, max_retries=3):
+        eng.submit(r)
+    resps = eng.run()
+
+    # burst baseline: same requests through a clean engine
+    clean = SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                       chunk_steps=4)
+    for i in range(3):
+        clean.submit(factory(i))
+    burst_base = {i: r.tokens.copy() for i, r in clean.run().items()}
+
+    all_ids = set(range(R)) | {100 + i for i in range(3)}
+    assert set(resps) == all_ids                # every request resolved
+    shed = {i for i in resps if resps[i].finish_reason == FINISH_SHED}
+    for i in all_ids - shed:
+        assert resps[i].finish_reason in SUCCESS, (i, resps[i].finish_reason)
+        if i not in targeted:
+            ref = baseline[i] if i < 100 else burst_base[i]
+            np.testing.assert_array_equal(resps[i].tokens, ref)
+    assert plan.exhausted()
+    st = eng.stats()
+    assert st["fault_injected"] == len(plan.events)
+    assert st["fault_nan_events"] + st["timeouts"] > 0
+    assert st["retried_requests"] > 0
+    assert eng.scheduler.idle

@@ -1,0 +1,201 @@
+"""Exact kill-and-resume (DESIGN.md §10): an engine killed mid-batch,
+snapshotted through checkpoint/io and restored into a freshly constructed
+engine produces token-identical output to an uninterrupted run — across
+vanilla sampling, speculative-prefix admission and the §9 drafted engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_server_state, save_server_state
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import (EngineKilled, FaultEvent, FaultPlan, Request,
+                           SlotEngine)
+
+P, N, V, R = 8, 12, 32, 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=V)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(3, V, rng.randint(3, P + 1)).astype(np.int32)
+               for _ in range(R)]
+    keys = np.asarray(jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(5), i))(jnp.arange(R)))
+    vkeys = np.asarray(jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(17), i))(jnp.arange(R)))
+    return cfg, params, prompts, keys, vkeys
+
+
+def _gen(temperature=1.0):
+    return GenerateConfig(max_new_tokens=N, eos_id=V - 1,
+                          temperature=temperature)
+
+
+def _make(cfg, params, gen, **kw):
+    return SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                      chunk_steps=4, **kw)
+
+
+def _submit_all(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+
+
+def _assert_identical(resumed, ref):
+    assert sorted(resumed) == sorted(ref)
+    for i in ref:
+        a, b = resumed[i], ref[i]
+        assert a.finish_reason == b.finish_reason, i
+        assert a.length == b.length and a.n_accepted == b.n_accepted, i
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logprobs, b.logprobs, atol=1e-6)
+
+
+def _kill_resume_roundtrip(tmp_path, mk_engine, mk_reqs, kill_at=8):
+    """Run to completion; rerun with an injected kill + save/load; compare."""
+    ref_eng = mk_engine()
+    _submit_all(ref_eng, mk_reqs())
+    ref = ref_eng.run()
+
+    killed = mk_engine(faults=FaultPlan([FaultEvent("kill", at_step=kill_at)]))
+    _submit_all(killed, mk_reqs())
+    with pytest.raises(EngineKilled):
+        killed.run()
+    assert killed.scheduler.num_active > 0      # genuinely mid-batch
+    assert len(killed.responses) < R
+    save_server_state(str(tmp_path / "snap"), killed,
+                      metadata={"requests": R})
+
+    resumed = mk_engine()
+    meta = load_server_state(str(tmp_path / "snap"), resumed)
+    assert meta["kind"] == "server_state" and meta["requests"] == R
+    resps = resumed.run()
+    _assert_identical(resps, ref)
+    st = resumed.stats()
+    assert st["completed"] == len([r for r in ref.values()
+                                   if r.finish_reason != "shed"])
+    return ref_eng, resumed
+
+
+def test_kill_resume_vanilla(setup, tmp_path):
+    cfg, params, prompts, keys, _ = setup
+    gen = _gen()
+
+    def reqs():
+        return [Request(request_id=i, prompt=prompts[i], key=keys[i],
+                        max_new_tokens=N) for i in range(R)]
+
+    # step 12: requests 0/1 already completed, 2/3 mid-decode, 4/5 queued —
+    # the snapshot carries responses, in-flight slots AND a queue at once
+    _kill_resume_roundtrip(tmp_path, lambda **kw: _make(cfg, params, gen, **kw),
+                           reqs, kill_at=12)
+
+
+def test_kill_resume_spec_prefix(setup, tmp_path):
+    """Mid-verification serving state (accepted prefixes, prefix logprobs,
+    verify keys of still-queued requests) round-trips exactly."""
+    cfg, params, prompts, keys, vkeys = setup
+    gen = _gen()
+    base_eng = _make(cfg, params, gen)
+    _submit_all(base_eng, [Request(request_id=i, prompt=prompts[i],
+                                   key=keys[i], max_new_tokens=N)
+                           for i in range(R)])
+    base = base_eng.run()
+
+    def reqs():
+        out = []
+        for i in range(R):
+            toks = np.asarray(base[i].tokens, np.int32)
+            half = max(1, len(toks) // 2)
+            bad = np.concatenate([toks[:half], (toks[half:] + 1) % V])
+            out.append(Request(
+                request_id=i, prompt=prompts[i], key=keys[i],
+                max_new_tokens=N, verify_key=vkeys[i],
+                draft_tokens=bad.astype(np.int32),
+                draft_logprobs=np.asarray(base[i].logprobs, np.float32),
+                draft_eos=False))
+        return out
+
+    ref_eng, resumed = _kill_resume_roundtrip(
+        tmp_path, lambda **kw: _make(cfg, params, gen, spec_prefix=True, **kw),
+        reqs, kill_at=4)
+    # the run actually exercised speculative-prefix admission
+    assert sum(r.n_accepted for r in resumed.responses.values()) > 0
+
+
+def test_kill_resume_drafted(setup, tmp_path):
+    """§9 draft state (controller EMAs, n-gram streams + corpora) resumes
+    bit-exactly: greedy drafted output is identical to uninterrupted."""
+    from repro.drafting import DraftConfig
+    cfg, params, prompts, keys, _ = setup
+    gen = _gen(temperature=0.0)
+
+    def reqs():
+        return [Request(request_id=i, prompt=prompts[i], key=keys[i],
+                        max_new_tokens=N,
+                        ngram_corpus=[prompts[(i + 1) % R]])
+                for i in range(R)]
+
+    ref_eng, resumed = _kill_resume_roundtrip(
+        tmp_path,
+        lambda **kw: _make(cfg, params, gen,
+                           draft=DraftConfig(kind="ngram", draft_k=4), **kw),
+        reqs, kill_at=4)
+    assert resumed.stats()["draft_proposed"] > 0
+
+
+def test_kill_resume_preserves_recovery_state(setup, tmp_path):
+    """A kill landing between a quarantine and the retry's completion: the
+    retry draft, nan strike count and fault counters all survive the
+    round-trip and the retried request still completes."""
+    cfg, params, prompts, keys, _ = setup
+    gen = _gen()
+
+    def reqs():
+        return [Request(request_id=i, prompt=prompts[i], key=keys[i],
+                        max_new_tokens=N) for i in range(R)]
+
+    ref_eng = _make(cfg, params, gen,
+                    faults=FaultPlan([FaultEvent("nan", at_step=0,
+                                                 request_id=0)]))
+    _submit_all(ref_eng, reqs())
+    ref = ref_eng.run()
+
+    killed = _make(cfg, params, gen,
+                   faults=FaultPlan([FaultEvent("nan", at_step=0,
+                                                request_id=0),
+                                     FaultEvent("kill", at_step=8)]))
+    _submit_all(killed, reqs())
+    with pytest.raises(EngineKilled):
+        killed.run()
+    assert killed.fault_stats.nan_events == 1   # quarantine before the kill
+    save_server_state(str(tmp_path / "snap2"), killed)
+
+    resumed = _make(cfg, params, gen)
+    load_server_state(str(tmp_path / "snap2"), resumed)
+    resps = resumed.run()
+    _assert_identical(resps, ref)
+    assert resps[0].retries == 1
+    st = resumed.stats()
+    assert st["fault_nan_events"] == 1 and st["retried_requests"] == 1
+
+
+def test_state_dict_is_all_arrays(setup):
+    """The snapshot is a pure array pytree — the contract that lets the
+    generic atomic pytree writer carry it."""
+    cfg, params, prompts, keys, _ = setup
+    eng = _make(cfg, params, _gen())
+    _submit_all(eng, [Request(request_id=i, prompt=prompts[i], key=keys[i],
+                              max_new_tokens=N) for i in range(R)])
+    eng.run(max_chunks=1)
+    leaves = jax.tree.leaves(eng.state_dict())
+    assert leaves
+    for leaf in leaves:
+        assert isinstance(leaf, (np.ndarray, np.generic, jnp.ndarray)), \
+            type(leaf)
