@@ -1,0 +1,152 @@
+"""Observability overhead benchmark (DESIGN.md §11): the slot engine serves
+an identical request set untraced and fully traced (sample_rate=1.0,
+metrics + per-request span lanes) and the traced arm must stay within 3%
+wall-clock.  Writes BENCH_obs.json.
+
+The arms are interleaved A/B and each takes its min-of-k, so the ratio
+compares best-case against best-case under the same jit caches; tokens are
+asserted bit-identical between arms (the §11 zero-overhead contract, here
+measured rather than lowered-HLO-checked).  ``traced_vs_untraced_speedup``
+(~1.0 by construction) is the regression-guarded key: a collapse means
+instrumentation started doing real work on the hot path.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.obs import Tracer
+from repro.obs.export import chrome_trace, prometheus_text
+from repro.serving import Request, SlotEngine
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_obs.json")
+SLOTS = 4
+PROMPT_LEN = 16
+MAX_OVERHEAD_PCT = 3.0
+
+
+def _setup(N, seed=0):
+    cfg = ModelConfig(name="bench", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                      max_seq_len=max(256, PROMPT_LEN + 2 * N))
+    params = M.init_lm(jax.random.PRNGKey(seed), cfg)
+    gen = GenerateConfig(max_new_tokens=N, eos_id=VOCAB_SIZE - 1)
+    return cfg, params, gen
+
+
+def _requests(n_requests, N, seed=0):
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (n_requests, PROMPT_LEN), 3,
+        VOCAB_SIZE - 1))
+    keys = np.asarray(jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.PRNGKey(seed + 2), i))(
+        jnp.arange(n_requests)))
+    return [Request(request_id=i, prompt=prompts[i].astype(np.int32),
+                    key=keys[i], max_new_tokens=N)
+            for i in range(n_requests)]
+
+
+def _serve(cfg, params, gen, n_requests, N, tracer):
+    eng = SlotEngine(params, cfg, gen, num_slots=SLOTS,
+                     prompt_width=PROMPT_LEN, tracer=tracer)
+    for r in _requests(n_requests, N):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    resps = eng.run()
+    dt = time.perf_counter() - t0
+    toks = {i: resps[i].tokens.tolist() for i in resps}
+    return dt, toks, eng
+
+
+def run(smoke: bool = False, out_path: str = OUT_PATH) -> dict:
+    N = 32 if smoke else 64
+    n_requests = 12 if smoke else 32
+    # min-of-k of two identically-floored arms: k must be large enough to
+    # reach the floor on both sides, or scheduler noise masquerades as
+    # overhead at this (~100 ms/run) scale
+    repeats = 6 if smoke else 8
+    cfg, params, gen = _setup(N)
+
+    _serve(cfg, params, gen, SLOTS, N, None)             # compile warmup
+
+    t_off, t_on = [], []
+    toks_off = toks_on = None
+    last_traced = None
+
+    def _round(k):
+        nonlocal toks_off, toks_on, last_traced
+        for _ in range(k):                               # interleaved A/B
+            dt, toks_off, _ = _serve(cfg, params, gen, n_requests, N, None)
+            t_off.append(dt)
+            tracer = Tracer(enabled=True, sample_rate=1.0)
+            dt, toks_on, eng = _serve(cfg, params, gen, n_requests, N, tracer)
+            t_on.append(dt)
+            last_traced = (tracer, eng)
+
+    _round(repeats)
+    # noisy shared-CPU runners: if either arm's min hasn't converged the
+    # ratio can read a few % high; extend rather than assert on one sample
+    for _ in range(2):
+        if min(t_on) / min(t_off) - 1.0 < MAX_OVERHEAD_PCT / 100.0:
+            break
+        _round(repeats)
+
+    assert toks_on == toks_off, "traced serving changed the tokens"
+    tracer, eng = last_traced
+    n_spans = len(tracer.spans)
+    assert any(t.startswith("req/") for t in tracer.tracks())
+
+    t0 = time.perf_counter()
+    doc = chrome_trace(tracer)
+    text = prometheus_text(eng.metrics_registry())
+    t_export = time.perf_counter() - t0
+
+    best_off, best_on = min(t_off), min(t_on)
+    overhead_pct = (best_on / best_off - 1.0) * 100.0
+    record = {
+        "backend": jax.default_backend(),
+        "slots": SLOTS, "requests": n_requests, "max_new_tokens": N,
+        "repeats": repeats,
+        "untraced": {"time_s": best_off, "all_times_s": t_off},
+        "traced": {"time_s": best_on, "all_times_s": t_on,
+                   "spans": n_spans, "trace_events": len(doc["traceEvents"]),
+                   "prom_lines": text.count("\n"),
+                   "export_time_s": t_export},
+        "overhead_pct": overhead_pct,
+        "traced_vs_untraced_speedup": best_off / best_on,
+    }
+    emit("obs/untraced", best_off * 1e6, f"reqs={n_requests}")
+    emit("obs/traced", best_on * 1e6,
+         f"spans={n_spans};overhead={overhead_pct:.2f}%")
+    emit("obs/export", t_export * 1e6,
+         f"events={len(doc['traceEvents'])}")
+    assert overhead_pct < MAX_OVERHEAD_PCT, \
+        f"traced overhead {overhead_pct:.2f}% exceeds {MAX_OVERHEAD_PCT}%"
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("obs/json", 0.0, out_path)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests, smaller budgets")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

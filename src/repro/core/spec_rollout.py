@@ -161,6 +161,40 @@ def use_drafting(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
     return spec.draft.enabled and M.supports_drafting(cfg, model_kwargs)
 
 
+def _emit_rollout_obs(spec, metrics, t0, stages, n=None):
+    """§11 per-epoch rollout telemetry: stage spans on the 'rollout' lane
+    plus registry histograms/counters for the paper's headline diagnostics
+    (reuse length, acceptance, lenience).  Pure host side — the stage
+    endpoints reuse the perf_counter stamps the metrics dict already took
+    at existing block_until_ready boundaries, so with the default
+    NULL_TRACER and an idle registry this adds no syncs and no clock reads
+    beyond a few dict ops."""
+    from repro.obs import get_registry, get_tracer
+    tr = get_tracer()
+    reg = get_registry()
+    step = int(metrics.get("step", 0))
+    t_end = max((ts + dur) for _, ts, dur in stages)
+    if tr.enabled:
+        tr.complete("rollout", "rollout", t0, t_end, cat="rollout",
+                    step=step, n_reused=metrics.get("n_reused", 0),
+                    accept_rate=metrics.get("accept_rate", 0.0))
+        for name, ts, dur in stages:
+            tr.complete(name, "rollout", ts, ts + dur, cat="rollout",
+                        step=step)
+    for name, ts, dur in stages:
+        reg.observe(f"rollout.{name}_s", dur)
+    reg.observe("rollout.step_s", t_end - t0)
+    reg.observe("rollout.accept_rate", metrics.get("accept_rate", 0.0))
+    reg.set("rollout.lenience", float(spec.lenience)
+            if math.isfinite(spec.lenience) else 0.0)
+    reg.set("rollout.step", float(step), agg="max")
+    reg.inc("rollout.generated_tokens", metrics.get("n_generated", 0))
+    reg.inc("rollout.reused_tokens", metrics.get("n_reused", 0))
+    if n is not None:
+        for v in np.asarray(n).reshape(-1):
+            reg.observe("rollout.reuse_len", float(v))
+
+
 def _draft_metrics(stats=None) -> Dict[str, float]:
     """Rollout-metric view of a DraftStats (zeros when drafting is off).
 
@@ -259,6 +293,8 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
             assembly_time=0.0, compact_time=0.0, decode_time=rollout_time,
             one_pass=0.0, prefill_passes=1.0,
             **_draft_metrics(out.get("stats")))
+        _emit_rollout_obs(spec, metrics, t0,
+                          [("generate", t0, rollout_time)])
         _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
         return RolloutBatch(
             prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
@@ -411,6 +447,12 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         prefill_passes=prefill_passes,
         **_draft_metrics(cont.get("stats") if isinstance(cont, dict)
                          else None))
+    _emit_rollout_obs(spec, metrics, t0,
+                      [("verify", tv0, verify_time),
+                       ("compact", tc0, compact_time),
+                       ("decode", td0, decode_time),
+                       ("assembly", ta0, assembly_time)],
+                      n=np.asarray(n))
     return RolloutBatch(
         prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
         response=np.asarray(resp), response_mask=np.asarray(resp_mask),

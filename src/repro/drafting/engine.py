@@ -113,10 +113,21 @@ class _DraftLoop:
         self.B, self.N = B, N
 
     def run(self) -> Dict[str, jnp.ndarray]:
+        # §11: the global tracer draws one span per draft macro-step on the
+        # 'draft' lane (proposal + forward + harvest — the harvest's
+        # np.asarray is the loop's existing host sync, so the end stamp
+        # adds no new blocking); the acceptance time series rides the span
+        # args.  Clock reads are guarded on tr.enabled — a NULL_TRACER run
+        # takes none.
+        from repro.obs import get_registry, get_tracer
+        tr = get_tracer()
+        reg = get_registry()
+        macro_step = 0
         while True:
             done_np = np.asarray(self.done)
             if done_np.all():
                 break
+            t0 = tr.now() if tr.enabled else 0.0
             cur_np = np.asarray(self.cur_tok)
             dt = np.zeros((self.B, self.K), np.int32)
             dl = np.zeros((self.B,), np.int32)
@@ -161,11 +172,19 @@ class _DraftLoop:
             # rows, so tokens_per_forward is a per-row quantity with 1.0 as
             # the vanilla baseline (a live vanilla row emits exactly one
             # token per forward it participates in)
+            n_prop, n_acc = int(proposed.sum()), int(accepted.sum())
             self.stats.add_step(forwards=int((~done_np).sum()),
-                                proposed=int(proposed.sum()),
-                                accepted=int(accepted.sum()),
+                                proposed=n_prop, accepted=n_acc,
                                 emitted=int(emitted.sum()),
                                 draft_forwards=int((dl > 0).sum()))
+            reg.observe("draft.proposed_per_step", n_prop)
+            reg.observe("draft.accepted_per_step", n_acc)
+            if tr.enabled:
+                tr.complete("draft_step", "draft", t0, tr.now(), cat="draft",
+                            step=macro_step, live=int((~done_np).sum()),
+                            proposed=n_prop, accepted=n_acc,
+                            emitted=int(emitted.sum()))
+            macro_step += 1
         return self._pack()
 
     def _pack(self) -> Dict[str, jnp.ndarray]:

@@ -15,6 +15,15 @@ positions and seed logits, which is how the one-pass speculative path
 continues straight out of verification with zero redundant prefill.
 Left-padded batches, dense caches — the TPU-idiomatic replacement for vLLM's
 continuous batching (see DESIGN.md §3).
+
+Observability (DESIGN.md §11): ``generate`` and ``resume_from_cache`` are
+themselves ``jax.jit`` programs, so the §11 tracer deliberately does NOT
+reach inside them — host-side tracer calls traced into the jit graph would
+either fail or bake ops into the compiled program, violating the
+zero-overhead contract.  Their timings are spanned at the call sites
+(core/spec_rollout emits the 'decode'/'generate' stage spans around its
+existing ``block_until_ready`` boundaries), and the §9 drafted loops —
+which ARE host-driven — carry their own per-macro-step spans.
 """
 from __future__ import annotations
 

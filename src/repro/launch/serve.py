@@ -135,6 +135,17 @@ def main(argv=None):
     p.add_argument("--overflow", choices=["reject", "shed-oldest"],
                    default="reject",
                    help="backpressure policy when the queue is full")
+    p.add_argument("--trace-dir", default="",
+                   help="§11 observatory: write trace.json (Chrome trace, "
+                        "load at ui.perfetto.dev), events.jsonl and "
+                        "metrics.prom here after the run")
+    p.add_argument("--trace-sample-rate", type=float, default=1.0,
+                   help="fraction of requests given their own trace lane "
+                        "(deterministic per-request hash)")
+    p.add_argument("--metrics", type=int, default=0, metavar="PORT",
+                   help="serve Prometheus text exposition on "
+                        "http://localhost:PORT/metrics during the run "
+                        "(0 = off)")
     p.add_argument("--state-path", default="",
                    help="on SIGTERM/Ctrl-C, snapshot the exact server state "
                         "here (checkpoint/io.save_server_state) for "
@@ -162,7 +173,15 @@ def main(argv=None):
         from repro.drafting import DraftConfig
         draft = DraftConfig(kind="ngram", draft_k=args.draft)
 
-    def make_engine(spec_prefix: bool):
+    # §11: one explicit tracer for the MAIN serving engine only (the
+    # spec-prefix warm pass below builds its cache untraced, keeping the
+    # trace about the speculative serve itself)
+    tracer = None
+    if args.trace_dir:
+        from repro.obs import Tracer
+        tracer = Tracer(enabled=True, sample_rate=args.trace_sample_rate)
+
+    def make_engine(spec_prefix: bool, traced: bool = False):
         return make_slot_engine(params, cfg, gen, mesh=mesh,
                                 num_slots=args.slots,
                                 prompt_width=args.prompt_len,
@@ -170,7 +189,8 @@ def main(argv=None):
                                 draft=draft,
                                 deadline_steps=args.deadline_steps or None,
                                 max_queue=args.max_queue or None,
-                                overflow=args.overflow)
+                                overflow=args.overflow,
+                                tracer=tracer if traced else None)
 
     rng = random.Random(args.seed)
     problems = generate_problems(MathTaskConfig(num_problems=n_requests))
@@ -229,7 +249,14 @@ def main(argv=None):
                 r.ngram_corpus = [e.tokens]
         t0 = time.time()
 
-    engine = make_engine(spec_prefix=args.spec_prefix)
+    engine = make_engine(spec_prefix=args.spec_prefix, traced=True)
+
+    metrics_srv = None
+    if args.metrics:
+        from repro.obs.export import start_metrics_server
+        metrics_srv = start_metrics_server(engine.metrics_registry,
+                                           args.metrics)
+        print(f"metrics: http://localhost:{args.metrics}/metrics")
 
     # §10 graceful shutdown: SIGTERM folds into KeyboardInterrupt, and an
     # interrupted serve stops at a chunk boundary (run() only yields control
@@ -263,6 +290,21 @@ def main(argv=None):
             print("\ninterrupted: draining without snapshot "
                   "(--state-path to keep serving state)")
     dt = time.time() - t0
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
+    if args.trace_dir:
+        import os
+        from repro.obs import export as obs_export
+        os.makedirs(args.trace_dir, exist_ok=True)
+        reg = engine.metrics_registry()
+        obs_export.write_chrome_trace(
+            os.path.join(args.trace_dir, "trace.json"), tracer)
+        obs_export.write_jsonl(
+            os.path.join(args.trace_dir, "events.jsonl"), tracer, reg)
+        obs_export.write_prometheus(
+            os.path.join(args.trace_dir, "metrics.prom"), reg)
+        print(f"trace: {args.trace_dir}/trace.json (load at "
+              f"ui.perfetto.dev), events.jsonl, metrics.prom")
     s = engine.stats()
     n_gen = int(s["generated_tokens"])
     shards = int(s.get("num_shards", 1))

@@ -70,7 +70,27 @@ def main(argv=None):
     p.add_argument("--watchdog-max-collect-time", type=float,
                    default=float("inf"),
                    help="rollout stall threshold in seconds")
+    p.add_argument("--trace-dir", default="",
+                   help="§11 observatory: write trace.json (Chrome trace, "
+                        "load at ui.perfetto.dev), events.jsonl and "
+                        "metrics.prom here after the run")
+    p.add_argument("--trace-sample-rate", type=float, default=1.0,
+                   help="fraction of slot-served requests given their own "
+                        "trace lane (deterministic per-request hash)")
+    p.add_argument("--metrics", type=int, default=0, metavar="PORT",
+                   help="serve Prometheus text exposition on "
+                        "http://localhost:PORT/metrics during the run "
+                        "(0 = off)")
     args = p.parse_args(argv)
+
+    # §11: install the process-global tracer/registry BEFORE the trainer is
+    # built so the rollout, drafting and trainer stage hooks all land in it
+    tracer = None
+    if args.trace_dir or args.metrics:
+        from repro.obs import MetricsRegistry, Tracer, configure
+        tracer = Tracer(enabled=bool(args.trace_dir),
+                        sample_rate=args.trace_sample_rate)
+        configure(tracer=tracer, registry=MetricsRegistry())
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -101,6 +121,12 @@ def main(argv=None):
             max_collect_time=args.watchdog_max_collect_time))
     tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg,
                  watchdog=watchdog)
+    metrics_srv = None
+    if args.metrics:
+        from repro.obs import get_registry
+        from repro.obs.export import start_metrics_server
+        metrics_srv = start_metrics_server(get_registry, args.metrics)
+        print(f"metrics: http://localhost:{args.metrics}/metrics")
     mesh_desc = (f"{args.mesh_data}x{args.mesh_model}" if tr.mesh is not None
                  else "off")
     print(f"arch={cfg.name} devices={jax.device_count()} mesh={mesh_desc} "
@@ -115,6 +141,21 @@ def main(argv=None):
                      f"draft_acc={m.get('draft_accept_rate', 0.0):.2f} "
                      f"draft_len={m.get('draft_mean_len', 0.0):.2f}")
         print(line, flush=True)
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
+    if args.trace_dir:
+        import os
+        from repro.obs import export as obs_export, get_registry
+        os.makedirs(args.trace_dir, exist_ok=True)
+        reg = get_registry()
+        obs_export.write_chrome_trace(
+            os.path.join(args.trace_dir, "trace.json"), tracer)
+        obs_export.write_jsonl(
+            os.path.join(args.trace_dir, "events.jsonl"), tracer, reg)
+        obs_export.write_prometheus(
+            os.path.join(args.trace_dir, "metrics.prom"), reg)
+        print(f"trace: {args.trace_dir}/trace.json (load at "
+              f"ui.perfetto.dev), events.jsonl, metrics.prom")
     return 0
 
 

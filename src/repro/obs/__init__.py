@@ -1,0 +1,47 @@
+"""Rollout observatory: span tracing + unified metrics (DESIGN.md §11).
+
+Components that are constructed explicitly (SlotEngine, MeshSlotServer)
+take a ``tracer=`` kwarg; code deep in the loop (spec_rollout, the drafted
+decode loop, the trainer) reads the process-global tracer/registry below,
+which launch scripts set once via ``configure`` before building anything.
+The defaults (``NULL_TRACER``, an idle registry) satisfy the zero-overhead
+contract: every recording call early-returns.
+"""
+from .trace import NULL_TRACER, Event, Span, Tracer
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry, Ratio,
+                       extend_summary)
+from . import export  # noqa: F401  (re-exported submodule)
+
+_TRACER: Tracer = NULL_TRACER
+_REGISTRY: MetricsRegistry = MetricsRegistry()
+
+
+def get_tracer() -> Tracer:
+    return _TRACER
+
+
+def get_registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def configure(tracer: Tracer = None,
+              registry: MetricsRegistry = None) -> None:
+    """Install a process-global tracer and/or registry (launch scripts)."""
+    global _TRACER, _REGISTRY
+    if tracer is not None:
+        _TRACER = tracer
+    if registry is not None:
+        _REGISTRY = registry
+
+
+def reset() -> None:
+    """Back to the inert defaults (tests)."""
+    global _TRACER, _REGISTRY
+    _TRACER = NULL_TRACER
+    _REGISTRY = MetricsRegistry()
+
+
+__all__ = ["Tracer", "Span", "Event", "NULL_TRACER",
+           "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ratio",
+           "extend_summary", "export",
+           "get_tracer", "get_registry", "configure", "reset"]

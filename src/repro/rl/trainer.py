@@ -147,7 +147,8 @@ class Trainer:
     def __init__(self, model_cfg: ModelConfig, rl: RLConfig, spec: SpecConfig,
                  dataset: PromptDataset, key,
                  critic_cfg: Optional[ModelConfig] = None,
-                 lenience_schedule=None, mesh=None, watchdog=None):
+                 lenience_schedule=None, mesh=None, watchdog=None,
+                 tracer=None):
         self.cfg = model_cfg
         self.rl = rl
         self.spec = spec
@@ -200,6 +201,28 @@ class Trainer:
         # restore-last-good + skip-the-batch on non-finite loss or a
         # stalled rollout stage.  None = no monitoring (the default).
         self.watchdog = watchdog
+        # §11 observatory: stage spans land on the 'trainer' lane; stage
+        # latencies feed train.* histograms in the global registry.  The
+        # default NULL_TRACER records nothing and every stamp below reuses
+        # a perf_counter reading the times dict already takes.
+        from repro.obs import get_tracer
+        self.tracer = tracer if tracer is not None else get_tracer()
+
+    # ---------------------------------------------------------------- §11
+
+    def _stage(self, name: str, t0: float, times: Dict[str, float],
+               key: str) -> float:
+        """Close a trainer stage: record its duration under ``key``, emit a
+        'trainer'-lane span and a train.* histogram sample.  Returns the end
+        stamp (= the next stage's natural start)."""
+        from repro.obs import get_registry
+        t1 = time.perf_counter()
+        times[key] = t1 - t0
+        if self.tracer.enabled:
+            self.tracer.complete(name, "trainer", t0, t1, cat="train",
+                                 step=self.step_idx)
+        get_registry().observe(f"train.{name}_s", t1 - t0)
+        return t1
 
     # -------------------------------------------------------------- rollout
     def _rollout_once(self, batch: PromptBatch) -> RolloutBatch:
@@ -222,7 +245,9 @@ class Trainer:
         rb = self._rollout_once(batch)
         t_reward0 = time.perf_counter()
         rewards = batch_rewards(rb.response, rb.length, batch.answers)
-        reward_time = time.perf_counter() - t_reward0
+        rtimes: Dict[str, float] = {}
+        self._stage("reward", t_reward0, rtimes, "reward_time")
+        reward_time = rtimes["reward_time"]
 
         if self.rl.algo == "dapo" and self.rl.dynamic_sampling:
             G = self.rl.group_size
@@ -244,7 +269,7 @@ class Trainer:
 
         stage_times = dict(rb.metrics)
         stage_times["reward_time"] = reward_time
-        stage_times["collect_time"] = time.perf_counter() - t0
+        self._stage("collect", t0, stage_times, "collect_time")
         return batch, rb, rewards, stage_times
 
     # -------------------------------------------------------------- training
@@ -254,6 +279,7 @@ class Trainer:
                                               self.rl.prompts_per_batch,
                                               self.rl.group_size,
                                               epoch=self.step_idx)
+        t_step0 = time.perf_counter()
         batch, rb, rewards, times = self._collect(batch)
         B, P = rb.prompt.shape
         N = rb.response.shape[1]
@@ -277,7 +303,7 @@ class Trainer:
                                         full_mask, P, self.rl.temperature,
                                         self.rl.top_p)
         lp_old = jax.block_until_ready(lp_old)
-        times["old_logprob_time"] = time.perf_counter() - t0
+        self._stage("old_logprob", t0, times, "old_logprob_time")
 
         ref_lp = jnp.zeros_like(lp_old)
         if self.ref_params is not None:
@@ -285,7 +311,7 @@ class Trainer:
             ref_lp, _ = _old_logprobs(self.ref_params, self.cfg, full_tokens,
                                       full_mask, P, self.rl.temperature,
                                       self.rl.top_p)
-            times["ref_time"] = time.perf_counter() - t0
+            self._stage("ref", t0, times, "ref_time")
 
         # ---- advantages ----------------------------------------------------
         t0 = time.perf_counter()
@@ -294,7 +320,7 @@ class Trainer:
             tv = time.perf_counter()
             values = forward_values(self.critic_params, self.critic_cfg,
                                     full_tokens, full_mask)[:, P:]
-            times["values_time"] = time.perf_counter() - tv
+            self._stage("values", tv, times, "values_time")
             rew_tok = terminal_reward_to_tokens(rew, lengths, N)
             adv, returns = gae_advantages(rew_tok, values, resp_mask,
                                           gamma=self.rl.gamma,
@@ -305,7 +331,7 @@ class Trainer:
         else:
             scalar_adv = group_relative_advantages(rew, self.rl.group_size)
             adv = scalar_adv[:, None] * resp_mask.astype(jnp.float32)
-        times["adv_time"] = time.perf_counter() - t0
+        self._stage("adv", t0, times, "adv_time")
 
         # ---- updates -------------------------------------------------------
         if self.rl.algo == "ppo":
@@ -314,7 +340,7 @@ class Trainer:
                 self.critic_params, self.critic_opt_state, self.critic_cfg,
                 self.rl.critic_optim, full_tokens, full_mask, P, returns,
                 old_values, resp_mask)
-            times["update_critic_time"] = time.perf_counter() - t0
+            self._stage("update_critic", t0, times, "update_critic_time")
         else:
             cinfo = {}
 
@@ -324,7 +350,13 @@ class Trainer:
             full_tokens, full_mask, P, lp_old, adv, resp_mask, ref_lp,
             self.rl.temperature, self.rl.top_p)
         jax.block_until_ready(info["loss"])
-        times["update_actor_time"] = time.perf_counter() - t0
+        t_end = self._stage("update_actor", t0, times, "update_actor_time")
+        from repro.obs import get_registry
+        get_registry().observe("train.train_step_s", t_end - t_step0)
+        if self.tracer.enabled:
+            # whole-step span encloses the stage spans on the same lane
+            self.tracer.complete("train_step", "trainer", t_step0, t_end,
+                                 cat="train", step=self.step_idx)
 
         self.lenience_schedule.update(abs(float(info.get("approx_kl", 0.0))))
         metrics = {
@@ -338,6 +370,15 @@ class Trainer:
             **{k: float(v) for k, v in cinfo.items()},
             **{k: float(v) for k, v in times.items() if isinstance(v, (int, float))},
         }
+        # §11 schema fix: the step log is routed through a MetricsRegistry
+        # so the trainer shares the audited flat-float namespace with
+        # SlotEngine.stats()/MeshSlotServer.stats() (one as_dict view, no
+        # ad-hoc key drift between surfaces)
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        for k, v in metrics.items():
+            reg.set(k, float(v))
+        metrics = reg.as_dict()
         if self.watchdog is not None:
             # may restore params/opt_state/cache to the last snapshot (the
             # poisoned update is undone; step_idx still advances below, so

@@ -16,6 +16,13 @@ wraps ``train_step`` output:
   sampling moves on, so the poisoned batch is skipped rather than
   replayed into the same failure.
 
+Stall detection is adaptive as well as absolute (§11): beyond the fixed
+``max_collect_time`` ceiling, a step is stalled when its collect time
+exceeds ``stall_p95_mult`` × the p95 of the run's own healthy collect
+times (a log-bucketed ``obs.Histogram``; armed only once
+``stall_min_samples`` healthy steps have been seen, so short tests and
+cold-start compile steps never trip it).
+
 Counters (snapshots / restores / skips) ride the step metrics dict, next
 to the serving layer's fault_ counters — recovery is observable from the
 training log, not from log archaeology.
@@ -41,6 +48,8 @@ class WatchdogConfig:
     snapshot_every: int = 10                 # healthy-step snapshot cadence
     max_collect_time: float = float("inf")   # rollout-stall threshold (s)
     max_restores: int = 3                    # give up (raise) past this
+    stall_p95_mult: float = 10.0             # adaptive: > mult * p95 = stall
+    stall_min_samples: int = 8               # healthy samples to arm p95
 
 
 class TrainWatchdog:
@@ -54,6 +63,8 @@ class TrainWatchdog:
         self.nonfinite_steps = 0
         self.stalled_steps = 0
         self.skipped_no_snapshot = 0
+        from repro.obs import Histogram
+        self._collect_hist = Histogram()     # healthy collect times (§11)
 
     # ------------------------------------------------------------- plumbing
 
@@ -119,8 +130,16 @@ class TrainWatchdog:
             v = metrics.get(k)
             if v is not None and not math.isfinite(float(v)):
                 return "nonfinite"
-        if metrics.get("collect_time", 0.0) > self.cfg.max_collect_time:
+        ct = metrics.get("collect_time", 0.0)
+        if ct > self.cfg.max_collect_time:
             return "stall"
+        # adaptive threshold: the run's own p95 rollout time (not a single
+        # step) decides what "far past normal" means; p95 > 0 guards the
+        # all-zero-history case
+        if self._collect_hist.count >= self.cfg.stall_min_samples:
+            p95 = self._collect_hist.percentile(95)
+            if p95 > 0 and ct > self.cfg.stall_p95_mult * p95:
+                return "stall"
         return None
 
     def after_step(self, trainer, metrics: Dict[str, float]) -> None:
@@ -128,6 +147,9 @@ class TrainWatchdog:
         in place with watchdog counters and the recovery verdict)."""
         why = self._poisoned(metrics)
         if why is None:
+            ct = float(metrics.get("collect_time", 0.0))
+            if ct > 0:
+                self._collect_hist.record(ct)    # healthy samples only
             if self.snapshots == 0 or \
                     trainer.step_idx % max(1, self.cfg.snapshot_every) == 0:
                 self.snapshot(trainer)
@@ -142,6 +164,10 @@ class TrainWatchdog:
                     f"({self.cfg.max_restores}) exhausted")
             if self.restore(trainer):
                 metrics["watchdog_restored"] = 1.0
+                from repro.obs import get_tracer
+                get_tracer().event("watchdog_restore", "trainer",
+                                   cat="fault", reason=why,
+                                   step=trainer.step_idx)
             else:
                 # nothing to restore yet — record the skip; the poisoned
                 # update stands but the batch still advances past
@@ -154,4 +180,5 @@ class TrainWatchdog:
                 f"{prefix}nonfinite_steps": float(self.nonfinite_steps),
                 f"{prefix}stalled_steps": float(self.stalled_steps),
                 f"{prefix}skipped_no_snapshot":
-                    float(self.skipped_no_snapshot)}
+                    float(self.skipped_no_snapshot),
+                f"{prefix}collect_p95": self._collect_hist.percentile(95)}

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.metrics import FaultStats
 from repro.core.verify import verify_and_prefill
+from repro.obs import MetricsRegistry, get_tracer
 from repro.engine.generate import GenerateConfig, positions_from_mask
 from repro.engine.sampling import sample, split_key
 from repro.models import model as M
@@ -208,7 +209,8 @@ class SlotEngine:
                  slot_write_impl: str = "auto", draft=None, mesh=None,
                  faults: Optional[FaultPlan] = None,
                  deadline_steps: Optional[int] = None,
-                 max_queue: Optional[int] = None, overflow: str = "reject"):
+                 max_queue: Optional[int] = None, overflow: str = "reject",
+                 tracer=None, obs_label: str = ""):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
             "extras — use fixed-batch generate otherwise"
@@ -279,12 +281,27 @@ class SlotEngine:
         self.time_admit = 0.0
         self.time_slot_write = 0.0
         self.time_decode = 0.0
+        # §11 observatory: the tracer draws request/engine lanes, the
+        # engine-owned registry holds the latency histograms stats() can't
+        # derive from counters (TTFT, queue wait, per-token decode time).
+        # Both are inert by default — every recording call early-returns on
+        # NULL_TRACER and histograms only fill where observe() runs, so the
+        # clean path takes no extra clock reads or syncs (timestamps below
+        # reuse the perf_counter values the time_* accounting already takes).
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.obs_label = str(obs_label)     # "shard<i>/" under a mesh server
+        self._etrack = f"{self.obs_label}engine"
+        self.metrics = MetricsRegistry()
         self._t0 = time.perf_counter()
 
     # ------------------------------------------------------------- frontend
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    def _abs(self, rel: float) -> float:
+        """Engine-relative seconds → the tracer's perf_counter timeline."""
+        return self._t0 + rel
 
     def submit(self, req: Request) -> None:
         assert len(req.prompt) <= self.P, (len(req.prompt), self.P)
@@ -330,34 +347,80 @@ class SlotEngine:
                 break
         return self.responses
 
-    def stats(self) -> Dict[str, float]:
+    def metrics_registry(self) -> MetricsRegistry:
+        """The engine's full telemetry as ONE typed registry (§11).
+
+        Every scheduler lifecycle counter, §9 draft counter and §10 fault
+        counter lands here with its merge semantics attached — counters
+        sum, peak gauges max, ratios re-derive from summed parts — so
+        ``MeshSlotServer`` gathers shards by a single type-driven
+        ``MetricsRegistry.merge`` instead of a hand-listed key walk (the
+        schema-drift fix: a new counter can no longer silently vanish from
+        the gathered view).  ``stats()`` is just ``as_dict()`` of this.
+        """
         from repro.core.metrics import DraftStats
-        out = self.scheduler.stats()
-        out.update(engine_steps=float(self.steps),
-                   generated_tokens=float(sum(r.length
-                                              for r in self.responses.values())),
-                   reused_tokens=float(sum(r.n_accepted
-                                           for r in self.responses.values())),
-                   admit_time=self.time_admit,
-                   slot_write_time=self.time_slot_write,
-                   decode_time=self.time_decode,
-                   wall_time=self._now())
+        sch = self.scheduler
+        reg = MetricsRegistry()
+        # shape/config gauges (sum across shards where extensive)
+        reg.set("num_slots", float(sch.num_slots), agg="sum")
+        reg.set("num_shards", 1.0, agg="sum")
+        reg.set("pending", float(len(sch.queue)), agg="sum")
+        reg.set("max_queue", float(sch.max_queue or 0), agg="sum")
+        reg.set("engine_steps", float(self.steps), agg="max")
+        reg.set("wall_time", self._now(), agg="max")
+        # scheduler lifecycle counters
+        reg.inc("submitted", sch.submitted)
+        reg.inc("admitted", sch.admitted)
+        reg.inc("completed", sch.completed)
+        reg.inc("busy_slot_steps", sch.busy_slot_steps)
+        reg.inc("total_slot_steps", sch.total_slot_steps)
+        reg.inc("queue_wait_total", sch.queue_wait_total)
+        reg.inc("serve_time_total", sch.serve_time_total)
+        reg.inc("timeouts", sch.timeouts)
+        reg.inc("quarantined_requests", sch.quarantines)
+        reg.inc("retried_requests", sch.retries)
+        reg.inc("shed_requests", sch.sheds)
+        reg.inc("rejected_requests", sch.rejected)
+        reg.ratio("occupancy", "busy_slot_steps", "total_slot_steps")
+        reg.ratio("mean_queue_wait", "queue_wait_total", "completed")
+        reg.ratio("mean_serve_time", "serve_time_total", "completed")
+        # engine throughput counters
+        reg.inc("generated_tokens",
+                sum(r.length for r in self.responses.values()))
+        reg.inc("reused_tokens",
+                sum(r.n_accepted for r in self.responses.values()))
+        reg.inc("admit_time", self.time_admit)
+        reg.inc("slot_write_time", self.time_slot_write)
+        reg.inc("decode_time", self.time_decode)
         # §9 draft telemetry (zeros for undrafted engines, so the stats
-        # schema is uniform across engine modes and mesh shards)
-        out.update((self.draft_stats if self.draft else DraftStats())
-                   .as_dict())
+        # schema is uniform across engine modes and mesh shards); the
+        # legacy ratio names stay, re-derived from the summed counters
+        ds = self.draft_stats if self.draft else DraftStats()
+        reg.inc("draft_proposed", ds.proposed)
+        reg.inc("draft_accepted", ds.accepted)
+        reg.inc("decode_forwards", ds.forwards)
+        reg.inc("decode_emitted", ds.emitted)
+        reg.inc("draft_forwards", ds.draft_forwards)
+        reg.ratio("accept_rate", "draft_accepted", "draft_proposed")
+        reg.ratio("mean_draft_len", "draft_proposed", "draft_forwards")
+        reg.ratio("tokens_per_forward", "decode_emitted", "decode_forwards")
         # §10 recovery telemetry under the uniform fault_ schema: the
         # engine-owned counters plus a mirror of the scheduler's lifecycle
-        # counters, so one prefix carries the whole failure story and mesh
-        # shards sum field-by-field
+        # counters, so one prefix carries the whole failure story
         fs = FaultStats(**{k: getattr(self.fault_stats, k)
                            for k in FaultStats.FIELDS})
-        fs.timeouts = self.scheduler.timeouts
-        fs.retries = self.scheduler.retries
-        fs.sheds = self.scheduler.sheds
-        fs.rejected = self.scheduler.rejected
-        out.update(fs.as_dict())
-        return out
+        fs.timeouts = sch.timeouts
+        fs.retries = sch.retries
+        fs.sheds = sch.sheds
+        fs.rejected = sch.rejected
+        for k, v in fs.as_dict().items():
+            reg.inc(k, v)
+        # §11 latency histograms accumulated by the serving loop itself
+        reg.merge(self.metrics)
+        return reg
+
+    def stats(self) -> Dict[str, float]:
+        return self.metrics_registry().as_dict()
 
     # ------------------------------------------------------------ admission
 
@@ -426,7 +489,18 @@ class SlotEngine:
                                        if self.draft else 0,
                                        mesh=self.mesh)
             jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-            self.time_slot_write += time.perf_counter() - t1
+            t2 = time.perf_counter()
+            self.time_slot_write += t2 - t1
+
+            # §11: admit/slot-write timings reuse t0/t1/t2 — the clock
+            # reads the time_* accounting above already took
+            self.metrics.observe("serve.admit_ms", (t1 - t0) * 1e3)
+            self.metrics.observe("serve.slot_write_ms", (t2 - t1) * 1e3)
+            tr = self.tracer
+            if tr.enabled:
+                tr.complete("admit", self._etrack, t0, t1, cat="admit",
+                            rows=len(group))
+                tr.complete("slot_write", self._etrack, t1, t2, cat="admit")
 
             tok0 = np.asarray(out["tok0"])
             lp0 = np.asarray(out["lp0"])
@@ -440,6 +514,24 @@ class SlotEngine:
             for j, (slot, req) in enumerate(group):
                 nj = int(n[j])
                 budget = max(0, req.max_new_tokens - nj)
+                # §11 per-request admission telemetry: queue wait, TTFT
+                # (queued → seed token, which admission just produced) and
+                # the SPEC-RL reuse length.  Span endpoints are the
+                # engine-relative stamps the scheduler already recorded.
+                self.metrics.observe("serve.queue_wait_ms",
+                                     (req.admitted_at - req.queued_at) * 1e3)
+                self.metrics.observe(
+                    "serve.ttft_ms",
+                    ((t1 - self._t0) - req.queued_at) * 1e3)
+                if self.spec_prefix:
+                    self.metrics.observe("serve.reuse_len", nj)
+                if tr.enabled and tr.sampled(req.request_id):
+                    lane = f"{self.obs_label}req/{req.request_id}"
+                    tr.complete("queued", lane, self._abs(req.queued_at),
+                                self._abs(req.admitted_at), cat="queue",
+                                retries=req.retries)
+                    tr.complete("admit", lane, t0, t1, cat="admit",
+                                slot=slot, n_accepted=nj)
                 self.cur_tok[slot] = tok0[j]
                 self.cur_lp[slot] = lp0[j]
                 self.count[slot] = 0
@@ -477,7 +569,8 @@ class SlotEngine:
         if self.draft:
             return self._run_draft_chunk()
         steps = steps or self.chunk_steps
-        busy = sum(1 for s in self.scheduler.active if not self.done[s])
+        live = [s for s in self.scheduler.active if not self.done[s]]
+        busy = len(live)
         # §10 fault hook: corrupt the logits of pending nan targets on the
         # first step of this chunk (−1 = never; the clean-path constant)
         inject = np.full(self.scheduler.num_slots, -1, np.int32)
@@ -496,12 +589,31 @@ class SlotEngine:
         self.caches = out["caches"]
         toks = np.asarray(out["tokens"])            # (B, steps)
         lps = np.asarray(out["logprobs"])
-        self.time_decode += time.perf_counter() - t0
+        count0 = self.count
+        t1 = time.perf_counter()
+        self.time_decode += t1 - t0
         for name in ("cur_tok", "cur_lp", "done", "count", "next_pos",
                      "write_idx", "keys"):
             # np.array (not asarray): jax arrays view as read-only and the
             # admission path writes these in place
             setattr(self, name, np.array(out[name]))
+        # §11 chunk telemetry: t0/t1 are the stamps time_decode already
+        # takes; emitted counts come from the np state just harvested
+        emitted = int((self.count[live] - count0[live]).sum()) if live else 0
+        self.metrics.observe("serve.decode_chunk_ms", (t1 - t0) * 1e3)
+        self.metrics.observe("serve.decode_step_ms", (t1 - t0) / steps * 1e3)
+        if emitted > 0:
+            self.metrics.observe("serve.token_ms", (t1 - t0) / emitted * 1e3)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("decode_chunk", self._etrack, t0, t1, cat="decode",
+                        steps=steps, busy=busy, emitted=emitted)
+            for slot in live:
+                req = self.scheduler.active[slot]
+                if tr.sampled(req.request_id):
+                    tr.complete("decode_chunk",
+                                f"{self.obs_label}req/{req.request_id}",
+                                t0, t1, cat="decode", slot=slot)
         for slot in self.scheduler.active:
             self._acc_tok[slot].append(toks[slot])
             self._acc_lp[slot].append(lps[slot])
@@ -569,13 +681,36 @@ class SlotEngine:
         toks = np.asarray(out["tokens"])            # (B, K+1)
         lps = np.asarray(out["logprobs"])
         emitted = np.asarray(out["emitted"])
-        self.time_decode += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.time_decode += t1 - t0
         for name in ("cur_tok", "cur_lp", "done", "count", "next_pos",
                      "write_idx"):
             setattr(self, name, np.array(out[name]))
         self.keys = np.array(out["keys"])
         accepted = np.asarray(out["accepted"])
         proposed = np.asarray(out["proposed"])
+        # §11 draft macro-step telemetry (t0/t1 = the time_decode stamps):
+        # the acceptance time series lives in the span args
+        n_em = int(emitted.sum())
+        self.metrics.observe("serve.draft_chunk_ms", (t1 - t0) * 1e3)
+        if n_em > 0:
+            self.metrics.observe("serve.token_ms", (t1 - t0) / n_em * 1e3)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("draft_chunk", self._etrack, t0, t1, cat="draft",
+                        busy=busy, proposed=int(proposed.sum()),
+                        accepted=int(accepted.sum()), emitted=n_em)
+            for slot in self.scheduler.active:
+                if self.done[slot] and not emitted[slot]:
+                    continue
+                req = self.scheduler.active[slot]
+                if tr.sampled(req.request_id):
+                    tr.complete("draft_chunk",
+                                f"{self.obs_label}req/{req.request_id}",
+                                t0, t1, cat="draft", slot=slot,
+                                proposed=int(proposed[slot]),
+                                accepted=int(accepted[slot]),
+                                emitted=int(emitted[slot]))
         quarantined: List[int] = []
         for slot in self.scheduler.active:
             req = self.scheduler.active[slot]
@@ -694,6 +829,12 @@ class SlotEngine:
                 self._degrade_impl()        # rung 2: simpler decode kernel
         now = self._now()
         self.scheduler.reclaim(slot, now=now, reason=reason)
+        tr = self.tracer
+        _lane = f"{self.obs_label}req/{req.request_id}"
+        if tr.enabled and tr.sampled(req.request_id):
+            # fault instant on the request lane: quarantine / timeout / shed
+            tr.event(reason, _lane, cat="fault", ts=self._abs(now),
+                     slot=slot, retries=req.retries)
         if req.retries < req.max_retries:
             if self.spec_prefix:
                 # accepted prefix ⊕ partial output becomes the retry draft;
@@ -710,6 +851,9 @@ class SlotEngine:
                     [prev_l, lps]).astype(np.float32)
                 req.draft_eos = False
             self.scheduler.resubmit(req, now=now)
+            if tr.enabled and tr.sampled(req.request_id):
+                tr.event("retry", _lane, cat="fault", ts=self._abs(now),
+                         retry=req.retries)
         else:
             toks2, lps2, orig = self._stitch(req, n1, plp, toks, lps)
             self.fault_stats.add(failed=1)
@@ -720,6 +864,14 @@ class SlotEngine:
                 draft_len=int(self._slot_draft_len[slot]), slot=slot,
                 queue_time=req.admitted_at - req.queued_at,
                 serve_time=now - req.admitted_at, retries=req.retries)
+            self.metrics.observe("serve.serve_ms",
+                                 (now - req.admitted_at) * 1e3)
+            self.metrics.observe("serve.retries_per_request", req.retries)
+            if tr.enabled and tr.sampled(req.request_id):
+                # retroactive whole-lifecycle span: queued → failed
+                tr.complete("request", _lane, self._abs(req.queued_at),
+                            self._abs(now), cat="request", reason=reason,
+                            tokens=len(toks2), retries=req.retries)
         self.done[slot] = True
         self._acc_tok[slot] = []
         self._acc_lp[slot] = []
@@ -792,6 +944,16 @@ class SlotEngine:
                 serve_time=now - req.admitted_at, retries=req.retries)
             self.responses[req.request_id] = resp
             self.scheduler.complete(slot, now=now)
+            self.metrics.observe("serve.serve_ms", resp.serve_time * 1e3)
+            self.metrics.observe("serve.retries_per_request", req.retries)
+            tr = self.tracer
+            if tr.enabled and tr.sampled(req.request_id):
+                # retroactive whole-lifecycle span: queued → finished
+                tr.complete("request",
+                            f"{self.obs_label}req/{req.request_id}",
+                            self._abs(req.queued_at), self._abs(now),
+                            cat="request", reason=reason, tokens=len(toks),
+                            n_accepted=orig, slot=slot, retries=req.retries)
             self._acc_tok[slot] = []
             self._acc_lp[slot] = []
             self._slot_prefix_lp[slot] = None
@@ -848,6 +1010,9 @@ class SlotEngine:
                           for rid, r in self.responses.items()},
             "fault_stats": {k: np.int64(getattr(self.fault_stats, k))
                             for k in FaultStats.FIELDS},
+            # §11: the latency histograms resume with the engine, so a
+            # kill-and-resume run keeps monotonic counters and percentiles
+            "obs": self.metrics.state_dict(),
         }
         if self.draft:
             st["draft"] = {
@@ -898,6 +1063,8 @@ class SlotEngine:
                           for rid, rs in state["responses"].items()}
         for k in FaultStats.FIELDS:
             setattr(self.fault_stats, k, int(state["fault_stats"][k]))
+        if "obs" in state:          # absent in pre-§11 snapshots
+            self.metrics.load_state_dict(state["obs"])
         if self.draft and "draft" in state:
             d = state["draft"]
             self._draft_ctrl.rate = np.array(d["rate"], np.float64)

@@ -17,9 +17,13 @@ token-identical to a single engine over the same requests, which is the
 §6 equivalence contract lifted to the mesh (asserted in
 tests/distributed/test_mesh_rollout.py).
 
-``stats()`` returns the gathered metrics view: token/time counters summed,
-occupancy and queue/serve means weighted by per-shard step counts, plus a
-``per_shard`` breakdown.
+``stats()`` returns the gathered metrics view, produced by a type-driven
+``MetricsRegistry.merge`` over the shard registries (DESIGN.md §11):
+counters sum, peak gauges max, histograms merge bucket-wise, ratios
+re-derive from the summed parts — plus a ``per_shard`` breakdown.  The
+merge runs over the union of metric names, so a counter added to the
+engine can never silently vanish from the gathered view (the pre-§11
+hand-listed summation could drop fields).
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.distributed.mesh import data_submeshes, shard_params
 from repro.engine.generate import GenerateConfig
+from repro.obs import MetricsRegistry
 from repro.models.config import ModelConfig
 
 from .engine_loop import SlotEngine
@@ -40,7 +45,7 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
                      compact_impl: str = "auto",
                      slot_write_impl: str = "auto", draft=None, faults=None,
                      deadline_steps=None, max_queue=None,
-                     overflow: str = "reject"):
+                     overflow: str = "reject", tracer=None):
     """One factory for both mesh regimes (the single dispatch point shared
     by serving/rl_adapter.py and launch/serve.py).
 
@@ -61,7 +66,7 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
               chunk_steps=chunk_steps, verify_impl=verify_impl,
               compact_impl=compact_impl, slot_write_impl=slot_write_impl,
               draft=draft, faults=faults, deadline_steps=deadline_steps,
-              max_queue=max_queue, overflow=overflow)
+              max_queue=max_queue, overflow=overflow, tracer=tracer)
     if mesh is not None and data_size(mesh) > 1:
         D = data_size(mesh)
         kw["num_slots"] = max(D, num_slots - num_slots % D)
@@ -84,7 +89,7 @@ class MeshSlotServer:
                  chunk_steps: int = 8, verify_impl: str = "auto",
                  compact_impl: str = "auto", slot_write_impl: str = "auto",
                  draft=None, faults=None, deadline_steps=None,
-                 max_queue=None, overflow: str = "reject"):
+                 max_queue=None, overflow: str = "reject", tracer=None):
         self.submeshes = data_submeshes(mesh)
         D = len(self.submeshes)
         assert num_slots % D == 0 and num_slots >= D, \
@@ -102,8 +107,9 @@ class MeshSlotServer:
                        compact_impl=compact_impl,
                        slot_write_impl=slot_write_impl, draft=draft, mesh=sm,
                        faults=plan, deadline_steps=deadline_steps,
-                       max_queue=max_queue, overflow=overflow)
-            for sm, plan in zip(self.submeshes, plans)]
+                       max_queue=max_queue, overflow=overflow,
+                       tracer=tracer, obs_label=f"shard{i}/")
+            for i, (sm, plan) in enumerate(zip(self.submeshes, plans))]
         self._rr = 0                       # round-robin submission cursor
 
     @property
@@ -166,58 +172,17 @@ class MeshSlotServer:
 
     # -------------------------------------------------------------- metrics
 
+    def metrics_registry(self) -> MetricsRegistry:
+        """Type-driven merge of the shard registries (§11): the one place
+        mesh gathering happens, with the merge rule carried by each
+        metric's type instead of a hand-maintained key list."""
+        return MetricsRegistry.merged([e.metrics_registry()
+                                       for e in self.engines])
+
     def stats(self) -> Dict[str, float]:
-        """Gathered view over the shard-local schedulers."""
-        per = [e.stats() for e in self.engines]
-        steps = [p["engine_steps"] for p in per]
-        total_steps = sum(steps) or 1.0
-        completed = [p["completed"] for p in per]
-        total_done = sum(completed) or 1.0
-        out: Dict[str, float] = {
-            "num_shards": float(len(per)),
-            "num_slots": sum(p["num_slots"] for p in per),
-            "submitted": sum(p["submitted"] for p in per),
-            "admitted": sum(p["admitted"] for p in per),
-            "completed": sum(completed),
-            "pending": sum(p["pending"] for p in per),
-            "generated_tokens": sum(p["generated_tokens"] for p in per),
-            "reused_tokens": sum(p["reused_tokens"] for p in per),
-            "admit_time": sum(p["admit_time"] for p in per),
-            "slot_write_time": sum(p["slot_write_time"] for p in per),
-            "decode_time": sum(p["decode_time"] for p in per),
-            "wall_time": max(p["wall_time"] for p in per),
-            "engine_steps": max(steps),
-            "occupancy": sum(p["occupancy"] * s for p, s in zip(per, steps))
-            / total_steps,
-            "mean_queue_wait": sum(p["mean_queue_wait"] * c
-                                   for p, c in zip(per, completed))
-            / total_done,
-            "mean_serve_time": sum(p["mean_serve_time"] * c
-                                   for p, c in zip(per, completed))
-            / total_done,
-        }
-        # §9 draft telemetry: sum the raw counters across shards and
-        # re-derive the ratios from the totals (a per-shard mean would
-        # weight idle shards equally with busy ones)
-        from repro.core.metrics import DraftStats, FaultStats
-        agg = DraftStats()
-        for p in per:
-            agg.add_step(forwards=p["decode_forwards"],
-                         proposed=p["draft_proposed"],
-                         accepted=p["draft_accepted"],
-                         emitted=p["decode_emitted"],
-                         draft_forwards=p["draft_forwards"])
-        out.update(agg.as_dict())
-        # §10 recovery telemetry: uniform schema, so shards sum field-by-
-        # field — both the scheduler lifecycle counters and the fault_ view
-        for k in ("timeouts", "quarantined_requests", "retried_requests",
-                  "shed_requests", "rejected_requests", "max_queue"):
-            out[k] = sum(p[k] for p in per)
-        fagg = FaultStats()
-        for p in per:
-            fagg.merge(FaultStats.from_dict(p))
-        out.update(fagg.as_dict())
-        out["per_shard"] = per
+        """Gathered view over the shard-local engines + per-shard dumps."""
+        out = self.metrics_registry().as_dict()
+        out["per_shard"] = [e.stats() for e in self.engines]
         return out
 
     # ----------------------------------------------- exact kill-and-resume

@@ -1,0 +1,162 @@
+"""Export-sink tests (DESIGN.md §11): golden-file Chrome-trace and
+Prometheus exposition from a fixed fake-clock scenario, JSONL structure,
+and the stdlib /metrics HTTP endpoint.
+
+Regenerate goldens after an intentional format change with:
+    REPRO_REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest tests/obs/test_exports.py
+"""
+import json
+import os
+import urllib.request
+
+import pytest
+
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs.export import (chrome_trace, prometheus_text,
+                              start_metrics_server, write_chrome_trace,
+                              write_jsonl, write_prometheus)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _scenario():
+    """A fixed request lifecycle + trainer step.  Every timestamp is an
+    exact binary fraction so ts * 1e6 is platform-stable in the JSON."""
+    eng = Tracer(clock=lambda: 0.0)
+    eng.complete("queued", "req/0", 0.0, 0.25, cat="queue", retries=0)
+    eng.complete("admit", "req/0", 0.25, 0.3125, cat="admit", slot=0,
+                 n_accepted=3)
+    eng.complete("decode_chunk", "req/0", 0.3125, 0.5, cat="decode", steps=4)
+    eng.event("retry", "req/0", cat="fault", ts=0.5, slot=0)
+    eng.complete("decode_chunk", "req/0", 0.5625, 0.75, cat="decode", steps=4)
+    eng.complete("request", "req/0", 0.0, 0.78125, cat="lifecycle",
+                 reason="complete", tokens=7, retries=1)
+    eng.complete("queued", "req/10", 0.0, 0.625, cat="queue", retries=0)
+    eng.complete("admit", "engine", 0.25, 0.3125, cat="admit", rows=1)
+    eng.complete("decode_chunk", "engine", 0.3125, 0.5, cat="decode",
+                 steps=4, busy=1, emitted=4)
+    trn = Tracer(clock=lambda: 0.0)
+    trn.complete("collect", "trainer", 0.0, 0.8125, cat="train", step=0)
+    trn.complete("update_actor", "trainer", 0.8125, 0.875, cat="train",
+                 step=0)
+    trn.complete("train_step", "trainer", 0.0, 0.875, cat="train", step=0)
+
+    reg = MetricsRegistry()
+    reg.inc("serve.generated_tokens", 28)
+    reg.inc("serve.reused_tokens", 3)
+    reg.inc("serve.busy_slot_steps", 9)
+    reg.inc("serve.total_slot_steps", 12)
+    reg.set("serve.num_slots", 4.0, agg="sum")
+    reg.ratio("serve.occupancy", "serve.busy_slot_steps",
+              "serve.total_slot_steps")
+    for v in (0.25, 0.5, 0.5, 2.0, 16.0):
+        reg.observe("serve.ttft_ms", v)
+    reg.observe("serve.reuse_len", 0.0)        # underflow bucket in the wild
+    return {"engine": eng, "trainer": trn}, reg
+
+
+def _check_golden(name, produced):
+    path = os.path.join(GOLDEN, name)
+    if os.environ.get("REPRO_REGEN_GOLDENS"):
+        with open(path, "w") as f:
+            f.write(produced)
+    with open(path) as f:
+        assert produced == f.read()
+
+
+def test_chrome_trace_matches_golden(tmp_path):
+    tracers, _ = _scenario()
+    p = tmp_path / "trace.json"
+    write_chrome_trace(p, tracers)
+    _check_golden("trace.json", p.read_text())
+
+
+def test_prometheus_matches_golden(tmp_path):
+    _, reg = _scenario()
+    p = tmp_path / "metrics.prom"
+    write_prometheus(p, reg)
+    _check_golden("metrics.prom", p.read_text())
+
+
+def test_chrome_trace_structure():
+    tracers, _ = _scenario()
+    doc = chrome_trace(tracers)
+    evs = doc["traceEvents"]
+    # one process per tracer, named
+    procs = {e["args"]["name"] for e in evs if e["ph"] == "M"
+             and e["name"] == "process_name"}
+    assert procs == {"engine", "trainer"}
+    # engine lane sorts before request lanes; req/0 before req/10
+    names = [e for e in evs if e["ph"] == "M" and e["name"] == "thread_name"
+             and e["pid"] == 0]
+    lanes = [e["args"]["name"] for e in sorted(names, key=lambda e: e["tid"])]
+    assert lanes == ["engine", "req/0", "req/10"]
+    # the full lifecycle is on the req/0 lane, in wall-clock order
+    tid = {e["args"]["name"]: e["tid"] for e in names}
+    req0 = sorted((e for e in evs if e["pid"] == 0 and e["ph"] in "Xi"
+                   and e["tid"] == tid["req/0"]), key=lambda e: e["ts"])
+    assert [e["name"] for e in req0] == [
+        "queued", "request", "admit", "decode_chunk", "retry", "decode_chunk"]
+    # X events carry microsecond ts/dur
+    q = next(e for e in req0 if e["name"] == "queued")
+    assert q["ts"] == 0.0 and q["dur"] == 250000.0
+    # instants are thread-scoped
+    assert next(e for e in req0 if e["ph"] == "i")["s"] == "t"
+
+
+def test_prometheus_exposition_shape():
+    _, reg = _scenario()
+    text = prometheus_text(reg, namespace="repro")
+    assert "# TYPE repro_serve_generated_tokens_total counter" in text
+    assert "repro_serve_generated_tokens_total 28.0" in text
+    assert "# TYPE repro_serve_occupancy gauge" in text
+    assert "repro_serve_occupancy 0.75" in text
+    # histogram: cumulative buckets, monotonic, ending at +Inf == count
+    lines = [ln for ln in text.splitlines()
+             if ln.startswith("repro_serve_ttft_ms_bucket")]
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in lines]
+    assert counts == sorted(counts)
+    assert lines[-1].startswith('repro_serve_ttft_ms_bucket{le="+Inf"}')
+    assert counts[-1] == 5
+    assert "repro_serve_ttft_ms_count 5" in text
+    assert "repro_serve_ttft_ms_sum 19.25" in text
+
+
+def test_jsonl_records_and_final_metrics(tmp_path):
+    tracers, reg = _scenario()
+    p = tmp_path / "events.jsonl"
+    write_jsonl(p, tracers, reg)
+    recs = [json.loads(ln) for ln in p.read_text().splitlines()]
+    assert recs[-1]["type"] == "metrics"
+    assert recs[-1]["metrics"]["serve.occupancy"] == 0.75
+    kinds = {r["type"] for r in recs[:-1]}
+    assert kinds == {"span", "event"}
+    spans = [r for r in recs if r["type"] == "span"]
+    assert all(r["dur"] == r["t1"] - r["t0"] for r in spans)
+    # per-process blocks are internally time-ordered
+    eng = [r for r in recs[:-1] if r["proc"] == "engine"]
+    ts = [r.get("t0", r.get("ts")) for r in eng]
+    assert ts == sorted(ts)
+
+
+def test_metrics_http_endpoint():
+    _, reg = _scenario()
+    srv = start_metrics_server(lambda: reg, port=0)
+    try:
+        port = srv.server_address[1]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=5) as r:
+            assert r.status == 200
+            assert "version=0.0.4" in r.headers["Content-Type"]
+            body = r.read().decode()
+        assert body == prometheus_text(reg)
+        # live provider: a scrape after an inc sees the new value
+        reg.inc("serve.generated_tokens", 1)
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=5) as r:
+            assert "repro_serve_generated_tokens_total 29.0" in \
+                r.read().decode()
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/nope", timeout=5)
+    finally:
+        srv.shutdown()
