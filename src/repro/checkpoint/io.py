@@ -65,6 +65,25 @@ def _rebuild(struct, flat, prefix=""):
 
 # ------------------------------------------------------------ atomic writes
 
+def _fsync_dir(path: str) -> None:
+    """fsync the directory holding ``path``: ``os.replace`` makes the new
+    name visible, but the *rename itself* is only durable once the parent
+    directory's entry is flushed — without this a power cut after replace
+    can resurrect the old file (POSIX).  Best-effort on filesystems that
+    refuse O_RDONLY directory handles."""
+    d = os.path.dirname(path) or "."
+    try:
+        fd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _atomic_write_npz(path: str, blob: Dict[str, np.ndarray]) -> None:
     """np.savez to ``path`` via temp-file + os.replace (same filesystem)."""
     tmp = path + ".tmp"
@@ -73,6 +92,7 @@ def _atomic_write_npz(path: str, blob: Dict[str, np.ndarray]) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    _fsync_dir(path)
 
 
 def _atomic_write_text(path: str, text: str) -> None:
@@ -82,6 +102,7 @@ def _atomic_write_text(path: str, text: str) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+    _fsync_dir(path)
 
 
 def write_latest(ckpt_dir: str, name: str) -> None:
@@ -94,13 +115,27 @@ def write_latest(ckpt_dir: str, name: str) -> None:
 
 def read_latest(ckpt_dir: str) -> Optional[str]:
     """Name of the last committed checkpoint in ``ckpt_dir`` (None if no
-    checkpoint was ever committed)."""
+    checkpoint was ever committed).
+
+    Validated: the pointer must reference files that actually exist.  A
+    crash (or a pre-dir-fsync power cut) can leave ``latest`` naming a
+    checkpoint whose files never became durable; a reader must fall back
+    to "no checkpoint" rather than hand callers a name that raises
+    FileNotFoundError downstream."""
     p = os.path.join(ckpt_dir, LATEST)
     if not os.path.exists(p):
         return None
     with open(p) as f:
         name = f.read().strip()
-    return name or None
+    if not name:
+        return None
+    try:
+        entries = os.listdir(ckpt_dir)
+    except OSError:
+        return None
+    if not any(e == name or e.startswith(name + ".") for e in entries):
+        return None
+    return name
 
 
 # ---------------------------------------------------------------- pytrees

@@ -22,6 +22,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
@@ -123,6 +124,17 @@ def replicate(mesh: Optional[Mesh], tree):
     if mesh is None:
         return tree
     return jax.device_put(tree, NamedSharding(mesh, P()))
+
+
+def host_fetch(tree):
+    """Gather a (possibly sharded) pytree to host numpy arrays.
+
+    The §12 weight-publication path uses this when the sync channel must
+    carry a self-contained copy across failure domains (a transport that
+    serialises, or a producer on another host) — by default WeightSync
+    hands the live device arrays through untouched, which keeps the K=0
+    identity contract and the sharding layout intact."""
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
 def shard_batch(mesh: Optional[Mesh], tree):

@@ -61,6 +61,23 @@ def main(argv=None):
     p.add_argument("--draft-fixed", action="store_true",
                    help="disable the adaptive per-row draft length "
                         "controller (always draft K)")
+    p.add_argument("--async", dest="async_mode", action="store_true",
+                   help="§12 disaggregated mode: continuous rollout service "
+                        "feeding a bounded trajectory buffer, consumed by "
+                        "the trainer under a bounded staleness window")
+    p.add_argument("--staleness-window", type=int, default=1, metavar="K",
+                   help="async: accept trajectories <= K policy versions "
+                        "old with truncated-IS correction; older ones are "
+                        "re-verified through the SPEC-RL draft path (K=0 "
+                        "is token-identical to the synchronous trainer)")
+    p.add_argument("--buffer-capacity", type=int, default=8,
+                   help="async: trajectory buffer bound (shed-oldest past "
+                        "it, producer throttles at the high watermark)")
+    p.add_argument("--publish-every", type=int, default=1,
+                   help="async: publish weights every N optimizer steps")
+    p.add_argument("--async-schedule", default="pc",
+                   help="async: deterministic producer/consumer interleave "
+                        "pattern, e.g. 'pc' or 'ppcc'")
     p.add_argument("--watchdog-dir", default="",
                    help="enable the §10 trainer watchdog: snapshot to this "
                         "directory on healthy steps, restore-last-good and "
@@ -131,8 +148,7 @@ def main(argv=None):
                  else "off")
     print(f"arch={cfg.name} devices={jax.device_count()} mesh={mesh_desc} "
           f"params={sum(x.size for x in jax.tree.leaves(tr.params)) / 1e6:.1f}M")
-    for _ in range(args.steps):
-        m = tr.train_step()
+    def _step_line(m):
         line = (f"step {m['step']:3.0f} reward={m['reward_mean']:.3f} "
                 f"gen_tok={m.get('n_generated', 0):6.0f} "
                 f"reused={m.get('n_reused', 0):6.0f}")
@@ -140,7 +156,38 @@ def main(argv=None):
             line += (f" tok/fwd={m.get('tokens_per_forward', 1.0):.2f} "
                      f"draft_acc={m.get('draft_accept_rate', 0.0):.2f} "
                      f"draft_len={m.get('draft_mean_len', 0.0):.2f}")
-        print(line, flush=True)
+        return line
+
+    if args.async_mode:
+        from repro.rl.async_loop import AsyncConfig, AsyncTrainer
+        at = AsyncTrainer(tr, AsyncConfig(
+            staleness_window=args.staleness_window,
+            buffer_capacity=args.buffer_capacity,
+            publish_every=args.publish_every,
+            schedule=args.async_schedule))
+        print(f"async: K={args.staleness_window} "
+              f"buffer={args.buffer_capacity} "
+              f"schedule={args.async_schedule!r}")
+        sched, i, done, idle = args.async_schedule, 0, 0, 0
+        while done < args.steps and idle < 10000:
+            role = sched[i % len(sched)]
+            i += 1
+            if role == "p":
+                at.producer_tick()
+                continue
+            m = at.consumer_step()
+            if m is None:
+                idle += 1
+                continue
+            idle, done = 0, done + 1
+            print(_step_line(m) +
+                  f" staleness={m.get('staleness', 0.0):.0f} "
+                  f"mode={m.get('async_mode_level', 0.0):.0f}", flush=True)
+        for k, v in sorted(at.counters().items()):
+            print(f"async {k}={v:.0f}")
+    else:
+        for _ in range(args.steps):
+            print(_step_line(tr.train_step()), flush=True)
     if metrics_srv is not None:
         metrics_srv.shutdown()
     if args.trace_dir:

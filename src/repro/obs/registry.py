@@ -209,6 +209,16 @@ class MetricsRegistry:
     def observe(self, name: str, v: float) -> None:
         self.histogram(name).record(v)
 
+    @classmethod
+    def from_flat(cls, d: Dict[str, float]) -> "MetricsRegistry":
+        """Lift a flat float dict into a registry of gauges — the audit
+        gate every step-log surface (trainer, async loop) passes its
+        metrics through so the namespace stays one ``as_dict`` schema."""
+        reg = cls()
+        for k, v in d.items():
+            reg.set(k, float(v))
+        return reg
+
     def names(self) -> List[str]:
         return list(self._m)
 

@@ -140,6 +140,129 @@ def _update_critic(cparams, copt_state, cfg, ocfg, full_tokens, full_mask,
     return cparams, copt_state, {"critic_loss": loss, **oinfo}
 
 
+# ------------------------------------------------------------------ collector
+
+
+class Collector:
+    """The collection half of the RL loop (DESIGN.md §12): dataset
+    sampling, the SPEC-RL rollout cache, the lenience schedule, the
+    collection PRNG stream and the DAPO dynamic-sampling resample loop —
+    everything ``train_step`` needs to turn params into a rewarded batch,
+    and nothing it needs to *update* them.
+
+    The synchronous ``Trainer`` drives it in-process; the async rollout
+    service (serving/rollout_service.py) drives the *same object* from the
+    producer side of the disaggregated seam.  Both topologies therefore
+    share one definition of a collect step — same sampling RNG, same PRNG
+    split order, same cache — which is what makes the K=0 deterministic
+    schedule token-identical to the synchronous path (the §12 determinism
+    contract)."""
+
+    def __init__(self, model_cfg: ModelConfig, rl: RLConfig, spec: SpecConfig,
+                 dataset: PromptDataset, key, lenience_schedule=None,
+                 mesh=None, tracer=None):
+        self.cfg = model_cfg
+        self.rl = rl
+        self.spec = spec
+        # lenience schedule (fixed / warmup / adaptive); adaptive closes the
+        # paper's future-work item by steering |approx_kl| to a budget
+        self.lenience_schedule = lenience_schedule or FixedLenience(
+            spec.lenience)
+        self.dataset = dataset
+        self.mesh = mesh
+        self.key = key
+        # group_size makes the cache sibling-aware: the dataset keys slot g
+        # of prompt p as p*G + g, so the §9 draft engine can index a row's
+        # GRPO siblings as its n-gram corpus (cache.siblings)
+        self.cache = RolloutCache(history=spec.cache_history,
+                                  max_prompts=spec.cache_max_prompts,
+                                  group_size=rl.group_size)
+        self.gen = GenerateConfig(max_new_tokens=rl.max_new_tokens,
+                                  temperature=rl.temperature, top_p=rl.top_p,
+                                  eos_id=EOS_ID, pad_id=PAD_ID)
+        self.gen_steps = 0            # DAPO: generation steps consumed
+        self.total_generated_tokens = 0
+        self._py_rng = random.Random(1234)
+        from repro.obs import get_tracer
+        self.tracer = tracer if tracer is not None else get_tracer()
+
+    # ---------------------------------------------------------------- §11
+
+    def _stage(self, name: str, t0: float, times: Dict[str, float],
+               key: str, step: int) -> float:
+        """Close a collect stage: record its duration under ``key``, emit a
+        'trainer'-lane span and a train.* histogram sample."""
+        from repro.obs import get_registry
+        t1 = time.perf_counter()
+        times[key] = t1 - t0
+        if self.tracer.enabled:
+            self.tracer.complete(name, "trainer", t0, t1, cat="train",
+                                 step=step)
+        get_registry().observe(f"train.{name}_s", t1 - t0)
+        return t1
+
+    # -------------------------------------------------------------- rollout
+
+    def sample(self, epoch: int,
+               batch: Optional[PromptBatch] = None) -> PromptBatch:
+        """Epoch-keyed batch draw from the shared python RNG stream (the
+        stream both topologies replay in lockstep)."""
+        if batch is not None:
+            return batch
+        return self.dataset.sample_batch(self._py_rng,
+                                         self.rl.prompts_per_batch,
+                                         self.rl.group_size, epoch=epoch)
+
+    def rollout_once(self, params, batch: PromptBatch,
+                     epoch: int) -> RolloutBatch:
+        self.key, sub = jax.random.split(self.key)
+        cur_l = float(self.lenience_schedule(epoch))
+        if cur_l != self.spec.lenience and self.spec.variant == "spec":
+            self.spec = replace(self.spec, lenience=cur_l)
+        rb = rollout(params, self.cfg, self.gen, self.spec,
+                     jnp.asarray(batch.tokens), jnp.asarray(batch.mask),
+                     batch.cache_keys, self.cache, sub, epoch,
+                     mesh=self.mesh)
+        self.gen_steps += 1
+        self.total_generated_tokens += rb.metrics["n_generated"]
+        return rb
+
+    def collect(self, params, batch: PromptBatch, epoch: int
+                ) -> Tuple[PromptBatch, RolloutBatch, np.ndarray,
+                           Dict[str, float]]:
+        """Rollout + reward (+ DAPO dynamic sampling) under ``params``."""
+        t0 = time.perf_counter()
+        rb = self.rollout_once(params, batch, epoch)
+        t_reward0 = time.perf_counter()
+        rewards = batch_rewards(rb.response, rb.length, batch.answers)
+        rtimes: Dict[str, float] = {}
+        self._stage("reward", t_reward0, rtimes, "reward_time", epoch)
+        reward_time = rtimes["reward_time"]
+
+        if self.rl.algo == "dapo" and self.rl.dynamic_sampling:
+            G = self.rl.group_size
+            for _ in range(self.rl.max_resample_rounds):
+                g = rewards.reshape(-1, G)
+                degenerate = (g.std(axis=1) == 0.0)
+                if not degenerate.any():
+                    break
+                # resample the degenerate prompt groups with fresh rollouts
+                keep = ~degenerate
+                idxs = np.where(degenerate)[0]
+                sub_batch = _subset_batch(batch, idxs, G)
+                rb2 = self.rollout_once(params, sub_batch, epoch)
+                r2 = batch_rewards(rb2.response, rb2.length, sub_batch.answers)
+                rb = _merge_rollouts(rb, rb2, idxs, G)
+                rewards = rewards.copy()
+                for j, gi in enumerate(idxs):
+                    rewards[gi * G:(gi + 1) * G] = r2[j * G:(j + 1) * G]
+
+        stage_times = dict(rb.metrics)
+        stage_times["reward_time"] = reward_time
+        self._stage("collect", t0, stage_times, "collect_time", epoch)
+        return batch, rb, rewards, stage_times
+
+
 # ------------------------------------------------------------------ trainer
 
 
@@ -151,12 +274,6 @@ class Trainer:
                  tracer=None):
         self.cfg = model_cfg
         self.rl = rl
-        self.spec = spec
-        # lenience schedule (fixed / warmup / adaptive); adaptive closes the
-        # paper's future-work item by steering |approx_kl| to a budget
-        self.lenience_schedule = lenience_schedule or FixedLenience(
-            spec.lenience)
-        self.dataset = dataset
         # mesh (DESIGN.md §8): a MeshConfig (or prebuilt Mesh) shards params
         # and optimizer moments by the param_spec rules and batch rows over
         # the data axes; rollout AND the update steps then compile SPMD on
@@ -166,7 +283,13 @@ class Trainer:
         if isinstance(mesh, MeshConfig):
             mesh = mesh.build()
         self.mesh = mesh
-        k1, k2, k3, self.key = jax.random.split(key, 4)
+        k1, k2, k3, coll_key = jax.random.split(key, 4)
+        # §12: collection state lives in the Collector — the synchronous
+        # path drives it here, the async rollout service drives the same
+        # object from the producer side
+        self.collector = Collector(model_cfg, rl, spec, dataset, coll_key,
+                                   lenience_schedule=lenience_schedule,
+                                   mesh=mesh, tracer=tracer)
         self.params = shard_params(mesh, model_cfg, M.init_lm(k1, model_cfg))
         self.opt_state = shard_opt_state(mesh, model_cfg, self.params,
                                          adamw.init(self.params))
@@ -183,20 +306,8 @@ class Trainer:
                 adamw.init(self.critic_params))
         else:
             self.critic_params = None
-        # group_size makes the cache sibling-aware: the dataset keys slot g
-        # of prompt p as p*G + g, so the §9 draft engine can index a row's
-        # GRPO siblings as its n-gram corpus (cache.siblings)
-        self.cache = RolloutCache(history=spec.cache_history,
-                                  max_prompts=spec.cache_max_prompts,
-                                  group_size=rl.group_size)
-        self.gen = GenerateConfig(max_new_tokens=rl.max_new_tokens,
-                                  temperature=rl.temperature, top_p=rl.top_p,
-                                  eos_id=EOS_ID, pad_id=PAD_ID)
         self.step_idx = 0
-        self.gen_steps = 0            # DAPO: generation steps consumed
-        self.total_generated_tokens = 0
         self.history: List[Dict[str, float]] = []
-        self._py_rng = random.Random(1234)
         # §10 watchdog (rl/watchdog.py): snapshots on healthy steps,
         # restore-last-good + skip-the-batch on non-finite loss or a
         # stalled rollout stage.  None = no monitoring (the default).
@@ -207,6 +318,69 @@ class Trainer:
         # a perf_counter reading the times dict already takes.
         from repro.obs import get_tracer
         self.tracer = tracer if tracer is not None else get_tracer()
+        self.last_rb: Optional[RolloutBatch] = None
+
+    # ------------------------------------------- collection-state delegation
+    # The watchdog snapshot/restore path, tests and benches address
+    # collection state through the trainer (tr.cache, tr.key, ...); the
+    # state itself lives in the Collector so the async topology can share
+    # it.  Plain delegating properties keep both views one object.
+
+    @property
+    def spec(self) -> SpecConfig:
+        return self.collector.spec
+
+    @spec.setter
+    def spec(self, v) -> None:
+        self.collector.spec = v
+
+    @property
+    def dataset(self) -> PromptDataset:
+        return self.collector.dataset
+
+    @property
+    def gen(self) -> GenerateConfig:
+        return self.collector.gen
+
+    @property
+    def lenience_schedule(self):
+        return self.collector.lenience_schedule
+
+    @property
+    def cache(self) -> RolloutCache:
+        return self.collector.cache
+
+    @cache.setter
+    def cache(self, v) -> None:
+        self.collector.cache = v
+
+    @property
+    def key(self):
+        return self.collector.key
+
+    @key.setter
+    def key(self, v) -> None:
+        self.collector.key = v
+
+    @property
+    def gen_steps(self) -> int:
+        return self.collector.gen_steps
+
+    @gen_steps.setter
+    def gen_steps(self, v) -> None:
+        self.collector.gen_steps = v
+
+    @property
+    def total_generated_tokens(self):
+        return self.collector.total_generated_tokens
+
+    @total_generated_tokens.setter
+    def total_generated_tokens(self, v) -> None:
+        self.collector.total_generated_tokens = v
+
+    @property
+    def _py_rng(self) -> random.Random:
+        return self.collector._py_rng
 
     # ---------------------------------------------------------------- §11
 
@@ -225,62 +399,38 @@ class Trainer:
         return t1
 
     # -------------------------------------------------------------- rollout
-    def _rollout_once(self, batch: PromptBatch) -> RolloutBatch:
-        self.key, sub = jax.random.split(self.key)
-        cur_l = float(self.lenience_schedule(self.step_idx))
-        if cur_l != self.spec.lenience and self.spec.variant == "spec":
-            self.spec = replace(self.spec, lenience=cur_l)
-        rb = rollout(self.params, self.cfg, self.gen, self.spec,
-                     jnp.asarray(batch.tokens), jnp.asarray(batch.mask),
-                     batch.cache_keys, self.cache, sub, self.step_idx,
-                     mesh=self.mesh)
-        self.gen_steps += 1
-        self.total_generated_tokens += rb.metrics["n_generated"]
-        return rb
 
     def _collect(self, batch: PromptBatch) -> Tuple[PromptBatch, RolloutBatch,
                                                     np.ndarray, Dict[str, float]]:
-        """Rollout + reward (+ DAPO dynamic sampling)."""
-        t0 = time.perf_counter()
-        rb = self._rollout_once(batch)
-        t_reward0 = time.perf_counter()
-        rewards = batch_rewards(rb.response, rb.length, batch.answers)
-        rtimes: Dict[str, float] = {}
-        self._stage("reward", t_reward0, rtimes, "reward_time")
-        reward_time = rtimes["reward_time"]
-
-        if self.rl.algo == "dapo" and self.rl.dynamic_sampling:
-            G = self.rl.group_size
-            for _ in range(self.rl.max_resample_rounds):
-                g = rewards.reshape(-1, G)
-                degenerate = (g.std(axis=1) == 0.0)
-                if not degenerate.any():
-                    break
-                # resample the degenerate prompt groups with fresh rollouts
-                keep = ~degenerate
-                idxs = np.where(degenerate)[0]
-                sub_batch = _subset_batch(batch, idxs, G)
-                rb2 = self._rollout_once(sub_batch)
-                r2 = batch_rewards(rb2.response, rb2.length, sub_batch.answers)
-                rb = _merge_rollouts(rb, rb2, idxs, G)
-                rewards = rewards.copy()
-                for j, gi in enumerate(idxs):
-                    rewards[gi * G:(gi + 1) * G] = r2[j * G:(j + 1) * G]
-
-        stage_times = dict(rb.metrics)
-        stage_times["reward_time"] = reward_time
-        self._stage("collect", t0, stage_times, "collect_time")
-        return batch, rb, rewards, stage_times
+        """Rollout + reward (+ DAPO dynamic sampling) — the in-process
+        (synchronous) drive of the shared Collector."""
+        return self.collector.collect(self.params, batch, self.step_idx)
 
     # -------------------------------------------------------------- training
     def train_step(self, batch: Optional[PromptBatch] = None) -> Dict[str, float]:
-        if batch is None:
-            batch = self.dataset.sample_batch(self._py_rng,
-                                              self.rl.prompts_per_batch,
-                                              self.rl.group_size,
-                                              epoch=self.step_idx)
+        batch = self.collector.sample(self.step_idx, batch)
         t_step0 = time.perf_counter()
         batch, rb, rewards, times = self._collect(batch)
+        return self.optimize(rb, rewards, times, t_step0=t_step0)
+
+    def optimize(self, rb: RolloutBatch, rewards: np.ndarray,
+                 times: Dict[str, float], *, behaviour_lp=None,
+                 is_clip: Optional[float] = None,
+                 extra_metrics: Optional[Dict[str, float]] = None,
+                 t_step0: Optional[float] = None) -> Dict[str, float]:
+        """The optimization half of ``train_step``: old-logprobs → (ref) →
+        advantages → (critic) → actor update, on an already-collected and
+        already-rewarded rollout.
+
+        The synchronous path calls it back-to-back with ``_collect``; the
+        async consumer (rl/async_loop.py) calls it on buffered
+        trajectories.  ``behaviour_lp`` (with cap ``is_clip``) switches on
+        the §12 truncated-importance-weight correction for trajectories up
+        to K versions stale; ``None`` — the synchronous default — leaves
+        the update bit-identical to the pre-split trainer."""
+        if t_step0 is None:
+            t_step0 = time.perf_counter()
+        self.last_rb = rb
         B, P = rb.prompt.shape
         N = rb.response.shape[1]
 
@@ -331,6 +481,22 @@ class Trainer:
         else:
             scalar_adv = group_relative_advantages(rew, self.rl.group_size)
             adv = scalar_adv[:, None] * resp_mask.astype(jnp.float32)
+        if behaviour_lp is not None:
+            # §12 bounded-staleness correction: the trajectory was sampled
+            # under an older policy, so the PPO ratio's anchor (lp_old,
+            # scored under the *current* params) is off-policy relative to
+            # the behaviour distribution.  Truncated per-token importance
+            # weights w = min(ρ̄, exp(lp_now − lp_behaviour)) fold into the
+            # advantages — losses.policy_loss sees its standard inputs, so
+            # the paper's compatibility claim extends across the async seam.
+            blp = jnp.asarray(behaviour_lp)
+            if self.mesh is not None:
+                blp = shard_batch(self.mesh, blp)
+            cap = float(is_clip) if is_clip is not None else 2.0
+            w = jnp.minimum(cap, jnp.exp(lp_old - blp)) \
+                * resp_mask.astype(jnp.float32)
+            adv = adv * w
+            times["is_weight_mean"] = float(masked_mean(w, resp_mask))
         self._stage("adv", t0, times, "adv_time")
 
         # ---- updates -------------------------------------------------------
@@ -370,15 +536,16 @@ class Trainer:
             **{k: float(v) for k, v in cinfo.items()},
             **{k: float(v) for k, v in times.items() if isinstance(v, (int, float))},
         }
+        if extra_metrics:
+            # async-loop provenance (staleness, buffer counters, mode) joins
+            # the flat namespace BEFORE the watchdog sees the step
+            metrics.update({k: float(v) for k, v in extra_metrics.items()})
         # §11 schema fix: the step log is routed through a MetricsRegistry
         # so the trainer shares the audited flat-float namespace with
         # SlotEngine.stats()/MeshSlotServer.stats() (one as_dict view, no
         # ad-hoc key drift between surfaces)
         from repro.obs import MetricsRegistry
-        reg = MetricsRegistry()
-        for k, v in metrics.items():
-            reg.set(k, float(v))
-        metrics = reg.as_dict()
+        metrics = MetricsRegistry.from_flat(metrics).as_dict()
         if self.watchdog is not None:
             # may restore params/opt_state/cache to the last snapshot (the
             # poisoned update is undone; step_idx still advances below, so

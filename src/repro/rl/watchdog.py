@@ -50,6 +50,14 @@ class WatchdogConfig:
     max_restores: int = 3                    # give up (raise) past this
     stall_p95_mult: float = 10.0             # adaptive: > mult * p95 = stall
     stall_min_samples: int = 8               # healthy samples to arm p95
+    # §12 async topology: the collect stage lives in the rollout service's
+    # failure domain, so a stalled *service* shows up here not as a long
+    # collect_time but as the consumer waiting on fresh trajectories
+    # (``service_wait_s``) or as an unbounded staleness gauge
+    # (``service_staleness``).  Both route into the same restore-last-good
+    # verdict as an in-process stall.
+    max_service_wait: float = float("inf")   # fresh-trajectory wait cap (s)
+    max_service_staleness: float = float("inf")  # staleness-gauge hard cap
 
 
 class TrainWatchdog:
@@ -62,9 +70,11 @@ class TrainWatchdog:
         self.restores = 0
         self.nonfinite_steps = 0
         self.stalled_steps = 0
+        self.service_stalled_steps = 0
         self.skipped_no_snapshot = 0
         from repro.obs import Histogram
         self._collect_hist = Histogram()     # healthy collect times (§11)
+        self._wait_hist = Histogram()        # healthy trajectory waits (§12)
 
     # ------------------------------------------------------------- plumbing
 
@@ -140,6 +150,21 @@ class TrainWatchdog:
             p95 = self._collect_hist.percentile(95)
             if p95 > 0 and ct > self.cfg.stall_p95_mult * p95:
                 return "stall"
+        # §12: stalled rollout *service* — the async consumer had to wait
+        # far past its normal fresh-trajectory cadence (absolute cap, or
+        # adaptive p95 × mult over the run's own healthy waits), or the
+        # staleness gauge blew past its hard cap.  Same verdict, same
+        # restore-last-good recovery as an in-process collect stall.
+        wt = metrics.get("service_wait_s", 0.0)
+        if wt > self.cfg.max_service_wait:
+            return "service_stall"
+        if self._wait_hist.count >= self.cfg.stall_min_samples:
+            p95 = self._wait_hist.percentile(95)
+            if p95 > 0 and wt > self.cfg.stall_p95_mult * p95:
+                return "service_stall"
+        if metrics.get("service_staleness", 0.0) > \
+                self.cfg.max_service_staleness:
+            return "service_stall"
         return None
 
     def after_step(self, trainer, metrics: Dict[str, float]) -> None:
@@ -150,12 +175,17 @@ class TrainWatchdog:
             ct = float(metrics.get("collect_time", 0.0))
             if ct > 0:
                 self._collect_hist.record(ct)    # healthy samples only
+            wt = float(metrics.get("service_wait_s", 0.0))
+            if wt > 0:
+                self._wait_hist.record(wt)
             if self.snapshots == 0 or \
                     trainer.step_idx % max(1, self.cfg.snapshot_every) == 0:
                 self.snapshot(trainer)
         else:
             if why == "nonfinite":
                 self.nonfinite_steps += 1
+            elif why == "service_stall":
+                self.service_stalled_steps += 1
             else:
                 self.stalled_steps += 1
             if self.restores >= self.cfg.max_restores:
@@ -179,6 +209,9 @@ class TrainWatchdog:
                 f"{prefix}restores": float(self.restores),
                 f"{prefix}nonfinite_steps": float(self.nonfinite_steps),
                 f"{prefix}stalled_steps": float(self.stalled_steps),
+                f"{prefix}service_stalled_steps":
+                    float(self.service_stalled_steps),
                 f"{prefix}skipped_no_snapshot":
                     float(self.skipped_no_snapshot),
-                f"{prefix}collect_p95": self._collect_hist.percentile(95)}
+                f"{prefix}collect_p95": self._collect_hist.percentile(95),
+                f"{prefix}service_wait_p95": self._wait_hist.percentile(95)}

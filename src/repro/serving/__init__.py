@@ -16,9 +16,15 @@ A slot-based serving layer between the engine and its two consumers:
                engine consults at chunk boundaries; with the hardening in
                request/scheduler/engine_loop (deadlines, bounded retry,
                backpressure, quarantine, exact kill-and-resume)
+- rollout_service: the §12 async producer — drives the shared trainer
+               Collector continuously, tags trajectories with the policy
+               version, feeds the bounded traj_buffer under backpressure;
+               WeightSync is its versioned, retrying (core/backoff)
+               weight-publication channel
 """
 from .engine_loop import SlotEngine
 from .faults import EngineKilled, FaultEvent, FaultPlan, seeded_plan
 from .mesh_server import MeshSlotServer, make_slot_engine
 from .request import Request, Response
+from .rollout_service import RolloutService, SyncFailed, WeightSync
 from .scheduler import SlotScheduler

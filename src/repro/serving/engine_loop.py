@@ -41,6 +41,7 @@ exact kill-and-resume (checkpoint/io.save_server_state).
 from __future__ import annotations
 
 import functools
+import math
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -48,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backoff import BackoffConfig
 from repro.core.metrics import FaultStats
 from repro.core.verify import verify_and_prefill
 from repro.obs import MetricsRegistry, get_tracer
@@ -210,6 +212,7 @@ class SlotEngine:
                  faults: Optional[FaultPlan] = None,
                  deadline_steps: Optional[int] = None,
                  max_queue: Optional[int] = None, overflow: str = "reject",
+                 retry_backoff: Optional[BackoffConfig] = None,
                  tracer=None, obs_label: str = ""):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
@@ -258,6 +261,14 @@ class SlotEngine:
         self.deadline_steps = deadline_steps
         self.faults = faults
         self.fault_stats = FaultStats()
+        # §12 backoff adoption: with a BackoffConfig, a reclaimed request
+        # is NOT resubmitted immediately — it is held until the engine
+        # step clock passes its exponential-backoff due step (base/factor
+        # measured in engine steps), so repeated failures stop hammering
+        # the same slot cycle.  None (the default) keeps the §10 behaviour
+        # and existing kill-resume snapshots bit-identical.
+        self.retry_backoff = retry_backoff
+        self._retry_hold: List[Tuple[int, Request]] = []
         self.slot_age = np.zeros(B, np.int64)   # engine steps spent DECODING
         self._nan_due: set = set()              # request_ids awaiting nan
         self._stall_due: Dict[int, int] = {}    # request_id -> phantom steps
@@ -317,6 +328,19 @@ class SlotEngine:
                 logprobs=np.zeros(0, np.float32), length=0,
                 finish_reason=FINISH_SHED, slot=-1, retries=shed.retries)
 
+    def _release_retries(self) -> None:
+        """Re-queue held backoff retries whose due step has passed (§12).
+        Bypasses backpressure the same way an immediate resubmit does —
+        a retry holds no NEW work."""
+        if not self._retry_hold:
+            return
+        now = self._now()
+        due = [r for d, r in self._retry_hold if d <= self.steps]
+        self._retry_hold = [(d, r) for d, r in self._retry_hold
+                            if d > self.steps]
+        for req in due:
+            self.scheduler.resubmit(req, now=now)
+
     def run(self, arrivals: Optional[Iterable[Tuple[int, Request]]] = None,
             max_chunks: Optional[int] = None) -> Dict[int, Response]:
         """Drive the loop until queue + slots drain (and arrivals exhaust).
@@ -330,11 +354,18 @@ class SlotEngine:
         chunks = 0
         while True:
             self._apply_faults()       # may raise EngineKilled (kind 'kill')
+            self._release_retries()    # held backoff retries now due
             while nxt is not None and nxt[0] <= self.steps:
                 self.submit(nxt[1])
                 nxt = next(it, None)
             self._admit()
             if self.scheduler.idle:
+                if self._retry_hold:   # backoff holds are pending work:
+                    due = min(d for d, _ in self._retry_hold)
+                    if nxt is not None:
+                        due = min(due, int(nxt[0]))
+                    self.steps = max(self.steps, due)      # idle fast-forward
+                    continue
                 if nxt is None:
                     break
                 self.steps = max(self.steps, int(nxt[0]))  # idle fast-forward
@@ -850,7 +881,15 @@ class SlotEngine:
                 req.draft_logprobs = np.concatenate(
                     [prev_l, lps]).astype(np.float32)
                 req.draft_eos = False
-            self.scheduler.resubmit(req, now=now)
+            if self.retry_backoff is not None:
+                # §12: hold the retry until its backoff due step — the
+                # request re-enters the queue via _release_retries once
+                # the engine clock catches up (delay grows per retry)
+                delay = self.retry_backoff.delay(req.retries)
+                self._retry_hold.append(
+                    (self.steps + max(0, math.ceil(delay)), req))
+            else:
+                self.scheduler.resubmit(req, now=now)
             if tr.enabled and tr.sampled(req.request_id):
                 tr.event("retry", _lane, cat="fault", ts=self._abs(now),
                          retry=req.retries)
@@ -1014,6 +1053,14 @@ class SlotEngine:
             # kill-and-resume run keeps monotonic counters and percentiles
             "obs": self.metrics.state_dict(),
         }
+        if self._retry_hold:
+            # §12 backoff holds: requests waiting out their retry delay are
+            # in-flight state too — dropping them on resume would lose work.
+            # Written only when non-empty, so default-config snapshots stay
+            # bit-identical to their pre-backoff layout.
+            st["retry_hold"] = {
+                str(i): {"due": np.int64(d), "req": r.to_state()}
+                for i, (d, r) in enumerate(self._retry_hold)}
         if self.draft:
             st["draft"] = {
                 "rate": np.asarray(self._draft_ctrl.rate, np.float64),
@@ -1065,6 +1112,10 @@ class SlotEngine:
             setattr(self.fault_stats, k, int(state["fault_stats"][k]))
         if "obs" in state:          # absent in pre-§11 snapshots
             self.metrics.load_state_dict(state["obs"])
+        hold = state.get("retry_hold", {})   # absent in pre-§12 snapshots
+        self._retry_hold = [
+            (int(hold[str(i)]["due"]), Request.from_state(hold[str(i)]["req"]))
+            for i in range(len(hold))]
         if self.draft and "draft" in state:
             d = state["draft"]
             self._draft_ctrl.rate = np.array(d["rate"], np.float64)

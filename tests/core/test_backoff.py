@@ -1,0 +1,75 @@
+"""Shared exponential-backoff policy (DESIGN.md §12): deterministic
+schedule, injectable sleep, retry budget semantics."""
+import pytest
+
+from repro.core.backoff import BackoffConfig, RetriesExhausted, retry
+
+
+def test_schedule_is_exponential_and_capped():
+    cfg = BackoffConfig(base=0.1, factor=2.0, max_delay=0.5, max_attempts=5)
+    assert cfg.schedule() == [0.1, 0.2, 0.4, 0.5]          # capped at max
+    assert cfg.delay(10) == 0.5
+
+
+def test_jitter_is_deterministic_and_bounded():
+    cfg = BackoffConfig(base=1.0, factor=1.0, max_delay=10.0,
+                        jitter=0.1, seed=42, max_attempts=6)
+    a, b = cfg.schedule(), cfg.schedule()
+    assert a == b                          # pure function of (config, i)
+    for d in a:
+        assert 0.9 <= d <= 1.1             # within ±jitter of the base
+    # a different seed jitters differently (same bounds)
+    assert BackoffConfig(base=1.0, factor=1.0, max_delay=10.0, jitter=0.1,
+                         seed=7, max_attempts=6).schedule() != a
+
+
+def test_retry_succeeds_after_transient_failures():
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise ValueError("transient")
+        return "ok"
+
+    cfg = BackoffConfig(base=0.5, factor=2.0, max_delay=8.0, max_attempts=5)
+    out = retry(flaky, cfg, sleep=slept.append, retry_on=(ValueError,))
+    assert out == "ok" and calls["n"] == 3
+    assert slept == [0.5, 1.0]             # one sleep per failed attempt
+
+
+def test_retry_exhaustion_raises_chained():
+    slept = []
+
+    def always():
+        raise ValueError("down")
+
+    cfg = BackoffConfig(base=0.1, max_attempts=3)
+    with pytest.raises(RetriesExhausted) as ei:
+        retry(always, cfg, sleep=slept.append, retry_on=(ValueError,))
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert len(slept) == 2                 # no sleep after the last attempt
+
+
+def test_retry_on_filters_exception_types():
+    def boom():
+        raise KeyError("not retryable here")
+
+    with pytest.raises(KeyError):          # escapes retry immediately
+        retry(boom, BackoffConfig(max_attempts=5), sleep=lambda d: None,
+              retry_on=(ValueError,))
+
+
+def test_on_retry_hook_sees_attempt_exc_delay():
+    seen = []
+
+    def always():
+        raise ValueError("x")
+
+    cfg = BackoffConfig(base=0.25, factor=2.0, max_delay=10.0,
+                        max_attempts=3)
+    with pytest.raises(RetriesExhausted):
+        retry(always, cfg, sleep=lambda d: None, retry_on=(ValueError,),
+              on_retry=lambda i, e, d: seen.append((i, type(e).__name__, d)))
+    assert seen == [(0, "ValueError", 0.25), (1, "ValueError", 0.5)]

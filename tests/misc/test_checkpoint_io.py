@@ -44,9 +44,23 @@ def test_latest_pointer_is_the_commit_point(tmp_path):
     assert read_latest(d) is None               # on disk but not committed
     write_latest(d, "step_1")
     assert read_latest(d) == "step_1"
+    save_pytree(os.path.join(d, "step_2"), {"x": np.ones(2)})
     write_latest(d, "step_2")                   # pointer flip is atomic
     assert read_latest(d) == "step_2"
     assert _no_tmp_files(tmp_path)
+
+
+def test_read_latest_rejects_dangling_pointer(tmp_path):
+    # §12 hardening: a crash between "pointer flipped" and "files durable"
+    # (or a hand-rolled pointer) can leave ``latest`` naming a checkpoint
+    # with no files on disk — readers must see "no checkpoint", not a name
+    # that raises FileNotFoundError downstream.
+    d = str(tmp_path / "ckpts")
+    write_latest(d, "ghost")
+    assert read_latest(d) is None
+    save_pytree(os.path.join(d, "real"), {"x": np.zeros(1)})
+    write_latest(d, "real")
+    assert read_latest(d) == "real"
 
 
 def _seeded_cache():

@@ -1,0 +1,130 @@
+"""Bounded trajectory buffer (DESIGN.md §12): watermark backpressure,
+shed-oldest overflow, counter reconciliation, exact state round-trip.
+
+The invariants are property-tested through tests/hypothesis_compat.py —
+with hypothesis absent the @given tests skip and the plain ones still run.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.spec_rollout import RolloutBatch
+from repro.data.dataset import PromptBatch
+from repro.rl.traj_buffer import TrajBuffer, Trajectory
+
+
+def _traj(version=0, producer=0, seed=0):
+    rng = np.random.RandomState(seed)
+    B, P, N = 2, 4, 3
+    batch = PromptBatch(tokens=rng.randint(0, 32, (B, P)).astype(np.int32),
+                        mask=np.ones((B, P), bool),
+                        cache_keys=[seed * B + i for i in range(B)],
+                        answers=[1, 2], problem_ids=[0, 1], epoch=version)
+    rb = RolloutBatch(prompt=batch.tokens, prompt_mask=batch.mask,
+                      response=rng.randint(0, 32, (B, N)).astype(np.int32),
+                      response_mask=np.ones((B, N), bool),
+                      behaviour_logprobs=rng.randn(B, N).astype(np.float32),
+                      length=np.full(B, N, np.int32),
+                      metrics={"collect_time": 0.01 * seed})
+    return Trajectory(batch=batch, rb=rb,
+                      rewards=rng.rand(B).astype(np.float32),
+                      version=version, producer=producer)
+
+
+# ------------------------------------------------------------- plain tests
+
+def test_watermark_throttles_before_capacity_sheds():
+    buf = TrajBuffer(capacity=3, high_watermark=2)
+    assert buf.put(_traj(0)) is None
+    assert not buf.should_throttle()
+    assert buf.put(_traj(0, seed=1)) is None
+    assert buf.should_throttle()            # at watermark: producer backs off
+    shed = buf.put(_traj(1, seed=2))        # forced put still accepted
+    assert shed is None and len(buf) == 3
+    shed = buf.put(_traj(2, seed=3))        # past capacity: oldest goes
+    assert shed is not None and shed.version == 0
+    assert len(buf) == 3 and buf.shed == 1
+    buf.check_invariants()
+
+
+def test_fifo_order_and_seq_tags():
+    buf = TrajBuffer(capacity=4)
+    for v in range(3):
+        buf.put(_traj(v, seed=v))
+    got = [buf.get() for _ in range(3)]
+    assert [t.version for t in got] == [0, 1, 2]
+    assert [t.seq for t in got] == [0, 1, 2]
+    assert buf.get() is None                # starved, not an error
+    buf.check_invariants()
+
+
+def test_version_monotonicity_asserted_per_producer():
+    buf = TrajBuffer(capacity=4)
+    buf.put(_traj(5, producer=0))
+    buf.put(_traj(3, producer=1))           # other producer: independent
+    with pytest.raises(AssertionError):
+        buf.put(_traj(4, producer=0))       # time travel is a bug
+
+
+def test_state_dict_round_trip_is_exact():
+    buf = TrajBuffer(capacity=3, high_watermark=2)
+    for v in range(4):                      # forces one shed
+        buf.put(_traj(v, seed=v))
+    buf.get()
+    buf.note_throttled()
+    st_ = buf.state_dict()
+    buf2 = TrajBuffer(capacity=1)
+    buf2.load_state_dict(st_)
+    assert buf2.counters() == buf.counters()
+    assert buf2.capacity == 3 and buf2.high_watermark == 2
+    a, b = buf2.get(), buf.get()
+    assert a.version == b.version and a.seq == b.seq
+    np.testing.assert_array_equal(a.rb.response, b.rb.response)
+    np.testing.assert_array_equal(a.rewards, b.rewards)
+    assert a.rb.metrics == b.rb.metrics
+    assert a.batch.cache_keys == b.batch.cache_keys
+
+
+# --------------------------------------------------------- property tests
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(st.tuples(st.sampled_from(["put", "get"]),
+                             st.integers(0, 2)),     # producer id
+                   max_size=40)
+else:                                                 # pragma: no cover
+    OPS = None
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=OPS, capacity=st.integers(1, 5))
+def test_prop_occupancy_bounded_and_counters_reconcile(ops, capacity):
+    buf = TrajBuffer(capacity=capacity)
+    version = {0: 0, 1: 0, 2: 0}
+    for op, prod in ops:
+        if op == "put":
+            version[prod] += 1              # monotone by construction
+            buf.put(_traj(version[prod], producer=prod, seed=version[prod]))
+        else:
+            buf.get()
+        assert len(buf) <= buf.capacity
+        buf.check_invariants()              # submitted == consumed+shed+occ
+
+
+@settings(max_examples=50, deadline=None)
+@given(versions=st.lists(st.integers(0, 100), min_size=1, max_size=20))
+def test_prop_versions_monotone_per_producer(versions):
+    buf = TrajBuffer(capacity=4)
+    last = None
+    for v in versions:
+        if last is not None and v < last:
+            with pytest.raises(AssertionError):
+                buf.put(_traj(v, seed=v))
+            continue                        # rejected put changes nothing
+        buf.put(_traj(v, seed=v))
+        last = v
+        buf.check_invariants()
+    # drain: consumed versions come out monotone (FIFO of monotone input)
+    out = []
+    while (t := buf.get()) is not None:
+        out.append(t.version)
+    assert out == sorted(out)

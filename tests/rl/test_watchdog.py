@@ -111,3 +111,51 @@ def test_restore_carries_cache_and_counters(tmp_path):
     wd.after_step(tr, {"loss": float("nan")})
     assert sorted(tr.cache._store) == cached
     assert tr.gen_steps == gen_steps
+
+
+def test_service_stall_routes_through_restore(tmp_path):
+    """§12: a stalled rollout *service* surfaces as the consumer waiting
+    far past its normal fresh-trajectory cadence — same restore-last-good
+    verdict as an in-process collect stall."""
+    wd = TrainWatchdog(WatchdogConfig(checkpoint_dir=str(tmp_path),
+                                      snapshot_every=1,
+                                      max_service_wait=1.0))
+    tr = _make_trainer(watchdog=wd)
+    tr.train_step()
+    good = jax.tree.map(np.asarray, tr.params)
+    tr.params = jax.tree.map(lambda x: x * 2.0, tr.params)
+    m = {"loss": 0.1, "reward_mean": 0.0, "service_wait_s": 5.0}
+    wd.after_step(tr, m)
+    assert wd.service_stalled_steps == 1 and wd.restores == 1
+    assert m["watchdog_restored"] == 1.0
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(good)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_service_stall_adaptive_p95(tmp_path):
+    """No absolute cap set: the adaptive p95 × mult detector arms off the
+    run's own healthy trajectory waits and trips on the outlier."""
+    wd = TrainWatchdog(WatchdogConfig(checkpoint_dir=str(tmp_path),
+                                      snapshot_every=1, stall_p95_mult=10.0,
+                                      stall_min_samples=4))
+    tr = _make_trainer(watchdog=wd)
+    tr.train_step()
+    for i in range(5):                          # healthy waits ~10ms
+        wd.after_step(tr, {"loss": 0.1, "reward_mean": 0.0,
+                           "service_wait_s": 0.01 + 0.001 * i})
+    assert wd.service_stalled_steps == 0
+    m = {"loss": 0.1, "reward_mean": 0.0, "service_wait_s": 30.0}
+    wd.after_step(tr, m)
+    assert wd.service_stalled_steps == 1
+    assert m["watchdog_service_wait_p95"] > 0
+
+
+def test_staleness_gauge_blowout_is_a_service_stall(tmp_path):
+    wd = TrainWatchdog(WatchdogConfig(checkpoint_dir=str(tmp_path),
+                                      snapshot_every=1,
+                                      max_service_staleness=4.0))
+    tr = _make_trainer(watchdog=wd)
+    tr.train_step()
+    m = {"loss": 0.1, "reward_mean": 0.0, "service_staleness": 9.0}
+    wd.after_step(tr, m)
+    assert wd.service_stalled_steps == 1 and m["watchdog_restored"] == 1.0

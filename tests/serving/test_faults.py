@@ -340,3 +340,56 @@ def test_seeded_chaos_plan(setup, baseline):
     assert st["fault_nan_events"] + st["timeouts"] > 0
     assert st["retried_requests"] > 0
     assert eng.scheduler.idle
+
+
+def test_retry_backoff_holds_then_completes(setup, baseline):
+    """§12 backoff adoption: with a BackoffConfig, a reclaimed request is
+    held out of the queue until its exponential-backoff due step, then
+    re-admitted through the same speculative-prefix retry path — output
+    stays token-identical to an immediate-retry run."""
+    from repro.core.backoff import BackoffConfig
+    cfg, params, prompts, keys = setup
+    plan = FaultPlan([FaultEvent("stall", at_step=0, request_id=0,
+                                 count=10 ** 6)])
+    eng, resps = _run(cfg, params, prompts, keys, faults=plan,
+                      deadline_steps=64,
+                      retry_backoff=BackoffConfig(base=8.0, factor=2.0,
+                                                  max_delay=64.0))
+    for i in range(R):
+        assert resps[i].finish_reason in SUCCESS
+        np.testing.assert_array_equal(resps[i].tokens, baseline[i])
+    assert resps[0].retries == 1
+    assert eng.stats()["retried_requests"] == 1
+    assert not eng._retry_hold                  # drained by completion
+
+
+def test_retry_backoff_hold_rides_kill_resume(setup):
+    """A held retry is in-flight work: it must survive state_dict /
+    load_state_dict, and default-config snapshots must not grow a key."""
+    from repro.core.backoff import BackoffConfig
+    cfg, params, prompts, keys = setup
+    bo = BackoffConfig(base=8.0, factor=2.0, max_delay=64.0)
+    plan = FaultPlan([FaultEvent("stall", at_step=0, request_id=0,
+                                 count=10 ** 6)])
+    eng = SlotEngine(params, cfg, _gen(), num_slots=2, prompt_width=P,
+                     chunk_steps=4, faults=plan, deadline_steps=64,
+                     retry_backoff=bo)
+    for r in _reqs(prompts, keys):
+        eng.submit(r)
+    # run until the stalled request has been reclaimed into the hold
+    while not eng._retry_hold:
+        eng.run(max_chunks=1)
+    st = eng.state_dict()
+    assert "retry_hold" in st and len(st["retry_hold"]) == 1
+
+    eng2 = SlotEngine(params, cfg, _gen(), num_slots=2, prompt_width=P,
+                      chunk_steps=4, deadline_steps=64, retry_backoff=bo)
+    eng2.load_state_dict(st)
+    assert len(eng2._retry_hold) == 1
+    assert eng2._retry_hold[0][0] == eng._retry_hold[0][0]
+    r1, r2 = eng.run(), eng2.run()
+    for i in r1:
+        np.testing.assert_array_equal(r1[i].tokens, r2[i].tokens)
+    # an engine with no holds keeps the pre-§12 snapshot layout
+    eng3, _ = _run(cfg, params, prompts, keys, slots=3)
+    assert "retry_hold" not in eng3.state_dict()
