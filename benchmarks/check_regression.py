@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 from typing import Iterator, Tuple
@@ -57,6 +58,17 @@ def check_file(baseline_path: str, fresh_path: str, threshold: float,
         fval = fresh.get(key)
         if fval is None:
             print(f"FAIL {name}:{key} missing from fresh record")
+            failed += 1
+            checked += 1
+            continue
+        # a NaN/inf or non-positive ratio means the bench divided by zero
+        # (or recorded garbage): fail LOUDLY instead of letting float
+        # comparison semantics (inf >= inf, 0.0 >= 0.0) silently pass
+        bad = [t for t, v in (("baseline", bval), ("fresh", fval))
+               if not math.isfinite(v) or v <= 0.0]
+        if bad:
+            print(f"FAIL {name}:{key} non-finite/non-positive {bad[0]} "
+                  f"ratio (baseline {bval!r}, fresh {fval!r})")
             failed += 1
             checked += 1
             continue

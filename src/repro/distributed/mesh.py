@@ -207,10 +207,24 @@ def decode_cache_pspecs(cfg: ModelConfig, caches, mesh: Mesh, *,
     for run in caches:
         new_run = {}
         for group, sub in run.items():
+            paged = "table" in sub
             new_sub = {}
             for name, leaf in sub.items():
                 kv_heads = group == "self" and name in ("k", "v") \
                     and leaf.ndim == 5
+                if paged:
+                    # §13 paged layout: pool axis 1 is the GLOBAL block
+                    # pool — rows of DIFFERENT slots interleave there, so
+                    # it must never shard like a batch axis.  Replicate
+                    # everything except the GQA pool head axis (axis 2,
+                    # same slot as dense), which shards over ``model``.
+                    spec = [None] * leaf.ndim
+                    if kv_heads:
+                        msz = model_size(mesh)
+                        if msz > 1 and leaf.shape[2] % msz == 0:
+                            spec[2] = "model"
+                    new_sub[name] = P(*spec)
+                    continue
                 spec = _cache_leaf_pspec(leaf.shape, cfg, mesh, kv_heads)
                 if not batch and len(spec) > 1:
                     spec = P(spec[0], None, *spec[2:])

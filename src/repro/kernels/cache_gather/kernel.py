@@ -53,3 +53,38 @@ def cache_roll_pallas(buf, shift, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
         interpret=interpret,
     )(shift.astype(jnp.int32), buf)
+
+
+def _gather_kernel(tab_ref, pool_ref, out_ref):
+    del tab_ref  # consumed by the index map, not the body
+    out_ref[0, 0] = pool_ref[0]
+
+
+def paged_gather_pallas(pool, table, *, interpret: bool = False):
+    """Paged-cache gather: materialise logical rows from a block pool.
+
+    pool: (NB, X, D) physical blocks (X = bs, or Hkv*bs with heads folded
+    into the sublane dim); table: (R, nb) int32 block ids.  Returns
+    (R, nb, X, D) with out[r, i] = pool[table[r, i]].
+
+    The table rides scalar prefetch so each program's block DMA is
+    redirected at *index-map* time — the same machinery the paged decode
+    kernel uses — and the kernel body is a pure VMEM copy (the compaction
+    counterpart of cache_roll for the §13 layout).
+    """
+    NB, X, D = pool.shape
+    R, nb = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, nb),
+        in_specs=[pl.BlockSpec((1, X, D),
+                               lambda r, i, tab_ref: (tab_ref[r, i], 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, X, D),
+                               lambda r, i, tab_ref: (r, i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, nb, X, D), pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pool)

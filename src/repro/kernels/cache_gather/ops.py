@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import cache_roll_pallas
+from .kernel import cache_roll_pallas, paged_gather_pallas
 from .ref import cache_roll_ref
 
 
@@ -28,3 +28,23 @@ def cache_roll(buf, shift, *, impl: str = "auto"):
     if impl == "ref":
         return cache_roll_ref(buf, shift)
     return cache_roll_pallas(buf, shift, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_gather(pool, table, *, impl: str = "auto"):
+    """pool: (NB, X, D); table: (R, nb) int32 in [0, NB).
+
+    Returns (R, nb, X, D) with out[r, i] = pool[table[r, i]] — the paged
+    counterpart of this module's compaction primitive (DESIGN.md §13): it
+    materialises the dense logical view of a block pool, which the paged
+    realign path rolls with ``cache_roll`` before re-paging.
+    impl: 'auto' (pallas on TPU, ref elsewhere) | 'pallas' | 'interpret' | 'ref'.
+    """
+    assert pool.ndim == 3 and table.ndim == 2, (pool.shape, table.shape)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        R, nb = table.shape
+        return jnp.take(pool, table.reshape(-1), axis=0).reshape(
+            R, nb, *pool.shape[1:])
+    return paged_gather_pallas(pool, table, interpret=(impl == "interpret"))

@@ -47,3 +47,40 @@ def cache_slot_write(dst, src, dst_rows, *, impl: str = "auto"):
         return cache_slot_write_ref(dst, src, src_for_dst)
     return cache_slot_write_pallas(dst, src, src_for_dst,
                                    interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_slot_write(pool, src, tables, *, impl: str = "auto"):
+    """Paged admission counterpart of ``cache_slot_write`` (DESIGN.md §13).
+
+    pool: (run, NB, Hkv, bs, D) or (run, NB, bs, D) physical block pool;
+    src: (run, R, Hkv, S, D) / (run, R, S, D) dense admitted rows with
+    S == nb * bs; tables: (run, R, nb) int32 — the block-table rows of the
+    admitted slots.  Each dense source row is cut into nb logical blocks
+    and scattered to the physical blocks its table references; every other
+    pool block is untouched.
+
+    The scatter itself reuses the ``cache_slot_write`` dest-walking kernel:
+    physical blocks are flattened to (run*NB, Hkv*bs, D) rows and the
+    block ids become destination-row indices, so the Pallas path gets the
+    same redirect-the-DMA schedule admission already uses for dense slots.
+    """
+    run_len, NB = pool.shape[:2]
+    bs, D = pool.shape[-2], pool.shape[-1]
+    nb = tables.shape[-1]
+    R = tables.shape[1]
+    assert tables.shape == (run_len, R, nb), tables.shape
+    if pool.ndim == 5:
+        Hkv = pool.shape[2]
+        blocks = (src.reshape(run_len, R, Hkv, nb, bs, D)
+                  .transpose(0, 1, 3, 2, 4, 5)
+                  .reshape(run_len * R * nb, Hkv * bs, D))
+        flat_pool = pool.reshape(run_len * NB, Hkv * bs, D)
+    else:
+        blocks = src.reshape(run_len * R * nb, bs, D)
+        flat_pool = pool.reshape(run_len * NB, bs, D)
+    r0 = jnp.arange(run_len, dtype=jnp.int32)[:, None, None]
+    rows = (r0 * NB + tables.astype(jnp.int32)).reshape(-1)
+    out = cache_slot_write(flat_pool, blocks.astype(pool.dtype), rows,
+                           impl=impl)
+    return out.reshape(pool.shape)

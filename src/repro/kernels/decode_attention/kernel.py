@@ -106,6 +106,90 @@ def _combine(m, l, acc):
     return acc_tot / jnp.where(l_tot > 0, l_tot, 1.0)[..., None]
 
 
+def _paged_kernel(len_ref, start_ref, qpos0_ref, qlen_ref, table_ref,
+                  kpos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, window: int, block_k: int, T: int):
+    # identical math to the dense kernel — the block table only redirects
+    # the K/V DMAs (see the index maps in paged_decode_attention_pallas)
+    del table_ref
+    _decode_kernel(len_ref, start_ref, qpos0_ref, qlen_ref, kpos_ref, q_ref,
+                   k_ref, v_ref, m_ref, l_ref, acc_ref, scale=scale,
+                   window=window, block_k=block_k, T=T)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, table, q_pos0, q_len,
+                                  k_pos, lengths, starts, *, window: int = 0,
+                                  interpret: bool = False):
+    """Flash-decode over a paged KV cache (DESIGN.md §13).
+
+    Same split-K schedule and kernel body as ``decode_attention_pallas``,
+    but K/V live in a physical block pool — ``k_pool``: (NB, Hkv, bs, Dk),
+    ``v_pool``: (NB, Hkv, bs, Dv) — and each row's logical cache is defined
+    by ``table``: (B, nb) int32 block ids.  The split axis of the grid *is*
+    the logical block axis (``block_k == bs``), so the per-split K/V index
+    maps simply translate split ``s`` through the prefetched table:
+    ``table[b, s]``.  Dead splits (outside [starts, lengths)) redirect to
+    physical block 0 — the allocator's pinned sink — exactly as the dense
+    kernel redirects to its own block 0.  ``k_pos`` stays dense (B, S =
+    nb*bs), so masking is untouched: outputs are bit-identical to running
+    the dense kernel on the gathered cache.
+    """
+    B, Hq, T, Dk = q.shape
+    NB, Hkv, bs, _ = k_pool.shape
+    Dv = v_pool.shape[-1]
+    nb = table.shape[1]
+    S = nb * bs
+    assert k_pos.shape == (B, S), (k_pos.shape, (B, S))
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, T, Dk).reshape(B, Hkv, G * T, Dk)
+    scale = 1.0 / (Dk ** 0.5)
+
+    def _live_split(s, len_ref, start_ref, b):
+        return (s * bs < len_ref[b]) & ((s + 1) * bs > start_ref[b])
+
+    def _kv_block(b, h, s, len_ref, start_ref, qp_ref, ql_ref, table_ref):
+        # live split s of row b reads physical block table[b, s]; dead
+        # splits re-fetch the sink (block 0) instead of streaming recycled
+        # blocks (same-block DMA is elided)
+        live = _live_split(s, len_ref, start_ref, b)
+        return (jnp.where(live, table_ref[b, s], 0), h, 0, 0)
+
+    def _kpos_block(b, h, s, len_ref, start_ref, *_):
+        return (b, jnp.where(_live_split(s, len_ref, start_ref, b), s, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, bs), _kpos_block),
+            pl.BlockSpec((1, 1, G * T, Dk), lambda b, h, s, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Dk), _kv_block),
+            pl.BlockSpec((1, 1, bs, Dv), _kv_block),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G * T), lambda b, h, s, *_: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, G * T), lambda b, h, s, *_: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, G * T, Dv),
+                         lambda b, h, s, *_: (b, h, s, 0, 0)),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, window=window,
+                          block_k=bs, T=T),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, nb, G * T), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nb, G * T), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nb, G * T, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), starts.astype(jnp.int32),
+      q_pos0.astype(jnp.int32), q_len.astype(jnp.int32),
+      table.astype(jnp.int32), k_pos, qg, k_pool, v_pool)
+    out = _combine(m, l, acc)                            # (B, Hkv, G*T, Dv)
+    return out.reshape(B, Hkv, G, T, Dv).reshape(B, Hq, T, Dv)
+
+
 def decode_attention_pallas(q, k, v, q_pos0, q_len, k_pos, lengths, starts, *,
                             window: int = 0, block_k: int = 128,
                             interpret: bool = False):

@@ -24,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_pallas
+from .kernel import decode_attention_pallas, paged_decode_attention_pallas
 from .ref import decode_attention_blocked, decode_attention_ref
 
 # Below this cache width a single naive score pass beats the blocked
@@ -84,3 +84,75 @@ def decode_attention(q, k, v, q_pos, k_pos, lengths=None, starts=None, *,
                                    lengths, starts, window=window,
                                    block_k=block_k,
                                    interpret=(impl == "interpret"))
+
+
+def gather_paged_kv(pool, table):
+    """Materialise the logical dense view of a paged K/V pool.
+
+    pool: (NB, Hkv, bs, D) (GQA) or (NB, bs, D) (MLA latents); table:
+    (B, nb) int32.  Returns (B, Hkv, nb*bs, D) / (B, nb*bs, D) — the exact
+    array a dense cache would hold at the same positions, which is what
+    makes every dense attention path (naive / blocked / mesh shard_map) a
+    valid paged fallback.  Under jit the gather is dead-code-eliminated
+    whenever the paged kernel path is taken instead.
+    """
+    B, nb = table.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)
+    if pool.ndim == 4:
+        NB, Hkv, bs, D = pool.shape
+        return (g.reshape(B, nb, Hkv, bs, D).transpose(0, 2, 1, 3, 4)
+                .reshape(B, Hkv, nb * bs, D))
+    NB, bs, D = pool.shape
+    return g.reshape(B, nb * bs, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def paged_decode_attention(q, k_pool, v_pool, table, q_pos, k_pos,
+                           lengths=None, starts=None, *, window: int = 0,
+                           impl: str = "auto"):
+    """Short-query decode attention over a paged cache (DESIGN.md §13).
+
+    q: (B, Hq, T, Dk); k_pool/v_pool: (NB, Hkv, bs, D) physical block
+    pools; table: (B, nb) int32 block table (logical slot j of row b lives
+    at ``pool[table[b, j // bs], :, j % bs]``); k_pos: (B, nb*bs) dense
+    positions; lengths/starts as in ``decode_attention``.
+
+    impl: 'pallas' | 'interpret' run the paged flash kernel (split axis ==
+    block axis, table-redirected DMAs); 'naive' | 'blocked' | 'auto'-on-CPU
+    gather the pool to its dense view and defer to ``decode_attention`` —
+    bit-identical by construction, and the oracle the kernel is tested
+    against.
+    """
+    B, _, T = q.shape[:3]
+    bs = k_pool.shape[-2]
+    S = table.shape[1] * bs
+    if k_pos.shape[1] < S:
+        # logical width short of the block-rounded physical width: the
+        # rounding slack is empty by construction, so pad with -1 (masked)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, S - k_pos.shape[1])),
+                        constant_values=-1)
+    if impl == "auto":
+        if jax.default_backend() == "tpu":
+            impl = "pallas"
+        else:
+            impl = "naive" if S <= NAIVE_MAX_S else "blocked"
+    if impl in ("naive", "blocked"):
+        k = gather_paged_kv(k_pool, table)
+        v = gather_paged_kv(v_pool, table)
+        return decode_attention(q, k, v, q_pos, k_pos, lengths, starts,
+                                window=window, impl=impl, block_k=bs)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.minimum(lengths.reshape(B).astype(jnp.int32), S)
+    if starts is None:
+        starts = jnp.zeros((B,), jnp.int32)
+    starts = jnp.clip(starts.reshape(B).astype(jnp.int32), 0, S)
+    q_pos = q_pos.reshape(B, -1).astype(jnp.int32)
+    if q_pos.shape != (B, T):
+        raise ValueError(f"q_pos {q_pos.shape} must be (B, T)={B, T} for "
+                         f"T > 1 query blocks")
+    q_pos0 = q_pos[:, 0]
+    q_len = jnp.sum((q_pos >= 0).astype(jnp.int32), axis=1)
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, table, q_pos0, q_len, k_pos, lengths, starts,
+        window=window, interpret=(impl == "interpret"))

@@ -150,6 +150,14 @@ def main(argv=None):
                    help="on SIGTERM/Ctrl-C, snapshot the exact server state "
                         "here (checkpoint/io.save_server_state) for "
                         "kill-and-resume; empty = drain without snapshot")
+    p.add_argument("--cache-layout", choices=["dense", "paged"],
+                   default="dense",
+                   help="§13 KV cache layout: 'paged' serves over a block "
+                        "pool with CoW GRPO prompt sharing (token-identical "
+                        "to dense; resident batch at fixed HBM grows by the "
+                        "per-row block-rounding margin)")
+    p.add_argument("--kv-block-size", type=int, default=0,
+                   help="paged KV block size in tokens (0 = config default)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -159,6 +167,10 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced(vocab_size=max(VOCAB_SIZE, 64))
     if cfg.vocab_size < VOCAB_SIZE:
         cfg = cfg.replace(vocab_size=VOCAB_SIZE)
+    if args.cache_layout != cfg.cache_layout:
+        cfg = cfg.replace(cache_layout=args.cache_layout)
+    if args.kv_block_size > 0:
+        cfg = cfg.replace(kv_block_size=args.kv_block_size)
     params = M.init_lm(jax.random.PRNGKey(args.seed), cfg)
     gen = GenerateConfig(max_new_tokens=max_new)
     mesh = MeshConfig(data=args.mesh_data, model=args.mesh_model,

@@ -12,9 +12,18 @@ A query at position ``pq`` may attend to a key at position ``pk`` iff::
 This one rule serves training, left-padded prefill and single-token decode,
 so prefill+decode is provably equivalent to a full forward (tested).
 
-KV caches are dense ``(B, Hkv, S, D)`` buffers plus a ``pos`` array (B, S)
-holding each slot's position (-1 = empty).  TPU adaptation note: no paged KV
-— dense, statically-shaped caches are what XLA/TPU wants (see DESIGN.md §3).
+KV caches come in two layouts (``cfg.cache_layout``, DESIGN.md §13):
+
+* **dense** (default): ``(B, Hkv, S, D)`` buffers plus a ``pos`` array
+  (B, S) holding each slot's position (-1 = empty).
+* **paged**: physical block pools ``(NB, Hkv, bs, D)`` plus an int32 block
+  ``table`` (B, nb) mapping logical block → physical block (logical slot j
+  of row b lives at ``pool[table[b, j // bs], :, j % bs]``).  ``pos`` stays
+  dense, so position-based masking — and therefore every output — is
+  untouched by the layout; physical block 0 is a reserved garbage sink
+  (serving/block_table.py).  Both layouts stay statically shaped, which is
+  what XLA/TPU wants; paging only redirects which tiles the decode kernel
+  DMAs.
 """
 from __future__ import annotations
 
@@ -141,7 +150,7 @@ def _decode_shaped(cache, kv_x, causal, T: int, kv_length) -> bool:
 
 def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
                       window: int, cache_start, kv_length, kv_start,
-                      use_pallas: bool, mesh=None) -> jnp.ndarray:
+                      use_pallas: bool, mesh=None, paged=None) -> jnp.ndarray:
     """Route a decode-shaped (short-T, cached) call to the flash-decode op.
 
     ``kv_length`` is the per-row live cache extent.  When the caller does
@@ -178,12 +187,23 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
     # remaining "auto" resolves in the op: pallas on TPU, else naive for
     # tiny caches / length-bounded blocked beyond (DESIGN.md §7)
     if mesh is not None:
+        # paged + mesh reuses the dense shard_map path on the gathered
+        # logical view the caller already built (k/v here) — the gather is
+        # a per-shard-local permutation once pools stay unsharded on batch
         from repro.distributed.shard_wrap import sharded_decode_attention
         if starts is None:
             starts = jnp.zeros((B,), jnp.int32)
         return sharded_decode_attention(
             mesh, q, k.astype(q.dtype), v.astype(q.dtype), q_pos,
             kv_pos, lengths, starts, window=window, impl=impl)
+    if paged is not None and impl in ("pallas", "interpret"):
+        # the paged flash kernel consumes the block pools directly (the
+        # gathered k/v above become dead code under jit)
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        k_pool, v_pool, table = paged
+        return paged_decode_attention(
+            q, k_pool.astype(q.dtype), v_pool.astype(q.dtype), table,
+            q_pos, kv_pos, lengths, starts, window=window, impl=impl)
     from repro.kernels.decode_attention.ops import decode_attention
     return decode_attention(q, k.astype(q.dtype), v.astype(q.dtype),
                             q_pos, kv_pos, lengths, starts,
@@ -192,6 +212,8 @@ def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, kv_pos, *,
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     hd = cfg.resolved_head_dim
+    if cfg.cache_layout == "paged":
+        return init_paged_kv_cache(cfg, batch, max_len, dtype)
     if cfg.attention_kind == "mla":
         return {
             "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
@@ -202,6 +224,50 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
         "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
         "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
         "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                        *, num_blocks: Optional[int] = None,
+                        table=None) -> dict:
+    """Paged layer cache (DESIGN.md §13).
+
+    The *logical* width stays exactly ``max_len`` (the ``pos`` array is
+    byte-identical to the dense layout's, and every gather slices the
+    block-rounded physical view back to it — which is what makes paged
+    outputs bit-exact against dense, not merely close); only the physical
+    pools are rounded up to whole blocks.
+
+    Without ``table``, each row owns a contiguous identity stripe of the
+    pool — the zero-bookkeeping layout the pure-functional paths
+    (``generate``, one-pass resume, drafted decode) use, exercising the
+    same paged read/write machinery as the allocator-managed serving
+    engine.  ``num_blocks``/``table`` let the serving engine supply its own
+    pool size (with the block-0 sink) and allocator-issued tables.
+    """
+    bs = cfg.kv_block_size
+    nb = -(-max_len // bs)                   # physical blocks per row
+    if table is None:
+        table = (jnp.arange(batch * nb, dtype=jnp.int32).reshape(batch, nb))
+        if num_blocks is None:
+            num_blocks = batch * nb
+    else:
+        table = jnp.asarray(table, jnp.int32)
+        assert table.shape == (batch, nb), (table.shape, (batch, nb))
+        assert num_blocks is not None
+    if cfg.attention_kind == "mla":
+        return {
+            "ckv": jnp.zeros((num_blocks, bs, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((num_blocks, bs, cfg.qk_rope_head_dim), dtype),
+            "pos": jnp.full((batch, max_len), -1, jnp.int32),
+            "table": table,
+        }
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_blocks, cfg.num_kv_heads, bs, hd), dtype),
+        "v": jnp.zeros((num_blocks, cfg.num_kv_heads, bs, hd), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "table": table,
     }
 
 
@@ -220,6 +286,86 @@ def _cache_write(buf, update, start, axis: int = -2):
     return jax.vmap(
         lambda b, u, s: jax.lax.dynamic_update_slice_in_dim(b, u, s, axis)
     )(buf, update, start.astype(jnp.int32))
+
+
+def _paged_write(pool, update, start, table, s_logical: int):
+    """Paged counterpart of ``_cache_write``: scatter a T-token update into
+    the physical block pool through the row's block table.
+
+    pool: (NB, Hkv, bs, D) or (NB, bs, D); update: (B, Hkv, T, D) /
+    (B, T, D); start: scalar or (B,) int32; s_logical: the logical cache
+    width (the ``pos`` array's, which may be short of ``nb * bs`` by the
+    block-rounding slack).  Slot mapping matches the dense DUS semantics
+    exactly — the effective start is clamped to ``s_logical - T`` so the
+    whole window fits, and token t lands at logical slot ``start + t``
+    (physical ``pool[table[b, (start+t) // bs], ..., (start+t) % bs]``).
+
+    Two regimes: a large block-aligned update (prefill) scatters whole
+    blocks; a short update (decode step / draft block, T <=
+    DECODE_BLOCK_MAX_T) scatters per token.  Both are plain jnp scatters —
+    the layout transform is memory-bound and XLA-friendly; only the
+    attention *read* has a Pallas kernel.
+    """
+    update = update.astype(pool.dtype)
+    bs = pool.shape[-2]
+    B, nb = table.shape
+    S = s_logical                     # clamp like dense DUS at this width
+    gqa = pool.ndim == 4
+    T = update.shape[2] if gqa else update.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    s0 = jnp.clip(jnp.broadcast_to(start.reshape(-1), (B,)), 0, S - T)
+    if jnp.ndim(start) == 0 and T >= bs:
+        # block-aligned prefill: the only scalar-start large-T callers write
+        # at slot 0 (prefill / verify_and_prefill), so start % bs == 0
+        # holds.  A ragged tail is zero-padded to a whole block — the extra
+        # slots stay pos == -1 (masked) until a later decode write claims
+        # them.
+        pad = (-T) % bs
+        if pad:
+            width = [(0, 0)] * update.ndim
+            width[2 if gqa else 1] = (0, pad)
+            update = jnp.pad(update, width)
+        nbw = (T + pad) // bs
+        b0 = s0 // bs                                       # (B,)
+        rows = jnp.arange(B)
+        if gqa:
+            chunks = update.reshape(B, update.shape[1], nbw, bs, -1)
+            for i in range(nbw):
+                blk = table[rows, b0 + i]
+                pool = pool.at[blk].set(chunks[:, :, i])
+        else:
+            chunks = update.reshape(B, nbw, bs, -1)
+            for i in range(nbw):
+                blk = table[rows, b0 + i]
+                pool = pool.at[blk].set(chunks[:, i])
+        return pool
+    rows = jnp.arange(B)
+    for t in range(T):
+        idx = s0 + t
+        blk = table[rows, idx // bs]
+        off = idx % bs
+        if gqa:
+            pool = pool.at[blk, :, off].set(update[:, :, t])
+        else:
+            pool = pool.at[blk, off].set(update[:, t])
+    return pool
+
+
+def _paged_gather(pool, table, s_logical: int):
+    """Dense logical view of a paged pool, sliced to the logical width:
+    (B, Hkv, s_logical, D) / (B, s_logical, D) — shape-identical (and
+    value-identical) to the dense cache buffer, so every downstream fp op
+    runs bit-exactly the dense program.  Read-side fallback for the
+    non-kernel attention paths; DCE'd by XLA when the paged Pallas kernel
+    consumes the pools directly."""
+    B, nb = table.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)
+    if pool.ndim == 4:
+        NB, Hkv, bs, D = pool.shape
+        return (g.reshape(B, nb, Hkv, bs, D).transpose(0, 2, 1, 3, 4)
+                .reshape(B, Hkv, nb * bs, D)[:, :, :s_logical])
+    NB, bs, D = pool.shape
+    return g.reshape(B, nb * bs, D)[:, :s_logical]
 
 
 # ------------------------------------------------------------------ GQA layer
@@ -277,13 +423,29 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
         # cross-attention: no rope (whisper style learned enc positions)
 
     new_cache = None
+    paged = None
     if cache is not None:
-        k_all = _cache_write(cache["k"], k, cache_start)
-        v_all = _cache_write(cache["v"], v, cache_start)
-        pos_all = _cache_write(cache["pos"], kv_pos.astype(jnp.int32),
-                               cache_start, axis=-1)
-        new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
-        k, v, kv_pos = k_all, v_all, pos_all
+        if "table" in cache:
+            table = cache["table"]
+            S_log = cache["pos"].shape[-1]
+            k_pool = _paged_write(cache["k"], k, cache_start, table, S_log)
+            v_pool = _paged_write(cache["v"], v, cache_start, table, S_log)
+            pos_all = _cache_write(cache["pos"], kv_pos.astype(jnp.int32),
+                                   cache_start, axis=-1)
+            new_cache = {"k": k_pool, "v": v_pool, "pos": pos_all,
+                         "table": table}
+            paged = (k_pool, v_pool, table)
+            # dense logical view for the non-kernel paths; DCE'd when the
+            # paged kernel consumes the pools directly
+            k, v, kv_pos = (_paged_gather(k_pool, table, S_log),
+                            _paged_gather(v_pool, table, S_log), pos_all)
+        else:
+            k_all = _cache_write(cache["k"], k, cache_start)
+            v_all = _cache_write(cache["v"], v, cache_start)
+            pos_all = _cache_write(cache["pos"], kv_pos.astype(jnp.int32),
+                                   cache_start, axis=-1)
+            new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
+            k, v, kv_pos = k_all, v_all, pos_all
 
     if _decode_shaped(cache, kv_x, causal, T, kv_length):
         # short-query decode (single token, or a k+1 draft-verify block):
@@ -293,7 +455,7 @@ def apply_gqa(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
                                 window=cfg.sliding_window,
                                 cache_start=cache_start, kv_length=kv_length,
                                 kv_start=kv_start, use_pallas=use_pallas,
-                                mesh=mesh)
+                                mesh=mesh, paged=paged)
     elif use_pallas and kv_x is None and T > 1:
         # Pallas flash kernel (TPU; interpret mode in tests).  Same schedule
         # as _blocked_attention but with MXU-aligned VMEM tiles.  The decode
@@ -368,13 +530,31 @@ def apply_mla(p, cfg: ModelConfig, x, positions, *, cache=None, cache_start=None
     kv_pos = positions
     new_cache = None
     if cache is not None:
-        ckv_all = _cache_write(cache["ckv"], ckv, cache_start, axis=-2)
-        krope_all = _cache_write(cache["krope"], k_rope[:, 0], cache_start,
-                                 axis=-2)
-        pos_all = _cache_write(cache["pos"], positions.astype(jnp.int32),
-                               cache_start, axis=-1)
-        new_cache = {"ckv": ckv_all, "krope": krope_all, "pos": pos_all}
-        ckv, k_rope, kv_pos = ckv_all, krope_all[:, None], pos_all
+        if "table" in cache:
+            # paged MLA: latents live in block pools; reads always go
+            # through the dense gather (decompression needs the full
+            # logical view anyway, DESIGN.md §7)
+            table = cache["table"]
+            S_log = cache["pos"].shape[-1]
+            ckv_pool = _paged_write(cache["ckv"], ckv, cache_start, table,
+                                    S_log)
+            krope_pool = _paged_write(cache["krope"], k_rope[:, 0],
+                                      cache_start, table, S_log)
+            pos_all = _cache_write(cache["pos"], positions.astype(jnp.int32),
+                                   cache_start, axis=-1)
+            new_cache = {"ckv": ckv_pool, "krope": krope_pool,
+                         "pos": pos_all, "table": table}
+            ckv = _paged_gather(ckv_pool, table, S_log)
+            k_rope = _paged_gather(krope_pool, table, S_log)[:, None]
+            kv_pos = pos_all
+        else:
+            ckv_all = _cache_write(cache["ckv"], ckv, cache_start, axis=-2)
+            krope_all = _cache_write(cache["krope"], k_rope[:, 0],
+                                     cache_start, axis=-2)
+            pos_all = _cache_write(cache["pos"], positions.astype(jnp.int32),
+                                   cache_start, axis=-1)
+            new_cache = {"ckv": ckv_all, "krope": krope_all, "pos": pos_all}
+            ckv, k_rope, kv_pos = ckv_all, krope_all[:, None], pos_all
 
     # decompress latent -> per-head K_nope and V
     kv = apply_dense(p["wkv_b"], ckv.astype(x.dtype))

@@ -51,6 +51,11 @@ class ModelConfig:
                                       # naive for tiny caches, length-bounded blocked
                                       # beyond) | naive | blocked | pallas | interpret
 
+    # -- KV cache layout (DESIGN.md §13) -------------------------------------
+    cache_layout: str = "dense"       # dense (contiguous (B, S) slabs) | paged
+                                      # (block-table pools, CoW prompt sharing)
+    kv_block_size: int = 32           # paged: KV slots per physical block
+
     # -- MLA (deepseek-v3) ---------------------------------------------------
     q_lora_rank: int = 0
     kv_lora_rank: int = 0
@@ -169,6 +174,8 @@ class ModelConfig:
         assert self.block_kind in VALID_BLOCKS, self.block_kind
         assert self.decode_impl in ("auto", "naive", "blocked", "pallas",
                                     "interpret"), self.decode_impl
+        assert self.cache_layout in ("dense", "paged"), self.cache_layout
+        assert self.kv_block_size > 0, self.kv_block_size
         if self.num_heads:
             assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
                 f"{self.name}: num_heads {self.num_heads} not divisible by "

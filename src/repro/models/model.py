@@ -161,6 +161,54 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return init_trunk_cache(cfg, batch, max_len, jnp.dtype(cfg.dtype))
 
 
+def _paged_run_gather(sc, impl: str = "auto"):
+    """Dense logical K/V view of one paged cache run.
+
+    sc: run dict with pools (run, NB, Hkv, bs, D) / (run, NB, bs, r) and
+    ``table`` (run, B, nb).  Returns {name: (run, B[, H], S, D)} for the
+    K/V leaves with S = the logical (``pos``) width — exactly the buffers a
+    dense cache would hold, which every dense cache op expects.  Routed
+    through the ``paged_gather`` kernel op with heads folded into the block
+    rows (the same flattening cache_roll uses)."""
+    from repro.kernels.cache_gather.ops import paged_gather
+    table = sc["table"]
+    run_len, B, nb = table.shape
+    S_log = sc["pos"].shape[-1]
+    out = {}
+    for name in ("k", "v", "ckv", "krope"):
+        if name not in sc:
+            continue
+        pool = sc[name]
+        NB = pool.shape[1]
+        bs, D = pool.shape[-2], pool.shape[-1]
+        r0 = jnp.arange(run_len, dtype=jnp.int32)[:, None, None]
+        tab = (r0 * NB + table.astype(jnp.int32)).reshape(run_len * B, nb)
+        if pool.ndim == 5:                       # GQA: (run, NB, Hkv, bs, D)
+            Hkv = pool.shape[2]
+            g = paged_gather(pool.reshape(run_len * NB, Hkv * bs, D), tab,
+                             impl=impl)
+            g = (g.reshape(run_len, B, nb, Hkv, bs, D)
+                 .transpose(0, 1, 3, 2, 4, 5)
+                 .reshape(run_len, B, Hkv, nb * bs, D)[..., :S_log, :])
+        else:                                    # MLA: (run, NB, bs, r)
+            g = paged_gather(pool.reshape(run_len * NB, bs, D), tab,
+                             impl=impl)
+            g = g.reshape(run_len, B, nb * bs, D)[..., :S_log, :]
+        out[name] = g
+    return out
+
+
+def _pad_to_blocks(buf, nb: int, bs: int):
+    """Zero-pad a dense logical buffer (..., S, D) to the block-rounded
+    width nb*bs so it cuts into whole blocks for re-paging."""
+    S = buf.shape[-2]
+    if S == nb * bs:
+        return buf
+    pad = [(0, 0)] * buf.ndim
+    pad[-2] = (0, nb * bs - S)
+    return jnp.pad(buf, pad)
+
+
 def supports_cache_realign(cfg: ModelConfig) -> bool:
     """Cache compaction needs every trunk layer to hold per-slot KV state.
 
@@ -234,9 +282,26 @@ def realign_decode_cache(cfg: ModelConfig, caches, shift, valid_len,
         start = (width - valid_len.astype(jnp.int32))[:, None]
         pos_row = jnp.where((j >= start) & (j < width), j - start, -1)
         new_sc = {"pos": jnp.broadcast_to(pos_row[None], (run_len, B, S))}
-        for name in ("k", "v", "ckv", "krope"):
-            if name in sc:
-                new_sc[name] = roll(sc[name], shift, impl)
+        if "table" in sc:
+            # paged compaction (§13): gather pools to the dense logical
+            # view, roll it exactly like the dense path, re-page through
+            # the unchanged tables.  Only exclusively-owned tables reach
+            # this path (the one-pass rollout's identity stripes) — CoW
+            # sharing exists only behind the serving engine, whose
+            # admission compacts densely before paging in.
+            from repro.kernels.cache_slot_write.ops import paged_slot_write
+            nb = sc["table"].shape[-1]
+            bs = (sc["k"] if "k" in sc else sc["ckv"]).shape[-2]
+            dense = _paged_run_gather(sc, impl)
+            for name, buf in dense.items():
+                rolled = _pad_to_blocks(roll(buf, shift, impl), nb, bs)
+                new_sc[name] = paged_slot_write(sc[name], rolled,
+                                                sc["table"], impl=impl)
+            new_sc["table"] = sc["table"]
+        else:
+            for name in ("k", "v", "ckv", "krope"):
+                if name in sc:
+                    new_sc[name] = roll(sc[name], shift, impl)
         new_caches.append({"self": new_sc})
     if mesh is not None:
         from repro.distributed.mesh import constrain_caches
@@ -272,6 +337,9 @@ def pad_cache(cfg: ModelConfig, caches, extra: int):
     new_caches = []
     for run in caches:
         sc = run["self"]
+        if "table" in sc:
+            new_caches.append({"self": _pad_paged_run(sc, extra)})
+            continue
         new_sc = {"pos": jnp.pad(sc["pos"], ((0, 0), (0, 0), (0, extra)),
                                  constant_values=-1)}
         for name in ("k", "v", "ckv", "krope"):
@@ -282,6 +350,45 @@ def pad_cache(cfg: ModelConfig, caches, extra: int):
                 new_sc[name] = jnp.pad(buf, pad)
         new_caches.append({"self": new_sc})
     return new_caches
+
+
+def _pad_paged_run(sc, extra: int):
+    """Paged ``pad_cache``: grow every row's logical width by ``extra``.
+
+    The logical (``pos``) width grows by exactly ``extra`` — matching the
+    dense path bit-for-bit — while the physical pool only moves in whole
+    blocks: the block-rounding slack is consumed first, and any remainder
+    appends fresh zero blocks to the pool tail and extends each table row
+    with an identity stripe of them (exclusively owned — padding is only
+    used by the fixed-batch drafted loop, never on CoW-shared serving
+    rows)."""
+    table = sc["table"]
+    run_len, B, nb = table.shape
+    pos = sc["pos"]
+    S = pos.shape[-1]
+    ref = sc["k"] if "k" in sc else sc["ckv"]
+    bs = ref.shape[-2]
+    nb_new = -(-(S + extra) // bs)
+    add = nb_new - nb
+    new_sc = {"pos": jnp.pad(pos, ((0, 0), (0, 0), (0, extra)),
+                             constant_values=-1)}
+    if add == 0:
+        for name in ("k", "v", "ckv", "krope"):
+            if name in sc:
+                new_sc[name] = sc[name]
+        new_sc["table"] = table
+        return new_sc
+    NB = ref.shape[1]
+    fresh = (NB + jnp.arange(B * add, dtype=jnp.int32).reshape(B, add))
+    new_sc["table"] = jnp.concatenate(
+        [table, jnp.broadcast_to(fresh[None], (run_len, B, add))], axis=-1)
+    for name in ("k", "v", "ckv", "krope"):
+        if name in sc:
+            buf = sc[name]
+            pad = [(0, 0)] * buf.ndim
+            pad[1] = (0, B * add)
+            new_sc[name] = jnp.pad(buf, pad)
+    return new_sc
 
 
 def supports_slot_serving(cfg: ModelConfig, model_kwargs=None) -> bool:
@@ -321,6 +428,9 @@ def write_cache_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
     from repro.kernels.cache_slot_write.ops import cache_slot_write
     assert supports_cache_realign(cfg), "slot serving needs attention trunks"
     slots = slots.astype(jnp.int32)
+    if any("table" in run["self"] for run in dst_caches):
+        return _write_cache_slots_paged(dst_caches, src_caches, slots,
+                                        impl=impl)
 
     def scatter(d, s, slots_):
         run_len, B = d.shape[0], d.shape[1]
@@ -357,6 +467,48 @@ def write_cache_slots(cfg: ModelConfig, dst_caches, src_caches, slots, *,
                     mesh, scatter, (hspec, hspec, P()), hspec, d, s, slots)
             else:
                 new_sc[name] = scatter(d, s, slots)
+        new_caches.append({"self": new_sc})
+    return new_caches
+
+
+def _write_cache_slots_paged(dst_caches, src_caches, slots, *,
+                             impl: str = "auto"):
+    """Admit dense prefilled rows into a *paged* persistent cache (§13).
+
+    The admission forward runs on small throwaway dense caches (identical
+    device programs to the dense engine — that is what makes paged serving
+    trivially token-identical); this scatter re-pages each admitted row
+    into the blocks its table references via ``paged_slot_write``.  The
+    addressed rows must be exclusively owned — the paged engine admits
+    leaders with freshly allocated full-width tables and never routes
+    CoW-sharing followers through here.
+
+    A dense source narrower than the paged logical width is padded with
+    empty slots (pos == -1); K/V is zero-padded to the block-rounded
+    physical width so the scatter lands on whole blocks.
+    """
+    from repro.kernels.cache_slot_write.ops import paged_slot_write
+    new_caches = []
+    for dst_run, src_run in zip(dst_caches, src_caches):
+        dsc, ssc = dst_run["self"], src_run["self"]
+        S_paged = dsc["pos"].shape[-1]
+        S_src = ssc["pos"].shape[-1]
+        assert S_src <= S_paged, (S_src, S_paged)
+        nb = dsc["table"].shape[-1]
+        bs = (dsc["k"] if "k" in dsc else dsc["ckv"]).shape[-2]
+        src_pos = ssc["pos"]
+        if S_src < S_paged:
+            src_pos = jnp.pad(src_pos, ((0, 0), (0, 0), (0, S_paged - S_src)),
+                              constant_values=-1)
+        new_sc = {"pos": dsc["pos"].at[:, slots].set(src_pos),
+                  "table": dsc["table"]}
+        table = dsc["table"][:, slots]               # (run, R, nb)
+        for name in ("k", "v", "ckv", "krope"):
+            if name not in dsc:
+                continue
+            new_sc[name] = paged_slot_write(
+                dsc[name], _pad_to_blocks(ssc[name], nb, bs), table,
+                impl=impl)
         new_caches.append({"self": new_sc})
     return new_caches
 

@@ -12,6 +12,13 @@ A slot-based serving layer between the engine and its two consumers:
                ``rollout(..., spec.backfill='slots')`` straggler backfill
 - mesh_server: one scheduler per data shard over model-only submeshes with
                shard-local admission and a gathered metrics view (§8)
+- block_table: §13 paged-KV host bookkeeping — refcounted BlockAllocator
+               over a fixed pool of KV blocks (free-list, CoW forks,
+               conservation invariants, exact state round-trip)
+- paged_engine: the SlotEngine over a paged block pool — dense admission
+               re-paged at the slot write, copy-on-write GRPO prompt
+               sharing (one prefill + one physical prompt copy per group),
+               pool-pressure admission capping and load shedding
 - faults:      deterministic fault injection (§10) — seeded FaultPlans the
                engine consults at chunk boundaries; with the hardening in
                request/scheduler/engine_loop (deadlines, bounded retry,
@@ -22,9 +29,11 @@ A slot-based serving layer between the engine and its two consumers:
                WeightSync is its versioned, retrying (core/backoff)
                weight-publication channel
 """
+from .block_table import BlockAllocator, PoolExhausted, identity_table
 from .engine_loop import SlotEngine
 from .faults import EngineKilled, FaultEvent, FaultPlan, seeded_plan
 from .mesh_server import MeshSlotServer, make_slot_engine
+from .paged_engine import PagedSlotEngine
 from .request import Request, Response
 from .rollout_service import RolloutService, SyncFailed, WeightSync
 from .scheduler import SlotScheduler

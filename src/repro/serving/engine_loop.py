@@ -1,8 +1,9 @@
-"""Persistent continuous-batching decode loop over slot-replaced dense caches.
+"""Persistent continuous-batching decode loop over slot-replaced caches.
 
-The engine keeps ONE decode batch of ``num_slots`` rows alive over dense
-``(B, Hkv, S, D)`` caches (DESIGN.md §3 rejects paged KV on TPU — in-place
-slot replacement is the idiomatic alternative, §6).  Whenever a row emits
+The engine keeps ONE decode batch of ``num_slots`` rows alive — over dense
+``(B, Hkv, S, D)`` cache slabs by default (in-place slot replacement, §6),
+or over a paged block pool when built as the ``PagedSlotEngine`` subclass
+(serving/paged_engine.py, DESIGN.md §13).  Whenever a row emits
 EOS or exhausts its per-slot budget, the next queued request is prefilled —
 optionally through ``verify_and_prefill`` so a cached SPEC-RL draft becomes
 its speculative prefix — and written into the freed slot by the
@@ -59,7 +60,7 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 
 from .faults import EngineKilled, FaultPlan
-from .request import (FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE,
+from .request import (DECODING, FINISH_BUDGET, FINISH_EOS, FINISH_FULL_REUSE,
                       FINISH_QUARANTINE, FINISH_SHED, FINISH_TIMEOUT,
                       Request, Response)
 from .scheduler import SlotScheduler
@@ -90,8 +91,12 @@ def _admit_vanilla(params, cfg: ModelConfig, gen: GenerateConfig, prompts,
                                caches)
     keys, sub = split_key(keys)
     tok0, lp0 = sample(sub, logits[:, -1], gen.temperature, gen.top_p)
+    # seed_logits ride along for the paged engine's GRPO prompt sharing
+    # (§13): a follower re-samples from its leader's prefill logits with its
+    # own key instead of re-running the identical prefill
     return {"caches": caches, "tok0": tok0, "lp0": lp0,
-            "next_pos": mask.sum(axis=1).astype(jnp.int32), "keys": keys}
+            "next_pos": mask.sum(axis=1).astype(jnp.int32), "keys": keys,
+            "seed_logits": logits[:, -1]}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "gen", "verify_impl",
@@ -249,7 +254,7 @@ class SlotEngine:
             self._draft_source = NGramDraftSource(self.draft, B)
             self._draft_ctrl = DraftController(self.draft, B)
             self.draft_stats = DraftStats()
-        self.caches = M.init_cache(cfg, B, self.cache_len)
+        self.caches = self._make_caches(B)
         if mesh is not None:
             from repro.distributed.mesh import shard_caches
             self.caches = shard_caches(cfg, self.caches, mesh, batch=False)
@@ -461,138 +466,180 @@ class SlotEngine:
         rows = rows + [rows[0]] * (B - len(rows))
         return np.stack(rows)
 
+    # Layout hooks, overridden by PagedSlotEngine (DESIGN.md §13).  The
+    # dense engine's behaviour is the identity on all four.
+
+    def _make_caches(self, B: int):
+        """Build the persistent decode caches (dense slabs by default)."""
+        return M.init_cache(self.cfg, B, self.cache_len)
+
+    def _admit_cfg(self) -> ModelConfig:
+        """Config the admission jits build their throwaway caches with.
+        The paged engine admits DENSELY (identical device programs to the
+        dense engine) and re-pages at the slot write."""
+        return self.cfg
+
+    def _register_groups(self, group, out) -> None:
+        """Post-admission hook: the paged engine registers each new GRPO
+        group's prompt blocks + seed logits here for CoW sharing."""
+
+    def _on_slot_freed(self, slot: int) -> None:
+        """A request left ``slot`` (completed or reclaimed); the paged
+        engine releases its block-table row here."""
+
     def _admit(self) -> None:
         while True:
             group = self.scheduler.reserve(self._now())
             if not group:
                 return
-            t0 = time.perf_counter()
-            B = self.scheduler.num_slots
-            slots = [s for s, _ in group]
-            reqs = [r for _, r in group]
-            prom = np.zeros((len(group), self.P), np.int32)
-            mask = np.zeros((len(group), self.P), bool)
+            self._admit_group(group)
+
+    def _prep_prompts(self, reqs: List[Request]):
+        prom = np.zeros((len(reqs), self.P), np.int32)
+        mask = np.zeros((len(reqs), self.P), bool)
+        for j, r in enumerate(reqs):
+            L = len(r.prompt)
+            prom[j, self.P - L:] = np.asarray(r.prompt, np.int32)
+            mask[j, self.P - L:] = True
+        return prom, mask
+
+    def _admit_group(self, group: List[Tuple[int, Request]]) -> None:
+        t0 = time.perf_counter()
+        B = self.scheduler.num_slots
+        slots = [s for s, _ in group]
+        reqs = [r for _, r in group]
+        prom, mask = self._prep_prompts(reqs)
+        prompts = self._pad_group(list(prom))
+        masks = self._pad_group(list(mask))
+        keys = self._pad_group([np.asarray(r.key, np.uint32) for r in reqs])
+
+        dn = np.zeros((len(group),), np.int32)
+        if self.spec_prefix:
+            dt = np.zeros((len(group), self.N), np.int32)
+            dl = np.zeros((len(group), self.N), np.float32)
+            de = np.zeros((len(group),), bool)
             for j, r in enumerate(reqs):
-                L = len(r.prompt)
-                prom[j, self.P - L:] = np.asarray(r.prompt, np.int32)
-                mask[j, self.P - L:] = True
-            prompts = self._pad_group(list(prom))
-            masks = self._pad_group(list(mask))
-            keys = self._pad_group([np.asarray(r.key, np.uint32) for r in reqs])
+                if r.has_draft:
+                    L = min(len(r.draft_tokens), self.N)
+                    dt[j, :L] = r.draft_tokens[:L]
+                    dl[j, :L] = r.draft_logprobs[:L]
+                    dn[j] = L
+                    de[j] = r.draft_eos and L == len(r.draft_tokens)
+            vkeys = self._pad_group(
+                [np.asarray(r.verify_key, np.uint32) for r in reqs])
+            out = _admit_spec(
+                self.params, self._admit_cfg(), self.gen,
+                jnp.asarray(prompts),
+                jnp.asarray(masks), jnp.asarray(self._pad_group(list(dt))),
+                jnp.asarray(self._pad_group(list(dl))),
+                jnp.asarray(self._pad_group(list(dn))),
+                jnp.asarray(self._pad_group(list(de))),
+                jnp.asarray(vkeys), jnp.asarray(keys),
+                self.log_lenience, verify_impl=self.verify_impl,
+                compact_impl=self.compact_impl, mesh=self.mesh)
+        else:
+            out = _admit_vanilla(self.params, self._admit_cfg(), self.gen,
+                                 jnp.asarray(prompts), jnp.asarray(masks),
+                                 jnp.asarray(keys), mesh=self.mesh)
+        jax.block_until_ready(out["tok0"])
+        t1 = time.perf_counter()
+        self.time_admit += t1 - t0
 
+        slot_ids = np.array(slots + [slots[0]] * (B - len(slots)),
+                            np.int32)
+        self.caches = self._write_admitted(out["caches"], slot_ids)
+        jax.block_until_ready(jax.tree.leaves(self.caches)[0])
+        t2 = time.perf_counter()
+        self.time_slot_write += t2 - t1
+
+        # §11: admit/slot-write timings reuse t0/t1/t2 — the clock
+        # reads the time_* accounting above already took
+        self.metrics.observe("serve.admit_ms", (t1 - t0) * 1e3)
+        self.metrics.observe("serve.slot_write_ms", (t2 - t1) * 1e3)
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("admit", self._etrack, t0, t1, cat="admit",
+                        rows=len(group))
+            tr.complete("slot_write", self._etrack, t1, t2, cat="admit")
+
+        self._register_groups(group, out)
+        tok0 = np.asarray(out["tok0"])
+        lp0 = np.asarray(out["lp0"])
+        npos = np.asarray(out["next_pos"])
+        nkeys = np.asarray(out["keys"])
+        n = np.asarray(out["n"]) if self.spec_prefix else \
+            np.zeros(B, np.int32)
+        fr = np.asarray(out["full_reuse"]) if self.spec_prefix else \
+            np.zeros(B, bool)
+        lp_curr = np.asarray(out["lp_curr"]) if self.spec_prefix else None
+        self._apply_admission(group, tok0, lp0, npos, nkeys, n, fr,
+                              lp_curr, dn, t0, t1)
+        # full-reuse / zero-budget admissions finish without decoding;
+        # harvesting them here lets the loop keep back-filling
+        self._harvest()
+
+    def _write_admitted(self, src_caches, slot_ids: np.ndarray):
+        """Scatter the admission caches into the persistent batch."""
+        return _write_slots(self.cfg, self.caches, src_caches,
+                            jnp.asarray(slot_ids),
+                            impl=self.slot_write_impl,
+                            pad_src=self.draft.draft_k if self.draft else 0,
+                            mesh=self.mesh)
+
+    def _apply_admission(self, group, tok0, lp0, npos, nkeys, n, fr,
+                         lp_curr, dn, t0: float, t1: float) -> None:
+        """Per-request host bookkeeping after an admission (any path):
+        state vectors, telemetry, draft-source reset, activation.  Arrays
+        are indexed by the request's position ``j`` in ``group``."""
+        tr = self.tracer
+        for j, (slot, req) in enumerate(group):
+            nj = int(n[j])
+            budget = max(0, req.max_new_tokens - nj)
+            # §11 per-request admission telemetry: queue wait, TTFT
+            # (queued → seed token, which admission just produced) and
+            # the SPEC-RL reuse length.  Span endpoints are the
+            # engine-relative stamps the scheduler already recorded.
+            self.metrics.observe("serve.queue_wait_ms",
+                                 (req.admitted_at - req.queued_at) * 1e3)
+            self.metrics.observe(
+                "serve.ttft_ms",
+                ((t1 - self._t0) - req.queued_at) * 1e3)
             if self.spec_prefix:
-                dt = np.zeros((len(group), self.N), np.int32)
-                dl = np.zeros((len(group), self.N), np.float32)
-                dn = np.zeros((len(group),), np.int32)
-                de = np.zeros((len(group),), bool)
-                for j, r in enumerate(reqs):
-                    if r.has_draft:
-                        L = min(len(r.draft_tokens), self.N)
-                        dt[j, :L] = r.draft_tokens[:L]
-                        dl[j, :L] = r.draft_logprobs[:L]
-                        dn[j] = L
-                        de[j] = r.draft_eos and L == len(r.draft_tokens)
-                vkeys = self._pad_group(
-                    [np.asarray(r.verify_key, np.uint32) for r in reqs])
-                out = _admit_spec(
-                    self.params, self.cfg, self.gen, jnp.asarray(prompts),
-                    jnp.asarray(masks), jnp.asarray(self._pad_group(list(dt))),
-                    jnp.asarray(self._pad_group(list(dl))),
-                    jnp.asarray(self._pad_group(list(dn))),
-                    jnp.asarray(self._pad_group(list(de))),
-                    jnp.asarray(vkeys), jnp.asarray(keys),
-                    self.log_lenience, verify_impl=self.verify_impl,
-                    compact_impl=self.compact_impl, mesh=self.mesh)
-            else:
-                out = _admit_vanilla(self.params, self.cfg, self.gen,
-                                     jnp.asarray(prompts), jnp.asarray(masks),
-                                     jnp.asarray(keys), mesh=self.mesh)
-            jax.block_until_ready(out["tok0"])
-            t1 = time.perf_counter()
-            self.time_admit += t1 - t0
-
-            slot_ids = np.array(slots + [slots[0]] * (B - len(slots)),
-                                np.int32)
-            self.caches = _write_slots(self.cfg, self.caches, out["caches"],
-                                       jnp.asarray(slot_ids),
-                                       impl=self.slot_write_impl,
-                                       pad_src=self.draft.draft_k
-                                       if self.draft else 0,
-                                       mesh=self.mesh)
-            jax.block_until_ready(jax.tree.leaves(self.caches)[0])
-            t2 = time.perf_counter()
-            self.time_slot_write += t2 - t1
-
-            # §11: admit/slot-write timings reuse t0/t1/t2 — the clock
-            # reads the time_* accounting above already took
-            self.metrics.observe("serve.admit_ms", (t1 - t0) * 1e3)
-            self.metrics.observe("serve.slot_write_ms", (t2 - t1) * 1e3)
-            tr = self.tracer
-            if tr.enabled:
-                tr.complete("admit", self._etrack, t0, t1, cat="admit",
-                            rows=len(group))
-                tr.complete("slot_write", self._etrack, t1, t2, cat="admit")
-
-            tok0 = np.asarray(out["tok0"])
-            lp0 = np.asarray(out["lp0"])
-            npos = np.asarray(out["next_pos"])
-            nkeys = np.asarray(out["keys"])
-            n = np.asarray(out["n"]) if self.spec_prefix else \
-                np.zeros(B, np.int32)
-            fr = np.asarray(out["full_reuse"]) if self.spec_prefix else \
-                np.zeros(B, bool)
-            lp_curr = np.asarray(out["lp_curr"]) if self.spec_prefix else None
-            for j, (slot, req) in enumerate(group):
-                nj = int(n[j])
-                budget = max(0, req.max_new_tokens - nj)
-                # §11 per-request admission telemetry: queue wait, TTFT
-                # (queued → seed token, which admission just produced) and
-                # the SPEC-RL reuse length.  Span endpoints are the
-                # engine-relative stamps the scheduler already recorded.
-                self.metrics.observe("serve.queue_wait_ms",
-                                     (req.admitted_at - req.queued_at) * 1e3)
-                self.metrics.observe(
-                    "serve.ttft_ms",
-                    ((t1 - self._t0) - req.queued_at) * 1e3)
-                if self.spec_prefix:
-                    self.metrics.observe("serve.reuse_len", nj)
-                if tr.enabled and tr.sampled(req.request_id):
-                    lane = f"{self.obs_label}req/{req.request_id}"
-                    tr.complete("queued", lane, self._abs(req.queued_at),
-                                self._abs(req.admitted_at), cat="queue",
-                                retries=req.retries)
-                    tr.complete("admit", lane, t0, t1, cat="admit",
-                                slot=slot, n_accepted=nj)
-                self.cur_tok[slot] = tok0[j]
-                self.cur_lp[slot] = lp0[j]
-                self.count[slot] = 0
-                self.budget[slot] = budget
-                self.next_pos[slot] = npos[j]
-                self.write_idx[slot] = self.write_base
-                self.keys[slot] = nkeys[j]
-                self.slot_age[slot] = 0     # deadline clock is per-occupancy
-                self.done[slot] = bool(fr[j]) or budget <= 0
-                self._acc_tok[slot] = []
-                self._acc_lp[slot] = []
-                self._slot_n[slot] = nj
-                self._slot_draft_len[slot] = int(dn[j]) if self.spec_prefix \
-                    else 0
-                self._slot_full_reuse[slot] = bool(fr[j])
-                self._slot_prefix_lp[slot] = lp_curr[j] if lp_curr is not None \
-                    else None
-                if self.draft:
-                    # n-gram index over prompt ⊕ accepted prefix, shadowing
-                    # the request's sibling corpus (DESIGN.md §9)
-                    ctx = list(np.asarray(req.prompt, np.int32))
-                    if self.spec_prefix and req.has_draft:
-                        ctx.extend(np.asarray(req.draft_tokens[:nj],
-                                              np.int32))
-                    self._draft_source.reset(slot, ctx, req.ngram_corpus)
-                    self._draft_ctrl.reset(slot)
-                self.scheduler.activate(slot)
-            # full-reuse / zero-budget admissions finish without decoding;
-            # harvesting them here lets the loop keep back-filling
-            self._harvest()
+                self.metrics.observe("serve.reuse_len", nj)
+            if tr.enabled and tr.sampled(req.request_id):
+                lane = f"{self.obs_label}req/{req.request_id}"
+                tr.complete("queued", lane, self._abs(req.queued_at),
+                            self._abs(req.admitted_at), cat="queue",
+                            retries=req.retries)
+                tr.complete("admit", lane, t0, t1, cat="admit",
+                            slot=slot, n_accepted=nj)
+            self.cur_tok[slot] = tok0[j]
+            self.cur_lp[slot] = lp0[j]
+            self.count[slot] = 0
+            self.budget[slot] = budget
+            self.next_pos[slot] = npos[j]
+            self.write_idx[slot] = self.write_base
+            self.keys[slot] = nkeys[j]
+            self.slot_age[slot] = 0     # deadline clock is per-occupancy
+            self.done[slot] = bool(fr[j]) or budget <= 0
+            self._acc_tok[slot] = []
+            self._acc_lp[slot] = []
+            self._slot_n[slot] = nj
+            self._slot_draft_len[slot] = int(dn[j]) if self.spec_prefix \
+                else 0
+            self._slot_full_reuse[slot] = bool(fr[j])
+            self._slot_prefix_lp[slot] = lp_curr[j] if lp_curr is not None \
+                else None
+            if self.draft:
+                # n-gram index over prompt ⊕ accepted prefix, shadowing
+                # the request's sibling corpus (DESIGN.md §9)
+                ctx = list(np.asarray(req.prompt, np.int32))
+                if self.spec_prefix and req.has_draft:
+                    ctx.extend(np.asarray(req.draft_tokens[:nj],
+                                          np.int32))
+                self._draft_source.reset(slot, ctx, req.ngram_corpus)
+                self._draft_ctrl.reset(slot)
+            self.scheduler.activate(slot)
 
     # ---------------------------------------------------------- decode loop
 
@@ -860,6 +907,7 @@ class SlotEngine:
                 self._degrade_impl()        # rung 2: simpler decode kernel
         now = self._now()
         self.scheduler.reclaim(slot, now=now, reason=reason)
+        self._on_slot_freed(slot)
         tr = self.tracer
         _lane = f"{self.obs_label}req/{req.request_id}"
         if tr.enabled and tr.sampled(req.request_id):
@@ -953,7 +1001,12 @@ class SlotEngine:
     def _harvest(self) -> List[Response]:
         eos = self.gen.eos_id
         finished = []
-        for slot in [s for s in self.scheduler.active if self.done[s]]:
+        # a slot still PREFILLING belongs to a partially-admitted group (the
+        # paged engine admits leaders before CoW followers) — its done flag
+        # is stale state from the previous occupant, not a finished request
+        for slot in [s for s in self.scheduler.active
+                     if self.done[s]
+                     and self.scheduler.active[s].state == DECODING]:
             req = self.scheduler.active[slot]
             cnt = int(self.count[slot])
             toks = (np.concatenate(self._acc_tok[slot])[:cnt]
@@ -983,6 +1036,7 @@ class SlotEngine:
                 serve_time=now - req.admitted_at, retries=req.retries)
             self.responses[req.request_id] = resp
             self.scheduler.complete(slot, now=now)
+            self._on_slot_freed(slot)
             self.metrics.observe("serve.serve_ms", resp.serve_time * 1e3)
             self.metrics.observe("serve.retries_per_request", req.retries)
             tr = self.tracer

@@ -45,7 +45,8 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
                      compact_impl: str = "auto",
                      slot_write_impl: str = "auto", draft=None, faults=None,
                      deadline_steps=None, max_queue=None,
-                     overflow: str = "reject", tracer=None):
+                     overflow: str = "reject", tracer=None,
+                     kv_pool_blocks: Optional[int] = None):
     """One factory for both mesh regimes (the single dispatch point shared
     by serving/rl_adapter.py and launch/serve.py).
 
@@ -59,6 +60,11 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
     ``max_queue`` / ``overflow`` apply per engine (per shard on a mesh —
     the bound is shard-local, like admission), ``faults`` is a FaultPlan
     (given to shard 0 on a mesh) or a per-shard sequence of plans.
+
+    ``cfg.cache_layout='paged'`` selects the ``PagedSlotEngine`` (block
+    pool + CoW GRPO sharing, DESIGN.md §13); ``kv_pool_blocks`` optionally
+    shrinks its pool below the never-runs-dry default (per shard on a
+    mesh — each shard engine owns its own allocator).
     """
     from repro.distributed.mesh import data_size
     kw = dict(num_slots=num_slots, prompt_width=prompt_width,
@@ -67,10 +73,15 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
               compact_impl=compact_impl, slot_write_impl=slot_write_impl,
               draft=draft, faults=faults, deadline_steps=deadline_steps,
               max_queue=max_queue, overflow=overflow, tracer=tracer)
+    if cfg.cache_layout == "paged":
+        kw["kv_pool_blocks"] = kv_pool_blocks
     if mesh is not None and data_size(mesh) > 1:
         D = data_size(mesh)
         kw["num_slots"] = max(D, num_slots - num_slots % D)
         return MeshSlotServer(params, cfg, gen, mesh=mesh, **kw)
+    if cfg.cache_layout == "paged":
+        from .paged_engine import PagedSlotEngine
+        return PagedSlotEngine(params, cfg, gen, mesh=mesh, **kw)
     return SlotEngine(params, cfg, gen, mesh=mesh, **kw)
 
 
@@ -89,7 +100,8 @@ class MeshSlotServer:
                  chunk_steps: int = 8, verify_impl: str = "auto",
                  compact_impl: str = "auto", slot_write_impl: str = "auto",
                  draft=None, faults=None, deadline_steps=None,
-                 max_queue=None, overflow: str = "reject", tracer=None):
+                 max_queue=None, overflow: str = "reject", tracer=None,
+                 kv_pool_blocks: Optional[int] = None):
         self.submeshes = data_submeshes(mesh)
         D = len(self.submeshes)
         assert num_slots % D == 0 and num_slots >= D, \
@@ -99,16 +111,22 @@ class MeshSlotServer:
         plans = list(faults) if isinstance(faults, (list, tuple)) else \
             [faults] + [None] * (D - 1)
         assert len(plans) == D, (len(plans), D)
+        if cfg.cache_layout == "paged":
+            from .paged_engine import PagedSlotEngine
+            mk = lambda *a, **k: PagedSlotEngine(  # noqa: E731
+                *a, kv_pool_blocks=kv_pool_blocks, **k)
+        else:
+            mk = SlotEngine
         self.engines: List[SlotEngine] = [
-            SlotEngine(shard_params(sm, cfg, params), cfg, gen,
-                       num_slots=num_slots // D, prompt_width=prompt_width,
-                       spec_prefix=spec_prefix, log_lenience=log_lenience,
-                       chunk_steps=chunk_steps, verify_impl=verify_impl,
-                       compact_impl=compact_impl,
-                       slot_write_impl=slot_write_impl, draft=draft, mesh=sm,
-                       faults=plan, deadline_steps=deadline_steps,
-                       max_queue=max_queue, overflow=overflow,
-                       tracer=tracer, obs_label=f"shard{i}/")
+            mk(shard_params(sm, cfg, params), cfg, gen,
+               num_slots=num_slots // D, prompt_width=prompt_width,
+               spec_prefix=spec_prefix, log_lenience=log_lenience,
+               chunk_steps=chunk_steps, verify_impl=verify_impl,
+               compact_impl=compact_impl,
+               slot_write_impl=slot_write_impl, draft=draft, mesh=sm,
+               faults=plan, deadline_steps=deadline_steps,
+               max_queue=max_queue, overflow=overflow,
+               tracer=tracer, obs_label=f"shard{i}/")
             for i, (sm, plan) in enumerate(zip(self.submeshes, plans))]
         self._rr = 0                       # round-robin submission cursor
 
@@ -126,7 +144,16 @@ class MeshSlotServer:
     # ------------------------------------------------------------- frontend
 
     def submit(self, req: Request) -> None:
-        """Shard-local admission: the request joins one shard's FIFO queue."""
+        """Shard-local admission: the request joins one shard's FIFO queue.
+
+        GRPO siblings (``group_id`` set) route by group so one shard owns
+        the whole group — the paged engine's prompt sharing is shard-local
+        (§13); everything else round-robins.  Both rules are deterministic,
+        keeping kill-and-resume exact.
+        """
+        if req.group_id is not None:
+            self.engines[req.group_id % len(self.engines)].submit(req)
+            return
         self.engines[self._rr].submit(req)
         self._rr = (self._rr + 1) % len(self.engines)
 
@@ -143,7 +170,9 @@ class MeshSlotServer:
         subs: List[List[Tuple[int, Request]]] = [[] for _ in self.engines]
         if arrivals is not None:
             for j, (due, req) in enumerate(arrivals):
-                subs[j % len(self.engines)].append((due, req))
+                i = req.group_id % len(self.engines) \
+                    if req.group_id is not None else j % len(self.engines)
+                subs[i].append((due, req))
         nxt = [iter(s) for s in subs]
         due = [next(it, None) for it in nxt]
         chunks = 0

@@ -74,6 +74,11 @@ class Request:
     # trajectories indexed alongside the request's own stream (ignored by
     # engines built without a DraftConfig)
     ngram_corpus: Optional[list] = None
+    # GRPO group handle (§13): siblings sharing a group_id carry the SAME
+    # prompt, and the paged engine prefills it once — followers map the
+    # leader's prompt blocks copy-on-write.  None (the default) opts out;
+    # dense engines ignore it entirely.
+    group_id: Optional[int] = None
     arrival_time: float = 0.0
     state: str = QUEUED
     # lifecycle timestamps (engine-relative seconds), filled by the scheduler
@@ -121,6 +126,8 @@ class Request:
             "base_draft_len": np.int64(self.base_draft_len),
             "nan_strikes": np.int64(self.nan_strikes),
             "draft_off": np.bool_(self.draft_off),
+            "group_id": np.int64(-1 if self.group_id is None
+                                 else self.group_id),
         }
         if self.verify_key is not None:
             d["verify_key"] = np.asarray(self.verify_key, np.uint32)
@@ -161,7 +168,10 @@ class Request:
             retries=int(d["retries"]),
             base_draft_len=int(d["base_draft_len"]),
             nan_strikes=int(d["nan_strikes"]),
-            draft_off=bool(d["draft_off"]))
+            draft_off=bool(d["draft_off"]),
+            # absent in pre-§13 snapshots; -1 encodes None
+            group_id=(None if int(d.get("group_id", -1)) < 0
+                      else int(d["group_id"])))
 
 
 @dataclass

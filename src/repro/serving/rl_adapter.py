@@ -112,6 +112,11 @@ def rollout_via_slots(params, cfg: ModelConfig, gen: GenerateConfig,
         row = prompts_np[i, P - p_len:] if p_len else prompts_np[i, :0]
         req = Request(request_id=i, prompt=row.astype(np.int32),
                       key=decode_keys[i], max_new_tokens=N)
+        if cache is not None and cache.group_size > 1:
+            # GRPO sibling handle (§13): the paged engine prefills each
+            # group's shared prompt once and CoW-shares its blocks; dense
+            # engines ignore the field
+            req.group_id = int(prompt_ids[i]) // cache.group_size
         if have_drafts:
             L = int(drafts["draft_len"][i])
             req.verify_key = verify_keys[i]

@@ -1,10 +1,11 @@
 """Slot scheduler: admission queue, slot free-list, occupancy metrics.
 
 Pure host-side bookkeeping — no jax.  The scheduler owns WHICH request runs
-WHERE and WHEN; the engine loop (engine_loop.py) owns the device work.  Slots
-are the TPU-idiomatic replacement for paged-KV block tables (DESIGN.md §3/§6):
-the decode batch has a fixed number of rows over dense caches, and admission
-replaces a finished row in place.
+WHERE and WHEN; the engine loop (engine_loop.py) owns the device work.  The
+decode batch has a fixed number of rows, and admission replaces a finished
+row in place — over dense ``(B, S)`` cache slabs (DESIGN.md §3/§6) or, with
+``cache_layout='paged'``, over block-table rows whose physical blocks a
+``BlockAllocator`` manages one level down (§13, serving/paged_engine.py).
 
 Admission is FIFO over the queue; the free-list is LIFO (a freed slot is the
 warmest candidate).  Per-slot budgets live in the engine's state vectors;
@@ -111,10 +112,18 @@ class SlotScheduler:
     def idle(self) -> bool:
         return not self.queue and not self.active
 
-    def reserve(self, now: float = 0.0) -> List[Tuple[int, Request]]:
-        """Pair queued requests (FIFO) with free slots; mark PREFILLING."""
+    def reserve(self, now: float = 0.0,
+                limit: Optional[int] = None) -> List[Tuple[int, Request]]:
+        """Pair queued requests (FIFO) with free slots; mark PREFILLING.
+
+        ``limit`` caps how many pairs this call makes (None = all it can):
+        the paged engine admits at most as many rows as its block pool can
+        table, leaving the rest QUEUED — in order — until decode completions
+        free blocks (DESIGN.md §13 admission pressure).
+        """
         group: List[Tuple[int, Request]] = []
-        while self.free and self.queue:
+        while self.free and self.queue and \
+                (limit is None or len(group) < limit):
             slot = self.free.pop()
             req = self.queue.popleft()
             req.state = PREFILLING
@@ -150,6 +159,10 @@ class SlotScheduler:
         self.free.append(slot)
         if reason == "quarantine":
             self.quarantines += 1
+        elif reason == "shed":
+            # §13: a row pulled because the paged block pool ran dry is a
+            # load-shedding event, not a straggler timeout
+            self.sheds += 1
         else:
             self.timeouts += 1
         return req

@@ -19,6 +19,21 @@ import pytest
 from repro.models.config import ModelConfig
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _bound_compile_maps():
+    """Release compiled executables after every test module.
+
+    Each XLA:CPU executable keeps mmap'd JIT code regions alive for the
+    life of the process; a full-suite run accumulates enough of them to
+    cross the kernel's ``vm.max_map_count`` ceiling (default 65530), at
+    which point the NEXT compile segfaults inside LLVM.  Cross-module
+    jit reuse is negligible (modules build their own configs/shapes), so
+    clearing per module bounds the map count at a few thousand for the
+    whole suite."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def tiny_cfg():
     from repro.data.tokenizer import VOCAB_SIZE

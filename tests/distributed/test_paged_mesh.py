@@ -1,0 +1,160 @@
+"""Paged cache layout on the 2×2 (data, model) debug mesh (§8 × §13).
+
+The layout-invariance contract extended to paging: the paged pool's block
+axis is GLOBAL (rows of different slots interleave), so it must never shard
+like a batch axis — ``decode_cache_pspecs`` replicates paged leaves except
+the GQA pool head axis.  On the serving side, ``MeshSlotServer`` routes
+whole GRPO groups to shards (``group_id % D``), so CoW prompt sharing stays
+shard-local and the mesh server remains token-identical to a single dense
+engine over the same requests.
+
+Skips cleanly under < 4 devices (same CI-env pattern as
+test_mesh_rollout.py: the multi-device lane sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RolloutCache, SpecConfig, rollout
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.distributed.mesh import MeshConfig, shard_batch, shard_params
+from repro.engine.generate import GenerateConfig, generate
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import MeshSlotServer, Request, make_slot_engine
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI multi-device lane sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+P = 9                                     # P % kv_block_size != 0: CoW forks
+
+
+def _cfg(**kw):
+    base = dict(name="mesh-tiny", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=VOCAB_SIZE,
+                max_seq_len=256)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _paged(cfg):
+    return cfg.replace(cache_layout="paged", kv_block_size=4)
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return MeshConfig(data=2, model=2).build()
+
+
+def test_paged_generate_identity_on_mesh(mesh22):
+    """Sharded paged generate == single-device dense generate: the §13
+    pspec gating keeps the global block pool whole while the head axis
+    still spreads over ``model``."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=10, eos_id=VOCAB_SIZE - 1)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (8, P), 3,
+                                 VOCAB_SIZE - 1)
+    mask = jnp.ones((8, P), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(2), i))(jnp.arange(8))
+    ref = generate(params, cfg, gen, prompts, mask, keys)
+    sp = shard_params(mesh22, cfg, params)
+    out = generate(sp, _paged(cfg), gen,
+                   *shard_batch(mesh22, (prompts, mask, keys)), mesh=mesh22)
+    np.testing.assert_array_equal(np.asarray(ref["tokens"]),
+                                  np.asarray(out["tokens"]))
+    np.testing.assert_array_equal(np.asarray(ref["length"]),
+                                  np.asarray(out["length"]))
+    np.testing.assert_allclose(np.asarray(ref["logprobs"]),
+                               np.asarray(out["logprobs"]), atol=1e-4)
+
+
+def test_paged_rollout_identity_on_mesh(mesh22):
+    """One-pass SPEC-RL steps with a paged cache on the mesh match the
+    single-device dense rollout — the resume path re-pages through
+    cache_gather compaction under the §13 pspecs."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=12, eos_id=VOCAB_SIZE - 1)
+    spec = SpecConfig(variant="spec")
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 10), 3,
+                                 VOCAB_SIZE - 1)
+    mask = jnp.ones((8, 10), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(2), i))(jnp.arange(8))
+    ids = list(range(8))
+    sp = shard_params(mesh22, cfg, params)
+
+    def steps(p, c, mesh):
+        cache = RolloutCache()
+        out = []
+        for step in range(3):
+            k = jax.vmap(lambda kk: jax.random.fold_in(kk, step))(keys)
+            out.append(rollout(p, c, gen, spec, prompts, mask, ids, cache,
+                               k, step, mesh=mesh))
+        return out
+
+    ref = steps(params, cfg, None)
+    got = steps(sp, _paged(cfg), mesh22)
+    for step, (a, b) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(a.response, b.response)
+        np.testing.assert_array_equal(a.length, b.length)
+        np.testing.assert_allclose(a.behaviour_logprobs,
+                                   b.behaviour_logprobs, atol=1e-4)
+        if step > 0:
+            assert b.metrics["n_reused"] > 0
+
+
+def test_paged_mesh_server_grpo_routing(mesh22):
+    """MeshSlotServer over paged shard engines: GRPO groups land whole on
+    one shard (group_id % D), CoW sharing fires on BOTH shards, and every
+    response is identical to a single dense engine's."""
+    cfg = _cfg()
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    gen = GenerateConfig(max_new_tokens=8, temperature=0.7,
+                         eos_id=VOCAB_SIZE - 1)
+    rng = np.random.RandomState(3)
+    reqs, rid = [], 0
+    for g in range(4):                    # groups 0,2 -> shard 0; 1,3 -> 1
+        prompt = rng.randint(3, VOCAB_SIZE - 1,
+                             size=rng.randint(4, P + 1)).astype(np.int32)
+        for _ in range(2):
+            key = np.asarray(jax.random.PRNGKey(100 + rid), np.uint32)
+            reqs.append(Request(request_id=rid, prompt=prompt.copy(),
+                                key=key, max_new_tokens=8, group_id=g))
+            rid += 1
+
+    ref_eng = make_slot_engine(params, cfg, gen, num_slots=4, prompt_width=P)
+    for r in reqs:
+        ref_eng.submit(copy.deepcopy(r))
+    ref = ref_eng.run()
+
+    srv = make_slot_engine(params, _paged(cfg), gen, mesh=mesh22,
+                           num_slots=4, prompt_width=P)
+    assert isinstance(srv, MeshSlotServer)
+    for r in reqs:
+        srv.submit(copy.deepcopy(r))
+    out = srv.run()
+    assert sorted(out) == sorted(ref)
+    for i in ref:
+        assert out[i].finish_reason == ref[i].finish_reason, i
+        assert out[i].length == ref[i].length, i
+        np.testing.assert_array_equal(out[i].tokens, ref[i].tokens)
+        # model-axis reductions reorder fp: tokens exact, logprobs close
+        np.testing.assert_allclose(np.asarray(out[i].logprobs),
+                                   np.asarray(ref[i].logprobs), atol=1e-4)
+    # groups stayed whole per shard and both shards shared prompts
+    for eng in srv.engines:
+        assert eng.allocator.shared_prompt_bytes_saved > 0
+        assert eng.allocator.blocks_in_use == 0
+        eng.allocator.check()
+    st = srv.stats()
+    assert st["paged_cow_forks"] == sum(e.allocator.cow_forks
+                                        for e in srv.engines)
+    assert st["paged_cow_forks"] > 0

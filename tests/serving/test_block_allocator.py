@@ -1,0 +1,128 @@
+"""BlockAllocator edge cases (DESIGN.md §13): pool exhaustion, CoW forks
+under a full pool, refcount lifecycle across share/fork/free and exact
+state round-trip, plus a hypothesis conservation property — blocks in use,
+the free list and the pinned sink always partition the pool exactly."""
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.serving.block_table import (BlockAllocator, PoolExhausted,
+                                       identity_table)
+
+
+def test_alloc_exhaustion_is_all_or_nothing():
+    a = BlockAllocator(6, 4)               # sink + 5 usable
+    row = a.alloc(3)
+    assert len(row) == 3 and 0 not in row
+    with pytest.raises(PoolExhausted):
+        a.alloc(3)                         # only 2 left: must not partially
+    assert a.free_blocks == 2              # nothing leaked by the failure
+    assert a.alloc_failures == 1
+    a.check()
+    a.free_table(row)
+    assert a.free_blocks == 5
+    a.check()
+
+
+def test_fork_when_pool_full_raises_and_leaks_nothing():
+    a = BlockAllocator(4, 4)               # sink + 3
+    row = a.alloc(3)
+    shared = row[0]
+    a.share(shared)                        # refcount 2, pool now full
+    with pytest.raises(PoolExhausted):
+        a.fork(shared)
+    assert a.refcount[shared] == 2         # failed fork must not decref
+    a.check()
+    a.free(row[2])                         # one block back -> fork succeeds
+    nb = a.fork(shared)
+    assert nb != shared and a.refcount[shared] == 1 and a.refcount[nb] == 1
+    a.check()
+
+
+def test_refcount_lifecycle_share_fork_free():
+    a = BlockAllocator(8, 4)
+    row = a.alloc(2)
+    b = row[0]
+    assert a.share(b) == b and a.share(b) == b
+    assert a.refcount[b] == 3
+    a.free(b)                              # one sharer leaves
+    assert a.refcount[b] == 2
+    nb = a.fork(b)                         # forker leaves, takes a copy
+    assert a.refcount[b] == 1 and a.refcount[nb] == 1
+    assert a.cow_forks == 1
+    a.free(b)
+    a.free(nb)
+    a.free(row[1])
+    assert a.blocks_in_use == 0
+    a.check()
+    with pytest.raises(AssertionError):
+        a.free(b)                          # double free must be loud
+
+
+def test_sink_is_pinned():
+    a = BlockAllocator(3, 4)
+    a.free(BlockAllocator.SINK)            # no-op, never returns to the pool
+    assert a.free_blocks == 2
+    rows = [a.alloc(1)[0] for _ in range(2)]
+    assert BlockAllocator.SINK not in rows
+    with pytest.raises(AssertionError):
+        a.share(BlockAllocator.SINK)
+
+
+def test_peak_and_state_roundtrip():
+    a = BlockAllocator(10, 8)
+    r1, r2 = a.alloc(4), a.alloc(3)
+    a.share(r1[0])
+    a.free_table(r2)
+    assert a.peak_blocks_in_use == 7
+    b = BlockAllocator(10, 8)
+    b.load_state_dict(a.state_dict())
+    assert b.free_blocks == a.free_blocks
+    assert np.array_equal(b.refcount, a.refcount)
+    assert (b.cow_forks, b.alloc_failures, b.peak_blocks_in_use) == \
+        (a.cow_forks, a.alloc_failures, a.peak_blocks_in_use)
+    b.check()
+    # the restored allocator keeps allocating consistently
+    got = b.alloc(b.free_blocks)
+    assert len(set(got)) == len(got) and 0 not in got
+    b.check()
+
+
+def test_identity_table_layout():
+    t = identity_table(3, 4)
+    assert t.shape == (3, 4)
+    assert np.array_equal(np.asarray(t).reshape(-1), np.arange(12))
+    t2 = identity_table(2, 3, offset=5)
+    assert np.asarray(t2).min() == 5
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 24), st.lists(st.integers(0, 5), max_size=40))
+def test_conservation_property(num_blocks, ops):
+    """Random interleavings of alloc/share/fork/free never violate the pool
+    partition invariant or leak/duplicate a block (allocator.check())."""
+    rng = np.random.RandomState(num_blocks + len(ops))
+    a = BlockAllocator(num_blocks, 4)
+    live = []                              # blocks we hold a ref on
+    for op in ops:
+        try:
+            if op <= 1:                    # alloc 1-2 blocks
+                live.extend(a.alloc(op + 1))
+            elif op == 2 and live:
+                b = live[rng.randint(len(live))]
+                a.share(b)
+                live.append(b)
+            elif op == 3 and live:
+                b = live[rng.randint(len(live))]
+                if a.refcount[b] > 1:
+                    live[live.index(b)] = a.fork(b)
+            elif op >= 4 and live:
+                a.free(live.pop(rng.randint(len(live))))
+        except PoolExhausted:
+            pass
+        a.check()
+    for b in live:
+        a.free(b)
+    a.check()
+    assert a.blocks_in_use == 0

@@ -1,0 +1,255 @@
+"""Paged slot engine (DESIGN.md §13): token identity with the dense engine,
+one physical prompt copy per GRPO group (CoW sharing), boundary-block forks,
+pool-pressure admission capping / load shedding, and exact kill-and-resume
+carrying the allocator + block tables + group registry."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_server_state, save_server_state
+from repro.engine.generate import GenerateConfig
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import (EngineKilled, FaultEvent, FaultPlan,
+                           PagedSlotEngine, Request, SlotEngine,
+                           make_slot_engine)
+from repro.serving.request import FINISH_SHED
+
+P, N, V = 9, 7, 32                 # P % block_size != 0: boundary block CoW
+BS = 4
+G, S = 3, 2                        # GRPO groups x siblings
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=V)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, cfg.replace(cache_layout="paged", kv_block_size=BS), params
+
+
+def _group_requests(seed=0, groups=G, sib=S, max_new=N):
+    """`groups` GRPO groups of `sib` siblings sharing a prompt."""
+    rng = np.random.RandomState(seed)
+    reqs, rid = [], 0
+    for g in range(groups):
+        prompt = rng.randint(3, V, size=rng.randint(4, P + 1)).astype(np.int32)
+        for _ in range(sib):
+            key = np.asarray(jax.random.PRNGKey(1000 + rid), np.uint32)
+            reqs.append(Request(request_id=rid, prompt=prompt.copy(), key=key,
+                                max_new_tokens=max_new, group_id=g))
+            rid += 1
+    return reqs
+
+
+def _run(params, cfg, gen, reqs, **kw):
+    eng = make_slot_engine(params, cfg, gen, num_slots=kw.pop("num_slots", 4),
+                           prompt_width=P, **kw)
+    for r in reqs:
+        eng.submit(copy.deepcopy(r))
+    return eng, eng.run()
+
+
+def _assert_identical(a, b):
+    assert sorted(a) == sorted(b)
+    for i in a:
+        assert a[i].finish_reason == b[i].finish_reason, i
+        assert a[i].length == b[i].length, i
+        np.testing.assert_array_equal(a[i].tokens, b[i].tokens)
+        np.testing.assert_array_equal(np.asarray(a[i].logprobs),
+                                      np.asarray(b[i].logprobs))
+
+
+def test_paged_engine_matches_dense_with_grpo_sharing(setup):
+    """Bit-identical tokens AND logprobs vs the dense engine while CoW
+    prompt sharing is active (more requests than slots: admission waves)."""
+    cfg_d, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    reqs = _group_requests()
+    eng_d, dense = _run(params, cfg_d, gen, reqs)
+    eng_p, paged = _run(params, cfg_p, gen, reqs)
+    assert isinstance(eng_d, SlotEngine) and not isinstance(eng_d,
+                                                            PagedSlotEngine)
+    assert isinstance(eng_p, PagedSlotEngine)
+    _assert_identical(paged, dense)
+    st = eng_p.allocator.stats()
+    assert st["shared_prompt_bytes_saved"] > 0
+    # every follower forks exactly the prompt boundary block, once
+    assert st["cow_forks"] == G * (S - 1)
+    assert st["blocks_in_use"] == 0          # fully drained
+    eng_p.allocator.check()
+    reg = eng_p.stats()
+    assert reg["paged_cow_forks"] == st["cow_forks"]
+    assert reg["paged_shared_prompt_bytes_saved"] == \
+        st["shared_prompt_bytes_saved"]
+    assert reg["paged_blocks_in_use"] == 0.0
+    assert reg["paged_peak_blocks_in_use"] > 0
+
+
+def test_one_physical_prompt_copy_per_group(setup):
+    """§13 acceptance: after admission (before any decode chunk) all G
+    siblings of a group address the SAME physical prompt blocks — exactly
+    one prompt copy per group in the pool — and fork only on first write."""
+    _, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    eng = make_slot_engine(params, cfg_p, gen, num_slots=G * S,
+                           prompt_width=P)
+    for r in _group_requests():
+        eng.submit(copy.deepcopy(r))
+    eng._admit()                             # all slots admit in one wave
+    nb, pb = eng.nb, eng._pb
+    assert pb == -(-P // BS)
+    by_gid = {}
+    for slot, req in eng.scheduler.active.items():
+        row = eng._slot_blocks[slot]
+        assert row is not None and len(row) == nb
+        by_gid.setdefault(req.group_id, []).append(row)
+    assert sorted(by_gid) == list(range(G))
+    for gid, rows in by_gid.items():
+        assert len(rows) == S
+        for row in rows[1:]:                 # shared prompt prefix, incl.
+            assert row[:pb] == rows[0][:pb]  # the boundary block
+        # continuations are private from the start
+        tails = [b for row in rows for b in row[pb:]]
+        assert len(set(tails)) == len(tails)
+    # pool holds ONE prompt copy + S continuations per group (no forks yet)
+    assert eng.allocator.cow_forks == 0
+    assert eng.allocator.blocks_in_use == G * (pb + S * (nb - pb))
+    # device tables mirror the host bookkeeping
+    tab = np.asarray(eng.caches[0]["self"]["table"][0])
+    for slot in eng.scheduler.active:
+        np.testing.assert_array_equal(tab[slot], eng._slot_blocks[slot])
+    # first chunk CoW-forks each follower's boundary block exactly once
+    eng._run_chunk()
+    assert eng.allocator.cow_forks == G * (S - 1)
+    for gid, _ in by_gid.items():
+        rows = [eng._slot_blocks[s] for s, r in eng.scheduler.active.items()
+                if r.group_id == gid]
+        bnd = {row[pb - 1] for row in rows}
+        assert len(bnd) == S                 # boundary now private per row
+        shared = {tuple(row[:pb - 1]) for row in rows}
+        assert len(shared) == 1              # full prompt blocks still shared
+    eng.run()                                # drain cleanly
+    assert eng.allocator.blocks_in_use == 0
+    eng.allocator.check()
+
+
+def test_admission_pressure_queues_in_order(setup):
+    """A pool sized for one row at a time: requests wait QUEUED under
+    pressure and admit strictly in order as completions free blocks —
+    nothing is shed, output identical to an unconstrained pool."""
+    _, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    reqs = _group_requests(seed=3, groups=3, sib=1)   # distinct groups
+    eng_ref, ref = _run(params, cfg_p, gen, reqs, num_slots=2)
+    nb = eng_ref.nb
+    eng, out = _run(params, cfg_p, gen, reqs, num_slots=2,
+                    kv_pool_blocks=1 + nb)            # sink + ONE row
+    _assert_identical(out, ref)
+    assert all(out[i].finish_reason != FINISH_SHED for i in out)
+    assert eng.allocator.alloc_failures == 0          # capped, never failed
+    assert eng.allocator.peak_blocks_in_use <= nb
+    st = eng.scheduler.stats()
+    assert st["completed"] == len(reqs)
+
+
+def test_pool_too_small_sheds_instead_of_livelocking(setup):
+    """A request that cannot be tabled even on an EMPTY batch is shed with
+    FINISH_SHED (slot=-1) instead of waiting forever."""
+    _, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    reqs = _group_requests(seed=4, groups=2, sib=1)
+    probe = PagedSlotEngine(params, cfg_p, gen, num_slots=2, prompt_width=P)
+    nb = probe.nb
+    eng, out = _run(params, cfg_p, gen, reqs, num_slots=2,
+                    kv_pool_blocks=nb)                # sink + nb-1: never fits
+    assert sorted(out) == [0, 1]
+    for i in out:
+        assert out[i].finish_reason == FINISH_SHED
+        assert out[i].slot == -1 and out[i].length == 0
+    assert eng.allocator.alloc_failures == 2
+    assert eng.stats()["paged_alloc_failures"] == 2
+    assert eng.allocator.blocks_in_use == 0
+    eng.allocator.check()
+
+
+def test_kill_resume_paged(setup, tmp_path):
+    """§10 x §13: a paged engine killed mid-batch (allocator, block tables,
+    group registry and seed logits all in ``state_dict()['paged']``) resumes
+    into token-identical output — which also still matches dense."""
+    cfg_d, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    # 3 siblings over 2 slots: a group always straddles admission waves, so
+    # the kill lands with a LIVE group registration in the snapshot
+    reqs = _group_requests(seed=7, groups=2, sib=3)
+
+    def mk(**kw):
+        return make_slot_engine(params, cfg_p, gen, num_slots=2,
+                                prompt_width=P, chunk_steps=4, **kw)
+
+    _, dense = _run(params, cfg_d, gen, reqs, num_slots=2, chunk_steps=4)
+    ref_eng = mk()
+    for r in reqs:
+        ref_eng.submit(copy.deepcopy(r))
+    ref = ref_eng.run()
+    _assert_identical(ref, dense)
+
+    killed = mk(faults=FaultPlan([FaultEvent("kill", at_step=6)]))
+    for r in reqs:
+        killed.submit(copy.deepcopy(r))
+    with pytest.raises(EngineKilled):
+        killed.run()
+    assert killed.scheduler.num_active > 0            # genuinely mid-batch
+    assert killed._groups                             # registry in flight
+    assert any(b is not None for b in killed._slot_blocks)
+    save_server_state(str(tmp_path / "snap"), killed)
+
+    resumed = mk()
+    load_server_state(str(tmp_path / "snap"), resumed)
+    assert resumed.allocator.blocks_in_use == \
+        killed.allocator.blocks_in_use
+    resps = resumed.run()
+    _assert_identical(resps, ref)
+    assert resumed.allocator.blocks_in_use == 0
+    resumed.allocator.check()
+    # the resumed run still exercised sharing (followers after the kill)
+    assert resumed.allocator.shared_prompt_bytes_saved > 0
+
+
+def test_group_registry_gc(setup):
+    """Registrations live exactly as long as a pending sibling can still
+    share them; dropping one returns the prompt copy's blocks to the pool."""
+    _, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    eng = make_slot_engine(params, cfg_p, gen, num_slots=3, prompt_width=P)
+    for r in _group_requests():
+        eng.submit(copy.deepcopy(r))
+    # wave 1 admits g0(both siblings) + g1's leader; g1's sibling is still
+    # queued so gid 1 stays registered, gid 0 (fully admitted) is gc'd, and
+    # gid 2 (nothing admitted yet) was never registered
+    eng._admit()
+    assert sorted(eng._groups) == [1]
+    eng.run()
+    assert eng._groups == {}                          # gc'd at drain
+    assert eng.allocator.blocks_in_use == 0
+
+
+def test_mixed_grouped_and_ungrouped(setup):
+    """group_id=None requests interleave with GRPO groups untouched by the
+    sharing machinery and stay identical to dense."""
+    cfg_d, cfg_p, params = setup
+    gen = GenerateConfig(max_new_tokens=N, temperature=0.7)
+    reqs = _group_requests(seed=5, groups=2, sib=2)
+    rng = np.random.RandomState(9)
+    for j in range(2):
+        prompt = rng.randint(3, V, size=rng.randint(4, P + 1)).astype(np.int32)
+        reqs.append(Request(request_id=100 + j, prompt=prompt,
+                            key=np.asarray(jax.random.PRNGKey(77 + j),
+                                           np.uint32),
+                            max_new_tokens=N))
+    _, dense = _run(params, cfg_d, gen, reqs, num_slots=3)
+    eng, paged = _run(params, cfg_p, gen, reqs, num_slots=3)
+    _assert_identical(paged, dense)
+    assert eng.allocator.blocks_in_use == 0
