@@ -210,6 +210,20 @@ def _draft_metrics(stats=None) -> Dict[str, float]:
             "decode_forwards": float(st.forwards)}
 
 
+def _ledger_rows(led, B: int, prompt_mask):
+    """Reserve + begin one §14 provenance row per batch row.
+
+    Host-side only: reads the prompt mask (already materialised by every
+    caller path) and touches no device code, so the lowered programs are
+    byte-identical ledger on/off.  Returns (row_ids, prompt_lens)."""
+    p_np = np.asarray(prompt_mask).sum(axis=1).astype(np.int64)
+    base = led.reserve(B)
+    rows = [base + b for b in range(B)]
+    for b in range(B):
+        led.begin_row(rows[b], int(p_np[b]))
+    return rows, p_np
+
+
 def use_one_pass(cfg: ModelConfig, spec: SpecConfig, model_kwargs) -> bool:
     """Whether the fused verify→compact→resume path applies.
 
@@ -263,6 +277,9 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     N = gen.max_new_tokens
     t0 = time.perf_counter()
     metrics: Dict[str, float] = {"step": step}
+    from repro.obs import get_ledger
+    from repro.obs.ledger import FRESH, REUSED_PREFIX
+    led = get_ledger()
 
     use_cache = spec.variant != "off" and cache is not None
     drafts = cache.batch_get(prompt_ids, N, spec.cache_lag) if use_cache else None
@@ -272,13 +289,24 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
 
     if not have_drafts:
         key, sub = split_key(key)
+        rows = p_np = None
+        if led.enabled:
+            rows, p_np = _ledger_rows(led, B, prompt_mask)
         if drafting:
             from repro.drafting import drafted_generate
             corpus = cache.batch_siblings(prompt_ids, spec.cache_lag) \
                 if use_cache else None
-            out = drafted_generate(params, cfg, gen, prompts, prompt_mask,
-                                   sub, spec.draft, corpus=corpus,
-                                   verify_impl=spec.verify_impl, mesh=mesh)
+            # bind the rollout's rows so _DraftLoop's per-macro-step
+            # provenance appends land on them instead of fresh rows
+            if rows is not None:
+                led.bind(rows)
+            try:
+                out = drafted_generate(params, cfg, gen, prompts, prompt_mask,
+                                       sub, spec.draft, corpus=corpus,
+                                       verify_impl=spec.verify_impl, mesh=mesh)
+            finally:
+                if rows is not None:
+                    led.unbind()
         else:
             out = _vanilla(params, cfg, gen, prompts, prompt_mask, sub,
                            model_kwargs, mesh=mesh)
@@ -296,6 +324,12 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         _emit_rollout_obs(spec, metrics, t0,
                           [("generate", t0, rollout_time)])
         _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
+        if rows is not None:
+            len_np = np.asarray(length)
+            for b in range(B):
+                if not drafting:   # drafted rows were filled by _DraftLoop
+                    led.append(rows[b], FRESH, int(len_np[b]))
+                led.finalize(rows[b], int(p_np[b]) + int(len_np[b]))
         return RolloutBatch(
             prompt=np.asarray(prompts), prompt_mask=np.asarray(prompt_mask),
             response=np.asarray(resp), response_mask=np.asarray(resp_mask),
@@ -311,6 +345,9 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
         draft_tokens, draft_lp, draft_len, draft_eos = shard_batch(
             mesh, (draft_tokens, draft_lp, draft_len, draft_eos))
     one_pass = use_one_pass(cfg, spec, model_kwargs)
+    led_rows = led_p = None
+    if led.enabled:
+        led_rows, led_p = _ledger_rows(led, B, prompt_mask)
 
     tv0 = time.perf_counter()
     if one_pass:
@@ -355,11 +392,22 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
                                         dt_np[b, :int(n_np[b])]])
                         for b in range(B)]
             corpus = cache.batch_siblings(prompt_ids, spec.cache_lag)
-            cont = drafted_resume(params, cfg, gen, caches,
-                                  ver["seed_logits"], p_len + n, W, sub,
-                                  spec.draft, contexts, corpus=corpus,
-                                  initial_done=full_reuse, row_budget=N - n,
-                                  verify_impl=spec.verify_impl, mesh=mesh)
+            # §14: the verified prefix is reused provenance; bind the rows
+            # so the drafted continuation extends them in place
+            if led_rows is not None:
+                for b in range(B):
+                    led.append(led_rows[b], REUSED_PREFIX, int(n_np[b]))
+                led.bind(led_rows)
+            try:
+                cont = drafted_resume(params, cfg, gen, caches,
+                                      ver["seed_logits"], p_len + n, W, sub,
+                                      spec.draft, contexts, corpus=corpus,
+                                      initial_done=full_reuse,
+                                      row_budget=N - n,
+                                      verify_impl=spec.verify_impl, mesh=mesh)
+            finally:
+                if led_rows is not None:
+                    led.unbind()
         else:
             cont = resume_from_cache(params, cfg, gen, caches,
                                      ver["seed_logits"], p_len + n, W, sub,
@@ -433,6 +481,17 @@ def rollout(params, cfg: ModelConfig, gen: GenerateConfig, spec: SpecConfig,
     assembly_time = time.perf_counter() - ta0
 
     _update_cache(cache, prompt_ids, resp, lp, length, step, gen.eos_id)
+
+    if led_rows is not None:
+        drafted_cont = one_pass and drafting
+        n_fin = np.asarray(n)
+        len_fin = np.asarray(length)
+        for b in range(B):
+            if not drafted_cont:   # drafted rows were extended by _DraftLoop
+                led.append(led_rows[b], REUSED_PREFIX, int(n_fin[b]))
+                led.append(led_rows[b], FRESH,
+                           int(len_fin[b]) - int(n_fin[b]))
+            led.finalize(led_rows[b], int(led_p[b]) + int(len_fin[b]))
 
     metrics.update(
         n_generated=int(cont["n_generated"]),

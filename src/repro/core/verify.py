@@ -142,3 +142,11 @@ def verify_and_prefill(params, cfg: ModelConfig, prompt, prompt_mask,
     total = jnp.maximum(draft_len.sum(), 1)
     return {"n": n, "lp_curr": lp_curr, "accept_rate": n.sum() / total,
             "caches": caches, "seed_logits": seed_logits}
+
+
+# §14 recompile sentinel enrollment (obs/alerts.py): both verify entry
+# points — the two-pass scorer and the fused one-pass admission program
+from repro.obs.alerts import register_jit_entry  # noqa: E402
+
+register_jit_entry("verify_drafts", verify_drafts)
+register_jit_entry("verify_and_prefill", verify_and_prefill)

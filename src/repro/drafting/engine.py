@@ -26,6 +26,7 @@ Contracts mirrored from the vanilla loops:
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -111,6 +112,24 @@ class _DraftLoop:
         self.acc_lp: List[List[np.ndarray]] = [[] for _ in range(B)]
         self.stats = DraftStats()
         self.B, self.N = B, N
+        # §14 provenance: when the caller bound ledger rows (spec_rollout's
+        # one-pass continuation extends the rollout's own rows), append to
+        # those; otherwise reserve fresh rows and lay each row's context
+        # down as its prompt plane.  Host-side only — the jit'd step above
+        # is untouched, so lowered HLO is identical ledger on/off.
+        from repro.obs import get_ledger
+        self.ledger = led = get_ledger()
+        self._rows: List = [None] * B
+        self._carry_bonus = np.zeros(B, bool)
+        if led.enabled:
+            bound = [led.bound_row(b) for b in range(B)]
+            if all(r is not None for r in bound):
+                self._rows = bound
+            else:
+                base = led.reserve(B)
+                self._rows = [base + b for b in range(B)]
+                for b in range(B):
+                    led.begin_row(self._rows[b], len(contexts[b]))
 
     def run(self) -> Dict[str, jnp.ndarray]:
         # §11: the global tracer draws one span per draft macro-step on the
@@ -119,18 +138,26 @@ class _DraftLoop:
         # adds no new blocking); the acceptance time series rides the span
         # args.  Clock reads are guarded on tr.enabled — a NULL_TRACER run
         # takes none.
-        from repro.obs import get_registry, get_tracer
+        from repro.obs import get_decision_log, get_registry, get_tracer
+        from repro.obs.ledger import SOURCE_NGRAM, categorize_draft_block
         tr = get_tracer()
         reg = get_registry()
+        led = self.ledger
+        dec = get_decision_log()
         macro_step = 0
         while True:
             done_np = np.asarray(self.done)
             if done_np.all():
                 break
-            t0 = tr.now() if tr.enabled else 0.0
+            t0 = (tr.now() if tr.enabled else
+                  time.perf_counter() if dec.enabled else 0.0)
             cur_np = np.asarray(self.cur_tok)
             dt = np.zeros((self.B, self.K), np.int32)
             dl = np.zeros((self.B,), np.int32)
+            feats: Dict[int, Dict[str, float]] = {}
+            if dec.enabled:
+                cur_lp_np = np.asarray(self.cur_lp)
+                pos_np = np.asarray(self.next_pos)
             for b in range(self.B):
                 if done_np[b]:
                     continue
@@ -138,6 +165,19 @@ class _DraftLoop:
                 d = self.source.propose(b, k_b, pending=int(cur_np[b]))
                 dt[b, :len(d)] = d
                 dl[b] = len(d)
+                if dec.enabled:
+                    # §14 decision features, captured pre-step (surprisal
+                    # is -logp of the pending carry token — the host-side
+                    # stand-in for next-token entropy; the fixed-batch
+                    # loop has no queue or pool, so those columns are 0)
+                    feats[b] = {
+                        "surprisal": -float(cur_lp_np[b]),
+                        "position": float(pos_np[b]),
+                        "accept_ema": float(self.controller.rate[b]),
+                        "draft_k": float(len(d)),
+                        "draft_source": SOURCE_NGRAM,
+                        "slot_age": float(macro_step),
+                    }
             # compile the block at the power-of-two cover of the widest
             # live proposal — adaptive draft lengths narrow the forward
             # (drafting/step.py:block_width); acceptance draws stay at
@@ -161,13 +201,32 @@ class _DraftLoop:
             emitted = np.asarray(out["emitted"])
             accepted = np.asarray(out["accepted"])
             proposed = np.asarray(out["proposed"])
+            t1 = (tr.now() if tr.enabled else
+                  time.perf_counter() if dec.enabled else 0.0)
             for b in range(self.B):
                 mb = int(emitted[b])
                 if mb:
                     self.acc_tok[b].append(toks[b, :mb])
                     self.acc_lp[b].append(lps[b, :mb])
                     self.source.extend(b, toks[b, :mb])
+                    if led.enabled:
+                        for cat, nrun in categorize_draft_block(
+                                mb, bool(self._carry_bonus[b])):
+                            led.append(self._rows[b], cat, nrun)
+                self._carry_bonus[b] = bool(
+                    proposed[b] > 0 and accepted[b] == proposed[b])
                 self.controller.update(b, int(proposed[b]), int(accepted[b]))
+            if dec.enabled and feats:
+                step_ms = (t1 - t0) * 1e3
+                for b, f in feats.items():
+                    prop, acc = int(proposed[b]), int(accepted[b])
+                    mb = int(emitted[b])
+                    dec.record(self._rows[b] if self._rows[b] is not None
+                               else b, macro_step, f, {
+                                   "proposed": prop, "accepted": acc,
+                                   "bonus": 1.0 if (prop > 0 and acc == prop
+                                                    and mb > acc) else 0.0,
+                                   "emitted": mb, "step_ms": step_ms})
             # per-ROW forward counting: one batched forward serves `live`
             # rows, so tokens_per_forward is a per-row quantity with 1.0 as
             # the vanilla baseline (a live vanilla row emits exactly one

@@ -199,3 +199,10 @@ def draft_step(params, cfg: ModelConfig, gen: GenerateConfig, caches,
         "accepted": jnp.minimum(n, eff_len),
         "proposed": eff_len,
     }
+
+
+# §14 recompile sentinel enrollment (obs/alerts.py): draft_step is shared
+# by every drafted loop, so its cache size counts compiles for all of them
+from repro.obs.alerts import register_jit_entry  # noqa: E402
+
+register_jit_entry("draft_step", draft_step)

@@ -135,6 +135,21 @@ def main(argv=None):
     p.add_argument("--overflow", choices=["reject", "shed-oldest"],
                    default="reject",
                    help="backpressure policy when the queue is full")
+    p.add_argument("--ledger", action="store_true",
+                   help="§14 token-provenance ledger: account every emitted "
+                        "token to its mechanism (reused prefix / accepted "
+                        "draft / bonus / fresh / retry / shared block) and "
+                        "print the savings-attribution report after the run")
+    p.add_argument("--decision-log", default="", metavar="DIR",
+                   help="§14 decision-record logging: one (features, "
+                        "outcomes) record per draft decision, sharded as "
+                        "JSONL + NPZ under DIR (obs.ledger.load_dataset "
+                        "reloads them as a training-ready bundle)")
+    p.add_argument("--assert-compile-stable", action="store_true",
+                   help="§14 recompile sentinel: replay the identical "
+                        "request set on a fresh engine after the run and "
+                        "fail if any registered jit entry compiles again "
+                        "(steady-state compile stability)")
     p.add_argument("--trace-dir", default="",
                    help="§11 observatory: write trace.json (Chrome trace, "
                         "load at ui.perfetto.dev), events.jsonl and "
@@ -193,6 +208,14 @@ def main(argv=None):
         from repro.obs import Tracer
         tracer = Tracer(enabled=True, sample_rate=args.trace_sample_rate)
 
+    # §14: the ledger is handed ONLY to the main (traced) engine — the
+    # spec-prefix warm pass and the compile-stability replay run without it
+    # so the attribution report is about the speculative serve itself
+    ledger = None
+    if args.ledger:
+        from repro.obs.ledger import TokenLedger
+        ledger = TokenLedger(enabled=True)
+
     def make_engine(spec_prefix: bool, traced: bool = False):
         return make_slot_engine(params, cfg, gen, mesh=mesh,
                                 num_slots=args.slots,
@@ -202,7 +225,8 @@ def main(argv=None):
                                 deadline_steps=args.deadline_steps or None,
                                 max_queue=args.max_queue or None,
                                 overflow=args.overflow,
-                                tracer=tracer if traced else None)
+                                tracer=tracer if traced else None,
+                                ledger=ledger if traced else None)
 
     rng = random.Random(args.seed)
     problems = generate_problems(MathTaskConfig(num_problems=n_requests))
@@ -235,6 +259,20 @@ def main(argv=None):
         return 0
 
     drafts = None
+
+    def _attach_spec(reqs_):
+        vkeys = np.asarray(jax.vmap(
+            lambda i: jax.random.fold_in(jax.random.PRNGKey(args.seed + 11), i)
+        )(jnp.arange(n_requests)))
+        for i, r in enumerate(reqs_):
+            e = drafts.get(r.request_id)
+            r.verify_key = vkeys[i]
+            r.draft_tokens, r.draft_logprobs = e.tokens, e.logprobs
+            r.draft_eos = e.ends_with_eos
+            if draft is not None:
+                # first-pass trajectory doubles as the §9 n-gram corpus
+                r.ngram_corpus = [e.tokens]
+
     if args.spec_prefix:
         # pass 1 (vanilla) builds the draft cache; pass 2 below serves with
         # speculative-prefix admission against the same policy
@@ -248,18 +286,15 @@ def main(argv=None):
             resp = warm_resp[r.request_id]
             drafts.put(r.request_id, resp.tokens, resp.logprobs, resp.length,
                        step=0, eos_id=gen.eos_id)
-        vkeys = np.asarray(jax.vmap(
-            lambda i: jax.random.fold_in(jax.random.PRNGKey(args.seed + 11), i)
-        )(jnp.arange(n_requests)))
-        for i, r in enumerate(reqs):
-            e = drafts.get(r.request_id)
-            r.verify_key = vkeys[i]
-            r.draft_tokens, r.draft_logprobs = e.tokens, e.logprobs
-            r.draft_eos = e.ends_with_eos
-            if draft is not None:
-                # first-pass trajectory doubles as the §9 n-gram corpus
-                r.ngram_corpus = [e.tokens]
+        _attach_spec(reqs)
         t0 = time.time()
+
+    if args.decision_log:
+        # the global decision log is configured AFTER the warm pass so the
+        # dataset holds only the speculative serve's decisions
+        from repro.obs import configure
+        from repro.obs.ledger import DecisionLog
+        configure(decisions=DecisionLog(args.decision_log, enabled=True))
 
     engine = make_engine(spec_prefix=args.spec_prefix, traced=True)
 
@@ -304,13 +339,34 @@ def main(argv=None):
     dt = time.time() - t0
     if metrics_srv is not None:
         metrics_srv.shutdown()
+    if args.decision_log:
+        from repro.obs import get_decision_log
+        dec = get_decision_log()
+        dec.flush()
+        print(f"decisions: {dec.records_total} records -> "
+              f"{args.decision_log} (obs.ledger.load_dataset to reload)")
+    report = None
+    if args.ledger:
+        # §14: provenance counts x measured decode cost -> seconds saved
+        # per mechanism; the actual wall clock anchors the counterfactual
+        from repro.obs.attrib import build_report, measured_token_cost
+        regd = engine.metrics_registry().as_dict()
+        n_all = max(1, int(ledger.category_counts().sum()))
+        t_tok = measured_token_cost(regd) or dt / n_all
+        report = build_report(ledger, t_tok, actual_s=dt)
+        print(report.summary())
     if args.trace_dir:
         import os
         from repro.obs import export as obs_export
         os.makedirs(args.trace_dir, exist_ok=True)
         reg = engine.metrics_registry()
+        counters = None
+        if report is not None:
+            report.to_registry(reg)    # attribution joins /metrics + prom
+            counters = report.counter_events(dt)
         obs_export.write_chrome_trace(
-            os.path.join(args.trace_dir, "trace.json"), tracer)
+            os.path.join(args.trace_dir, "trace.json"), tracer,
+            counters=counters)
         obs_export.write_jsonl(
             os.path.join(args.trace_dir, "events.jsonl"), tracer, reg)
         obs_export.write_prometheus(
@@ -349,6 +405,34 @@ def main(argv=None):
             np.asarray(reqs[i].draft_tokens[:r.n_accepted], np.int32)
             if r.n_accepted else np.zeros(0, np.int32), r.tokens])
         print(f"  req{i} [{r.finish_reason}]: {decode(full)!r}")
+
+    if args.assert_compile_stable and not interrupted:
+        # §14 recompile sentinel: an identical request stream on a fresh
+        # engine must hit only already-compiled signatures — any jit cache
+        # growth here is a compile in steady state (the recompile_steady_
+        # state alert's offline twin)
+        from repro.obs.alerts import compile_counts
+        baseline = dict(compile_counts())
+        reqs2 = build_requests(ds, random.Random(args.seed), n_requests,
+                               max_new, jax.random.PRNGKey(args.seed + 3))
+        if args.spec_prefix:
+            _attach_spec(reqs2)
+        replay = make_engine(spec_prefix=args.spec_prefix)
+        if args.arrival_every > 0:
+            replay.run(arrivals=[(i * args.arrival_every, r)
+                                 for i, r in enumerate(reqs2)])
+        else:
+            for r in reqs2:
+                replay.submit(r)
+            replay.run()
+        grew = {k: (baseline.get(k, 0), v)
+                for k, v in compile_counts().items()
+                if v != baseline.get(k, 0)}
+        if grew:
+            raise SystemExit("compile instability: jit cache growth on "
+                             f"identical replay: {grew}")
+        print(f"compile-stability: {sum(baseline.values())} compiles total, "
+              "0 new on identical replay")
     return 0
 
 

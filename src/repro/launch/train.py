@@ -87,6 +87,19 @@ def main(argv=None):
     p.add_argument("--watchdog-max-collect-time", type=float,
                    default=float("inf"),
                    help="rollout stall threshold in seconds")
+    p.add_argument("--ledger", action="store_true",
+                   help="§14 token-provenance ledger: account every rollout "
+                        "token to its mechanism and print the savings-"
+                        "attribution report after the run")
+    p.add_argument("--decision-log", default="", metavar="DIR",
+                   help="§14 decision-record logging: shard draft-decision "
+                        "(features, outcomes) records under DIR — the "
+                        "learned draft-length controller's dataset")
+    p.add_argument("--alerts", action="store_true",
+                   help="§14 metric alert rules: evaluate the default "
+                        "threshold/trend rules on every step's metrics; "
+                        "events trace on the 'alerts' lane and feed the "
+                        "watchdog counters when --watchdog-dir rides along")
     p.add_argument("--trace-dir", default="",
                    help="§11 observatory: write trace.json (Chrome trace, "
                         "load at ui.perfetto.dev), events.jsonl and "
@@ -108,6 +121,18 @@ def main(argv=None):
         tracer = Tracer(enabled=bool(args.trace_dir),
                         sample_rate=args.trace_sample_rate)
         configure(tracer=tracer, registry=MetricsRegistry())
+    # §14: the ledger/decision log are process-global like the tracer — the
+    # rollout, drafting loop and slot adapter all record through obs.get_*
+    ledger = None
+    if args.ledger:
+        from repro.obs import configure
+        from repro.obs.ledger import TokenLedger
+        ledger = TokenLedger(enabled=True)
+        configure(ledger=ledger)
+    if args.decision_log:
+        from repro.obs import configure
+        from repro.obs.ledger import DecisionLog
+        configure(decisions=DecisionLog(args.decision_log, enabled=True))
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -136,8 +161,14 @@ def main(argv=None):
             checkpoint_dir=args.watchdog_dir,
             snapshot_every=args.watchdog_every,
             max_collect_time=args.watchdog_max_collect_time))
+    alerts = None
+    if args.alerts:
+        from repro.obs import get_tracer
+        from repro.obs.alerts import AlertManager
+        alerts = AlertManager(tracer=tracer if tracer is not None
+                              else get_tracer())
     tr = Trainer(cfg, rl, spec, ds, jax.random.PRNGKey(0), mesh=mesh_cfg,
-                 watchdog=watchdog)
+                 watchdog=watchdog, alerts=alerts)
     metrics_srv = None
     if args.metrics:
         from repro.obs import get_registry
@@ -158,6 +189,8 @@ def main(argv=None):
                      f"draft_len={m.get('draft_mean_len', 0.0):.2f}")
         return line
 
+    import time as _time
+    t_run0 = _time.time()
     if args.async_mode:
         from repro.rl.async_loop import AsyncConfig, AsyncTrainer
         at = AsyncTrainer(tr, AsyncConfig(
@@ -188,15 +221,39 @@ def main(argv=None):
     else:
         for _ in range(args.steps):
             print(_step_line(tr.train_step()), flush=True)
+    t_run = _time.time() - t_run0
     if metrics_srv is not None:
         metrics_srv.shutdown()
+    if args.decision_log:
+        from repro.obs import get_decision_log
+        dec = get_decision_log()
+        dec.flush()
+        print(f"decisions: {dec.records_total} records -> "
+              f"{args.decision_log} (obs.ledger.load_dataset to reload)")
+    if alerts is not None:
+        fired = {k: v for k, v in alerts.as_dict().items() if v}
+        print(f"alerts: {fired or 'none fired'}")
+    report = None
+    if args.ledger:
+        from repro.obs import get_registry
+        from repro.obs.attrib import build_report, measured_token_cost
+        regd = get_registry().as_dict()
+        n_all = max(1, int(ledger.category_counts().sum()))
+        t_tok = measured_token_cost(regd) or t_run / n_all
+        report = build_report(ledger, t_tok, actual_s=t_run)
+        print(report.summary())
     if args.trace_dir:
         import os
         from repro.obs import export as obs_export, get_registry
         os.makedirs(args.trace_dir, exist_ok=True)
         reg = get_registry()
+        counters = None
+        if report is not None:
+            report.to_registry(reg)
+            counters = report.counter_events(t_run)
         obs_export.write_chrome_trace(
-            os.path.join(args.trace_dir, "trace.json"), tracer)
+            os.path.join(args.trace_dir, "trace.json"), tracer,
+            counters=counters)
         obs_export.write_jsonl(
             os.path.join(args.trace_dir, "events.jsonl"), tracer, reg)
         obs_export.write_prometheus(

@@ -10,10 +10,14 @@ contract: every recording call early-returns.
 from .trace import NULL_TRACER, Event, Span, Tracer
 from .registry import (Counter, Gauge, Histogram, MetricsRegistry, Ratio,
                        extend_summary)
+from .ledger import (NULL_DECISION_LOG, NULL_LEDGER, DecisionLog,
+                     LedgerError, TokenLedger)
 from . import export  # noqa: F401  (re-exported submodule)
 
 _TRACER: Tracer = NULL_TRACER
 _REGISTRY: MetricsRegistry = MetricsRegistry()
+_LEDGER: TokenLedger = NULL_LEDGER
+_DECISIONS: DecisionLog = NULL_DECISION_LOG
 
 
 def get_tracer() -> Tracer:
@@ -24,24 +28,43 @@ def get_registry() -> MetricsRegistry:
     return _REGISTRY
 
 
+def get_ledger() -> TokenLedger:
+    return _LEDGER
+
+
+def get_decision_log() -> DecisionLog:
+    return _DECISIONS
+
+
 def configure(tracer: Tracer = None,
-              registry: MetricsRegistry = None) -> None:
-    """Install a process-global tracer and/or registry (launch scripts)."""
-    global _TRACER, _REGISTRY
+              registry: MetricsRegistry = None,
+              ledger: TokenLedger = None,
+              decisions: DecisionLog = None) -> None:
+    """Install process-global observability sinks (launch scripts)."""
+    global _TRACER, _REGISTRY, _LEDGER, _DECISIONS
     if tracer is not None:
         _TRACER = tracer
     if registry is not None:
         _REGISTRY = registry
+    if ledger is not None:
+        _LEDGER = ledger
+    if decisions is not None:
+        _DECISIONS = decisions
 
 
 def reset() -> None:
     """Back to the inert defaults (tests)."""
-    global _TRACER, _REGISTRY
+    global _TRACER, _REGISTRY, _LEDGER, _DECISIONS
     _TRACER = NULL_TRACER
     _REGISTRY = MetricsRegistry()
+    _LEDGER = NULL_LEDGER
+    _DECISIONS = NULL_DECISION_LOG
 
 
 __all__ = ["Tracer", "Span", "Event", "NULL_TRACER",
            "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ratio",
            "extend_summary", "export",
-           "get_tracer", "get_registry", "configure", "reset"]
+           "TokenLedger", "LedgerError", "NULL_LEDGER",
+           "DecisionLog", "NULL_DECISION_LOG",
+           "get_tracer", "get_registry", "get_ledger", "get_decision_log",
+           "configure", "reset"]

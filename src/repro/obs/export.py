@@ -39,19 +39,32 @@ def _track_sort_key(track: str):
     return (0, track, 0)
 
 
-def chrome_trace(tracers: Union[Tracer, Dict[str, Tracer]]) -> Dict:
+def chrome_trace(tracers: Union[Tracer, Dict[str, Tracer]],
+                 counters: List[Dict] = None) -> Dict:
     """Build a Chrome trace-event object from one or more tracers.
 
     ``tracers`` may be a single Tracer or ``{process_name: Tracer}`` (one
-    process per mesh shard / component)."""
+    process per mesh shard / component).  ``counters`` adds "C"-phase
+    counter samples (stacked series tracks, e.g. the §14 seconds-saved
+    attribution): each ``{"name", "track", "ts", "values": {series: v}}``
+    becomes a counter track on the first process."""
     if isinstance(tracers, Tracer):
         tracers = {"repro": tracers}
     events: List[Dict] = []
+    counter_tracks = sorted({c["track"] for c in (counters or [])})
     for pid, (pname, tr) in enumerate(tracers.items()):
         events.append({"ph": "M", "pid": pid, "tid": 0,
                        "name": "process_name", "args": {"name": pname}})
-        tids = {t: i for i, t in enumerate(sorted(tr.tracks(),
-                                                  key=_track_sort_key))}
+        tracks = sorted(tr.tracks(), key=_track_sort_key)
+        if pid == 0:
+            tracks = tracks + [t for t in counter_tracks if t not in tracks]
+        tids = {t: i for i, t in enumerate(tracks)}
+        if pid == 0:
+            for c in counters or []:
+                events.append({"ph": "C", "pid": 0, "tid": tids[c["track"]],
+                               "name": c["name"], "ts": c["ts"] * _US,
+                               "args": {k: float(v)
+                                        for k, v in c["values"].items()}})
         for track, tid in tids.items():
             events.append({"ph": "M", "pid": pid, "tid": tid,
                            "name": "thread_name", "args": {"name": track}})
@@ -74,9 +87,10 @@ def chrome_trace(tracers: Union[Tracer, Dict[str, Tracer]]) -> Dict:
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 
-def write_chrome_trace(path, tracers) -> None:
+def write_chrome_trace(path, tracers, counters: List[Dict] = None) -> None:
     with open(path, "w") as f:
-        json.dump(chrome_trace(tracers), f, sort_keys=True)
+        json.dump(chrome_trace(tracers, counters=counters), f,
+                  sort_keys=True)
 
 
 def write_jsonl(path, tracers, registry: MetricsRegistry = None) -> None:

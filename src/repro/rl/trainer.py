@@ -271,7 +271,7 @@ class Trainer:
                  dataset: PromptDataset, key,
                  critic_cfg: Optional[ModelConfig] = None,
                  lenience_schedule=None, mesh=None, watchdog=None,
-                 tracer=None):
+                 tracer=None, alerts=None):
         self.cfg = model_cfg
         self.rl = rl
         # mesh (DESIGN.md §8): a MeshConfig (or prebuilt Mesh) shards params
@@ -312,6 +312,12 @@ class Trainer:
         # restore-last-good + skip-the-batch on non-finite loss or a
         # stalled rollout stage.  None = no monitoring (the default).
         self.watchdog = watchdog
+        # §14 alerts (obs/alerts.py): an AlertManager evaluated on every
+        # step's flat metrics; events trace on the 'alerts' lane and, when
+        # a watchdog rides along, feed its degradation counters.
+        self.alerts = alerts
+        if alerts is not None and alerts.watchdog is None:
+            alerts.watchdog = watchdog
         # §11 observatory: stage spans land on the 'trainer' lane; stage
         # latencies feed train.* histograms in the global registry.  The
         # default NULL_TRACER records nothing and every stamp below reuses
@@ -544,14 +550,36 @@ class Trainer:
         # so the trainer shares the audited flat-float namespace with
         # SlotEngine.stats()/MeshSlotServer.stats() (one as_dict view, no
         # ad-hoc key drift between surfaces)
-        from repro.obs import MetricsRegistry
+        from repro.obs import (MetricsRegistry, get_decision_log, get_ledger)
+        led = get_ledger()
+        if led.enabled:
+            # §14: cumulative provenance counts join the step log — the
+            # savings-attribution report divides exactly these numbers —
+            # and mirror into the global registry so the events.jsonl dump
+            # feeds `launch.analysis attrib` offline
+            from repro.obs import get_registry
+            greg = get_registry()
+            for cname, nv in led.counts_dict().items():
+                metrics[f"ledger_tokens_{cname}"] = float(nv)
+                greg.set(f"ledger.tokens_{cname}", float(nv), agg="max")
+            metrics["ledger_finalized"] = float(led.finalized)
+            metrics["ledger_violations"] = float(led.violations)
         metrics = MetricsRegistry.from_flat(metrics).as_dict()
+        if self.alerts is not None:
+            # evaluated on the flat step metrics BEFORE the watchdog so a
+            # critical alert's counters are visible to the same step log
+            self.alerts.evaluate(metrics, self.step_idx)
+            metrics.update(self.alerts.as_dict())
         if self.watchdog is not None:
             # may restore params/opt_state/cache to the last snapshot (the
             # poisoned update is undone; step_idx still advances below, so
             # the bad batch is skipped, not replayed) — and always folds
             # its counters into the step metrics
             self.watchdog.after_step(self, metrics)
+        dec = get_decision_log()
+        if dec.enabled:
+            # decision shards hit disk once per train step, not per record
+            dec.flush()
         self.history.append(metrics)
         self.step_idx += 1
         return metrics

@@ -72,11 +72,25 @@ class TrainWatchdog:
         self.stalled_steps = 0
         self.service_stalled_steps = 0
         self.skipped_no_snapshot = 0
+        self.alert_events = 0                # §14 alert routing (obs/alerts)
+        self.crit_alert_events = 0
+        self.last_alert = ""
         from repro.obs import Histogram
         self._collect_hist = Histogram()     # healthy collect times (§11)
         self._wait_hist = Histogram()        # healthy trajectory waits (§12)
 
     # ------------------------------------------------------------- plumbing
+
+    def note_alert(self, event) -> None:
+        """§14 alert sink: an ``obs.alerts.AlertEvent`` fired on the step
+        metrics.  Alerts are advisory — they count toward the step log (the
+        degradation ladder and operators read the counters) but do not by
+        themselves trigger a restore; the poison checks above stay the only
+        rollback authority."""
+        self.alert_events += 1
+        if getattr(event, "severity", "") == "crit":
+            self.crit_alert_events += 1
+        self.last_alert = getattr(event, "rule", "")
 
     def _path(self, name: str) -> str:
         return os.path.join(self.cfg.checkpoint_dir, name)
@@ -213,5 +227,7 @@ class TrainWatchdog:
                     float(self.service_stalled_steps),
                 f"{prefix}skipped_no_snapshot":
                     float(self.skipped_no_snapshot),
+                f"{prefix}alert_events": float(self.alert_events),
+                f"{prefix}crit_alert_events": float(self.crit_alert_events),
                 f"{prefix}collect_p95": self._collect_hist.percentile(95),
                 f"{prefix}service_wait_p95": self._wait_hist.percentile(95)}

@@ -53,7 +53,12 @@ import numpy as np
 from repro.core.backoff import BackoffConfig
 from repro.core.metrics import FaultStats
 from repro.core.verify import verify_and_prefill
-from repro.obs import MetricsRegistry, get_tracer
+from repro.obs import (MetricsRegistry, get_decision_log, get_ledger,
+                       get_tracer)
+from repro.obs.alerts import (record_compile_gauges, record_device_memory,
+                              register_jit_entry)
+from repro.obs.ledger import (FRESH, PROMPT, REUSED_PREFIX, SOURCE_NGRAM,
+                              categorize_draft_block)
 from repro.engine.generate import GenerateConfig, positions_from_mask
 from repro.engine.sampling import sample, split_key
 from repro.models import model as M
@@ -206,6 +211,15 @@ def _decode_chunk(params, cfg: ModelConfig, gen: GenerateConfig, caches,
             "tokens": toks.T, "logprobs": lps.T}      # (B, steps)
 
 
+# §14 recompile sentinel: these module-level jit wrappers are the engine's
+# device programs — their cache sizes are the per-entry compile counts the
+# `recompile_steady_state` alert rule watches (obs/alerts.py)
+register_jit_entry("admit_vanilla", _admit_vanilla)
+register_jit_entry("admit_spec", _admit_spec)
+register_jit_entry("write_slots", _write_slots)
+register_jit_entry("decode_chunk", _decode_chunk)
+
+
 class SlotEngine:
     """Continuous-batching generation engine with spec-prefix admission."""
 
@@ -218,7 +232,7 @@ class SlotEngine:
                  deadline_steps: Optional[int] = None,
                  max_queue: Optional[int] = None, overflow: str = "reject",
                  retry_backoff: Optional[BackoffConfig] = None,
-                 tracer=None, obs_label: str = ""):
+                 tracer=None, ledger=None, obs_label: str = ""):
         assert M.supports_slot_serving(cfg), \
             "slot serving needs an attention-only trunk without modality " \
             "extras — use fixed-batch generate otherwise"
@@ -288,6 +302,10 @@ class SlotEngine:
         self.keys = np.zeros((B, 2), np.uint32)
         self._acc_tok: List[List[np.ndarray]] = [[] for _ in range(B)]
         self._acc_lp: List[List[np.ndarray]] = [[] for _ in range(B)]
+        # §14: whether a slot's pending carry token is a free bonus sample
+        # (previous drafted macro-step fully accepted).  Ledger bookkeeping
+        # only — deliberately NOT in state_dict (the ledger isn't either)
+        self._carry_bonus = np.zeros(B, bool)
         self._slot_n = np.zeros(B, np.int32)
         self._slot_draft_len = np.zeros(B, np.int32)
         self._slot_full_reuse = np.zeros(B, bool)
@@ -305,6 +323,12 @@ class SlotEngine:
         # clean path takes no extra clock reads or syncs (timestamps below
         # reuse the perf_counter values the time_* accounting already takes).
         self.tracer = tracer if tracer is not None else get_tracer()
+        # §14 provenance ledger + decision log: host-side sinks, inert by
+        # default (NULL_LEDGER / NULL_DECISION_LOG early-return everywhere),
+        # and never consulted inside jit'd code — the zero-overhead contract
+        # extends to byte-identical lowered HLO with or without them
+        self.ledger = ledger if ledger is not None else get_ledger()
+        self.decisions = get_decision_log()
         self.obs_label = str(obs_label)     # "shard<i>/" under a mesh server
         self._etrack = f"{self.obs_label}engine"
         self.metrics = MetricsRegistry()
@@ -451,6 +475,16 @@ class SlotEngine:
         fs.rejected = sch.rejected
         for k, v in fs.as_dict().items():
             reg.inc(k, v)
+        # §14 sentinels: per-entry jit compile counts and backend memory
+        # stats (the jit caches and device are process-global, so gauges
+        # with agg="max" merge shard registries without double-counting;
+        # memory gauges simply don't appear on backends that report None)
+        record_compile_gauges(reg)
+        record_device_memory(reg)
+        # §14 provenance tallies — the ledger is process-global too
+        if self.ledger.enabled:
+            for cname, nv in self.ledger.counts_dict().items():
+                reg.set(f"ledger.tokens_{cname}", float(nv), agg="max")
         # §11 latency histograms accumulated by the serving loop itself
         reg.merge(self.metrics)
         return reg
@@ -592,9 +626,22 @@ class SlotEngine:
         state vectors, telemetry, draft-source reset, activation.  Arrays
         are indexed by the request's position ``j`` in ``group``."""
         tr = self.tracer
+        led = self.ledger
         for j, (slot, req) in enumerate(group):
             nj = int(n[j])
             budget = max(0, req.max_new_tokens - nj)
+            if led.enabled:
+                # §14: (re)build the provenance plane.  The accepted prefix
+                # splits at the caller's draft boundary: up to base it is
+                # SPEC-RL reuse; past it, the request's own re-verified
+                # partial output from a previous occupancy (§10 retry)
+                base = max(0, int(req.base_draft_len))
+                led.begin_row(req.request_id, len(req.prompt),
+                              prompt_cat=self._prompt_category(req))
+                led.append(req.request_id, REUSED_PREFIX, min(nj, base))
+                led.append(req.request_id,
+                           led.retry_category(req.request_id),
+                           nj - min(nj, base))
             # §11 per-request admission telemetry: queue wait, TTFT
             # (queued → seed token, which admission just produced) and
             # the SPEC-RL reuse length.  Span endpoints are the
@@ -624,6 +671,7 @@ class SlotEngine:
             self.done[slot] = bool(fr[j]) or budget <= 0
             self._acc_tok[slot] = []
             self._acc_lp[slot] = []
+            self._carry_bonus[slot] = False   # seed sample is priced fresh
             self._slot_n[slot] = nj
             self._slot_draft_len[slot] = int(dn[j]) if self.spec_prefix \
                 else 0
@@ -640,6 +688,17 @@ class SlotEngine:
                 self._draft_source.reset(slot, ctx, req.ngram_corpus)
                 self._draft_ctrl.reset(slot)
             self.scheduler.activate(slot)
+
+    def _prompt_category(self, req: Request) -> int:
+        """Provenance of the prompt plane — the paged engine overrides this
+        for CoW followers whose prompt blocks are mapped, not prefilled
+        (§13 / §14)."""
+        return PROMPT
+
+    def _pool_pressure(self) -> float:
+        """KV backing-store pressure in [0, 1] — 0 for dense slabs (they
+        cannot run dry); the paged engine reports block-pool occupancy."""
+        return 0.0
 
     # ---------------------------------------------------------- decode loop
 
@@ -696,6 +755,13 @@ class SlotEngine:
             self._acc_tok[slot].append(toks[slot])
             self._acc_lp[slot].append(lps[slot])
             self.slot_age[slot] += steps
+        if self.ledger.enabled:
+            # §14: the chunk's valid emission per slot is the count delta
+            # (the accumulators above keep full chunk rows and trim at
+            # harvest; the ledger must not)
+            for slot, req in self.scheduler.active.items():
+                self.ledger.append(req.request_id, FRESH,
+                                   int(self.count[slot]) - int(count0[slot]))
         self.steps += steps
         self.scheduler.tick(busy, steps)
         # §10 quarantine: rows the in-chunk guard pulled out (their valid
@@ -720,6 +786,8 @@ class SlotEngine:
         busy = sum(1 for s in self.scheduler.active if not self.done[s])
         dt = np.zeros((B, K), np.int32)
         dl = np.zeros((B,), np.int32)
+        dec = self.decisions
+        feats: Dict[int, Dict[str, float]] = {}
         for slot in self.scheduler.active:
             if self.done[slot]:
                 continue
@@ -742,6 +810,22 @@ class SlotEngine:
                 continue
             dt[slot, :len(d)] = d
             dl[slot] = len(d)
+            if dec.enabled:
+                # §14 decision record, feature half: everything the length
+                # controller could have looked at, captured pre-step from
+                # host state the loop already holds.  surprisal is the
+                # single-sample entropy estimate -logp of the pending token
+                # (full logits never reach the host here, by design)
+                feats[slot] = {
+                    "surprisal": -float(self.cur_lp[slot]),
+                    "position": float(self.next_pos[slot]),
+                    "accept_ema": float(self._draft_ctrl.rate[slot]),
+                    "draft_k": float(len(d)),
+                    "draft_source": SOURCE_NGRAM,
+                    "queue_depth": float(len(self.scheduler.queue)),
+                    "slot_age": float(self.slot_age[slot]),
+                    "pool_pressure": self._pool_pressure(),
+                }
         # bucketed block width (drafting/step.py:block_width): the forward
         # narrows with the controller's draft lengths; u_width = draft_k
         # keeps per-request streams independent of co-batched buckets
@@ -790,6 +874,7 @@ class SlotEngine:
                                 accepted=int(accepted[slot]),
                                 emitted=int(emitted[slot]))
         quarantined: List[int] = []
+        led = self.ledger
         for slot in self.scheduler.active:
             req = self.scheduler.active[slot]
             m = int(emitted[slot])
@@ -804,6 +889,21 @@ class SlotEngine:
                 bad = ~np.isfinite(lps[slot, :m])
                 if bad.any():
                     poison = int(np.argmax(bad))
+            if led.enabled and m:
+                # §14: carry (fresh/bonus) + accepted-draft runs for this
+                # block, clamped to the kept (un-poisoned) emission
+                kept = min(poison, m)
+                for cat, nrun in categorize_draft_block(
+                        m, bool(self._carry_bonus[slot])):
+                    if kept <= 0:
+                        break
+                    led.append(req.request_id, cat, min(nrun, kept))
+                    kept -= nrun
+            # a fully-accepted proposal makes the NEXT carry token a free
+            # bonus sample (ledger bookkeeping only — never persisted,
+            # like the ledger itself)
+            self._carry_bonus[slot] = bool(
+                proposed[slot] > 0 and accepted[slot] == proposed[slot])
             if poison < m:
                 if poison:
                     self._acc_tok[slot].append(toks[slot, :poison])
@@ -817,6 +917,22 @@ class SlotEngine:
                 self._draft_source.extend(slot, toks[slot, :m])
             self._draft_ctrl.update(slot, int(proposed[slot]),
                                     int(accepted[slot]))
+        if dec.enabled and feats:
+            # §14 decision record, outcome half: join the pre-step features
+            # to what the verify actually returned (step_ms reuses the
+            # t0/t1 stamps time_decode already took)
+            step_ms = (t1 - t0) * 1e3
+            for slot, f in feats.items():
+                req = self.scheduler.active.get(slot)
+                if req is None:
+                    continue
+                prop, acc = int(proposed[slot]), int(accepted[slot])
+                m = int(emitted[slot])
+                dec.record(req.request_id, self.steps, f, {
+                    "proposed": prop, "accepted": acc,
+                    "bonus": 1.0 if (prop > 0 and acc == prop and m > acc)
+                    else 0.0,
+                    "emitted": m, "step_ms": step_ms})
         for slot in self.scheduler.active:
             self.slot_age[slot] += 1
         self.draft_stats.add_step(forwards=busy,
@@ -906,6 +1022,10 @@ class SlotEngine:
             if req.nan_strikes >= 2:
                 self._degrade_impl()        # rung 2: simpler decode kernel
         now = self._now()
+        # §14: remember WHY the slot was lost — the partial output that
+        # re-enters via spec-prefix verification on retry is attributed
+        # RETRY_STITCHED (timeout/stall) or QUARANTINE_CLAMPED, not reuse
+        self.ledger.note_retry(req.request_id, reason)
         self.scheduler.reclaim(slot, now=now, reason=reason)
         self._on_slot_freed(slot)
         tr = self.tracer
@@ -944,6 +1064,11 @@ class SlotEngine:
         else:
             toks2, lps2, orig = self._stitch(req, n1, plp, toks, lps)
             self.fault_stats.add(failed=1)
+            if self.ledger.enabled and self.ledger.has_row(req.request_id):
+                # conservation holds for failure responses too: the plane
+                # covers prompt + caller prefix + best-effort continuation
+                self.ledger.finalize(req.request_id,
+                                     len(req.prompt) + orig + len(toks2))
             self.responses[req.request_id] = Response(
                 request_id=req.request_id, tokens=toks2, logprobs=lps2,
                 length=len(toks2), finish_reason=reason, n_accepted=orig,
@@ -1026,6 +1151,12 @@ class SlotEngine:
             toks, lps, orig = self._stitch(req, int(self._slot_n[slot]),
                                            self._slot_prefix_lp[slot],
                                            toks, lps)
+            if self.ledger.enabled and self.ledger.has_row(req.request_id):
+                # §14 conservation invariant: the provenance plane exactly
+                # partitions prompt ⊕ caller prefix ⊕ continuation
+                self.ledger.finalize(req.request_id,
+                                     len(req.prompt) + orig + len(toks))
+                self.ledger.clear_retry(req.request_id)
             resp = Response(
                 request_id=req.request_id, tokens=toks, logprobs=lps,
                 length=len(toks),

@@ -45,7 +45,7 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
                      compact_impl: str = "auto",
                      slot_write_impl: str = "auto", draft=None, faults=None,
                      deadline_steps=None, max_queue=None,
-                     overflow: str = "reject", tracer=None,
+                     overflow: str = "reject", tracer=None, ledger=None,
                      kv_pool_blocks: Optional[int] = None):
     """One factory for both mesh regimes (the single dispatch point shared
     by serving/rl_adapter.py and launch/serve.py).
@@ -72,7 +72,8 @@ def make_slot_engine(params, cfg: ModelConfig, gen: GenerateConfig, *,
               chunk_steps=chunk_steps, verify_impl=verify_impl,
               compact_impl=compact_impl, slot_write_impl=slot_write_impl,
               draft=draft, faults=faults, deadline_steps=deadline_steps,
-              max_queue=max_queue, overflow=overflow, tracer=tracer)
+              max_queue=max_queue, overflow=overflow, tracer=tracer,
+              ledger=ledger)
     if cfg.cache_layout == "paged":
         kw["kv_pool_blocks"] = kv_pool_blocks
     if mesh is not None and data_size(mesh) > 1:
@@ -101,7 +102,7 @@ class MeshSlotServer:
                  compact_impl: str = "auto", slot_write_impl: str = "auto",
                  draft=None, faults=None, deadline_steps=None,
                  max_queue=None, overflow: str = "reject", tracer=None,
-                 kv_pool_blocks: Optional[int] = None):
+                 ledger=None, kv_pool_blocks: Optional[int] = None):
         self.submeshes = data_submeshes(mesh)
         D = len(self.submeshes)
         assert num_slots % D == 0 and num_slots >= D, \
@@ -126,7 +127,7 @@ class MeshSlotServer:
                slot_write_impl=slot_write_impl, draft=draft, mesh=sm,
                faults=plan, deadline_steps=deadline_steps,
                max_queue=max_queue, overflow=overflow,
-               tracer=tracer, obs_label=f"shard{i}/")
+               tracer=tracer, ledger=ledger, obs_label=f"shard{i}/")
             for i, (sm, plan) in enumerate(zip(self.submeshes, plans))]
         self._rr = 0                       # round-robin submission cursor
 

@@ -80,6 +80,10 @@ def _seed_from_logits(gen: GenerateConfig, seed_logits, keys):
 class PagedSlotEngine(SlotEngine):
     """SlotEngine over a paged block pool with CoW GRPO prompt sharing."""
 
+    # §14: transient flag raised around follower admission so the ledger
+    # tags those prompt planes SHARED_PROMPT_BLOCK instead of PROMPT
+    _admitting_followers = False
+
     def __init__(self, params, cfg: ModelConfig, gen: GenerateConfig, *,
                  kv_pool_blocks: Optional[int] = None, **kw):
         assert cfg.cache_layout == "paged", \
@@ -290,8 +294,16 @@ class PagedSlotEngine(SlotEngine):
         npos = np.zeros(B, np.int32)
         npos[:len(ok)] = [len(r.prompt) for _, r in ok]
         zi, zb = np.zeros(B, np.int32), np.zeros(B, bool)
-        self._apply_admission(ok, np.asarray(tok0), np.asarray(lp0), npos,
-                              np.asarray(nkeys), zi, zb, None, zi, t0, t1)
+        # §14: these rows' prompt planes are SHARED_PROMPT_BLOCK — the
+        # tokens exist in the KV pool because the leader prefilled them
+        # once, not because this admission paid for them
+        self._admitting_followers = True
+        try:
+            self._apply_admission(ok, np.asarray(tok0), np.asarray(lp0),
+                                  npos, np.asarray(nkeys), zi, zb, None, zi,
+                                  t0, t1)
+        finally:
+            self._admitting_followers = False
         self._harvest()
 
     def _set_device_tables(self, slots, rows, pos_rows=None) -> None:
@@ -427,7 +439,23 @@ class PagedSlotEngine(SlotEngine):
         reg.inc("paged_alloc_failures", a.alloc_failures)
         reg.inc("paged_shared_prompt_bytes_saved",
                 a.shared_prompt_bytes_saved)
+        # §14 watermarks: pool pressure for dashboards/alerts, plus the
+        # byte view of live/peak pool usage (block bytes are known exactly)
+        reg.set("paged_pool_pressure", self._pool_pressure())
+        reg.set("paged_bytes_in_use",
+                float(a.blocks_in_use) * self._block_bytes, agg="sum")
+        reg.set("paged_peak_bytes_in_use",
+                float(a.peak_blocks_in_use) * self._block_bytes, agg="sum")
         return reg
+
+    # ------------------------------------------------------ §14 obs hooks
+
+    def _prompt_category(self, req: Request) -> int:
+        from repro.obs.ledger import PROMPT, SHARED_PROMPT_BLOCK
+        return SHARED_PROMPT_BLOCK if self._admitting_followers else PROMPT
+
+    def _pool_pressure(self) -> float:
+        return 1.0 - float(self.allocator.free_blocks) / max(1, self.NB)
 
     # ------------------------------------------- exact kill-and-resume §10
 

@@ -1,0 +1,165 @@
+"""§14 zero-overhead contract for the token-provenance ledger.
+
+The ledger is host-side bookkeeping threaded around the jit'd programs,
+never through them: lowering with a live ledger configured yields
+byte-identical StableHLO, and every execution path — plain generate, the
+drafted spec rollout, the slot engine, the paged engine, the 2×2 mesh
+server — emits bit-identical tokens ledger on vs. off, while the on-runs
+genuinely record conserving provenance planes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import RolloutCache
+from repro.core.spec_rollout import SpecConfig, rollout
+from repro.drafting import DraftConfig
+from repro.engine.generate import GenerateConfig, generate
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.obs import configure, reset
+from repro.obs.ledger import TokenLedger
+from repro.serving import Request, SlotEngine
+
+B, P, N, V = 4, 8, 10, 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=V)
+    params = M.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(3, V, rng.randint(3, P + 1)).astype(np.int32)
+               for _ in range(B)]
+    keys = np.asarray(jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(5), i))(jnp.arange(B)))
+    return cfg, params, prompts, keys
+
+
+@pytest.fixture()
+def obs_state():
+    yield
+    reset()
+
+
+def _batch(cfg, prompts):
+    pm = np.zeros((len(prompts), P), np.int32)
+    mk = np.zeros((len(prompts), P), bool)
+    for i, p in enumerate(prompts):
+        pm[i, P - len(p):] = p
+        mk[i, P - len(p):] = True
+    return jnp.asarray(pm), jnp.asarray(mk)
+
+
+def test_hlo_identical_with_and_without_ledger(setup, obs_state):
+    cfg, params, prompts, keys = setup
+    gen = GenerateConfig(max_new_tokens=N)
+    prompt, mask = _batch(cfg, prompts)
+    key = jnp.asarray(keys)
+
+    reset()
+    base = generate.lower(params, cfg, gen, prompt, mask, key).as_text()
+    configure(ledger=TokenLedger(enabled=True))
+    on = generate.lower(params, cfg, gen, prompt, mask, key).as_text()
+    assert on == base
+
+
+def _run_rollout(cfg, params, prompts, drafting: bool):
+    gen = GenerateConfig(max_new_tokens=N)
+    draft = DraftConfig(kind="ngram", draft_k=2) if drafting \
+        else DraftConfig()
+    spec = SpecConfig(variant="spec", draft=draft)
+    prompt, mask = _batch(cfg, prompts)
+    cache = RolloutCache()
+    out = []
+    key = jax.random.PRNGKey(9)
+    for step in range(2):       # step 0 cold generate, step 1 verify+resume
+        key, sub = jax.random.split(key)
+        rb = rollout(params, cfg, gen, spec, prompt, mask,
+                     list(range(len(prompts))), cache, sub, step)
+        out.append((np.asarray(rb.response).tolist(),
+                    np.asarray(rb.length).tolist(),
+                    np.asarray(rb.behaviour_logprobs).tolist()))
+    return out
+
+
+@pytest.mark.parametrize("drafting", [False, True],
+                         ids=["rollout", "drafted_rollout"])
+def test_rollout_tokens_bit_identical(setup, obs_state, drafting):
+    cfg, params, prompts, keys = setup
+    reset()
+    base = _run_rollout(cfg, params, prompts, drafting)
+    led = TokenLedger(enabled=True)
+    configure(ledger=led)
+    on = _run_rollout(cfg, params, prompts, drafting)
+    assert on == base
+    # not vacuous: both steps' rows finalized with zero violations
+    assert led.finalized == 2 * B and led.violations == 0
+    c = led.counts_dict()
+    assert c["reused_prefix"] > 0       # step 1 really reused prefixes
+
+
+def _run_slots(cfg, params, prompts, keys, draft=None, paged=False):
+    gen = GenerateConfig(max_new_tokens=N)
+    if paged:
+        from repro.serving.paged_engine import PagedSlotEngine
+        cfgp = cfg.replace(cache_layout="paged", kv_block_size=4)
+        eng = PagedSlotEngine(params, cfgp, gen, num_slots=2,
+                              prompt_width=P, chunk_steps=4)
+    else:
+        eng = SlotEngine(params, cfg, gen, num_slots=2, prompt_width=P,
+                         chunk_steps=4, draft=draft)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(request_id=i, prompt=p, key=keys[i],
+                           max_new_tokens=N))
+    resps = eng.run()
+    return {i: (resps[i].tokens.tolist(), resps[i].length,
+                np.asarray(resps[i].logprobs).tolist()) for i in resps}
+
+
+@pytest.mark.parametrize("mode", ["slots", "drafted", "paged"])
+def test_slot_engine_tokens_bit_identical_ledger(setup, obs_state, mode):
+    cfg, params, prompts, keys = setup
+    draft = DraftConfig(kind="ngram", draft_k=4) if mode == "drafted" \
+        else None
+    paged = mode == "paged"
+    reset()
+    base = _run_slots(cfg, params, prompts, keys, draft=draft, paged=paged)
+    led = TokenLedger(enabled=True)
+    configure(ledger=led)
+    on = _run_slots(cfg, params, prompts, keys, draft=draft, paged=paged)
+    assert on == base
+    assert led.finalized == B and led.violations == 0
+    for rid, plane in led.rows().items():
+        assert (plane != 0).all()
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI obs lane sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_mesh_server_tokens_bit_identical_ledger(setup, obs_state):
+    from repro.distributed.mesh import MeshConfig
+    from repro.serving.mesh_server import MeshSlotServer
+    cfg, params, prompts, keys = setup
+    gen = GenerateConfig(max_new_tokens=N)
+    mesh = MeshConfig(data=2, model=2).build()
+
+    def run(ledger):
+        srv = MeshSlotServer(params, cfg, gen, mesh=mesh, num_slots=2,
+                             prompt_width=P, chunk_steps=4, ledger=ledger)
+        for i, p in enumerate(prompts):
+            srv.submit(Request(request_id=i, prompt=p, key=keys[i],
+                               max_new_tokens=N))
+        resps = srv.run()
+        return {i: (resps[i].tokens.tolist(), resps[i].length)
+                for i in resps}
+
+    reset()
+    base = run(None)
+    led = TokenLedger(enabled=True)
+    on = run(led)
+    assert on == base
+    assert led.finalized == B and led.violations == 0
